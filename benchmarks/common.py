@@ -1,0 +1,39 @@
+"""Shared helpers for the paper-experiment benchmarks."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results")
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    jax.block_until_ready(jax.tree.leaves(out)[0] if jax.tree.leaves(out)
+                          else out)
+    return out, (time.time() - t0) * 1e6
+
+
+def emit(name, us_per_call, derived):
+    """The bench contract: ``name,us_per_call,derived`` CSV on stdout."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def save_json(name, payload):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name + ".json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def loss_gap(curve_a, curve_b):
+    """Mean gap between two convergence curves (paper's 'gap' read-out)."""
+    n = min(len(curve_a), len(curve_b))
+    return float(np.mean(np.array(curve_a[:n]) - np.array(curve_b[:n])))

@@ -1,0 +1,56 @@
+"""Kernel microbenchmarks (interpret-mode on CPU: relative numbers only —
+the BlockSpec tiling is for TPU; derived column reports bytes or flops)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.metrics import csim_ref
+from repro.kernels import ops, ref
+
+
+def _time(fn, n=3):
+    fn()                                   # compile
+    t0 = time.time()
+    for _ in range(n):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n * 1e6
+
+
+def run(quick=False):
+    key = jax.random.PRNGKey(0)
+    B, S, H, KV, D = 1, 256, 4, 2, 64
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(key, (B, S, KV, D))
+    v = jax.random.normal(key, (B, S, KV, D))
+    us = _time(lambda: ops.flash_attention(q, k, v, bq=128, bk=128))
+    flops = 4 * B * S * S / 2 * H * D
+    emit("kernel_flash_attention_256", us, f"flops={flops:.2e}")
+    us_ref = _time(lambda: ref.attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3)))
+    emit("kernel_flash_attention_ref_256", us_ref, f"flops={flops:.2e}")
+
+    X = jax.random.normal(key, (512, 256))
+    us = _time(lambda: ops.csim(X, 4))
+    emit("kernel_csim_512x256_r4", us, f"bytes={X.size * 4 * 4:.2e}")
+    us_ref = _time(lambda: csim_ref(X, 4))
+    emit("kernel_csim_ref_512x256_r4", us_ref, f"bytes={X.size * 4 * 4:.2e}")
+
+    x = jax.random.normal(key, (1024, 512))
+    us = _time(lambda: ops.quantize_stochastic(x, key, bits=8)[0])
+    emit("kernel_quantize_1024x512", us, f"bytes={x.size * 4:.2e}")
+
+    g = jnp.ones((512,))
+    xr = jax.random.normal(key, (2048, 512))
+    us = _time(lambda: ops.rmsnorm(xr, g))
+    emit("kernel_rmsnorm_2048x512", us, f"bytes={xr.size * 4 * 2:.2e}")
+
+
+if __name__ == "__main__":
+    run()

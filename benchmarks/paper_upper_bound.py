@@ -1,0 +1,80 @@
+"""Paper Table II — scalability upper-bound experiment.
+
+Iterations-per-worker to reach a fixed epsilon, for m in {2,4,8,16,24},
+on each algorithm's best-performing dataset (Hogwild!: the 70%-density
+simulated set whose bound is reachable; mini-batch/ECD-PSGD: dense;
+DADM: 1/8-subsampled sparse, per §VII.E).  The upper bound is the m where
+cost stops decreasing (gain growth <= 0) — plus the theory-side predictions
+from the dataset characters.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.core import scalability as SC
+from repro.core.algorithms import (run_dadm, run_ecd_psgd, run_hogwild,
+                                   run_minibatch)
+from repro.data import synth
+
+MS = [2, 4, 8, 16, 24]
+
+
+def run(iters=3000, quick=False):
+    if quick:
+        iters = 1200
+    key = jax.random.PRNGKey(0)
+    ub = synth.make_upper_bound_dataset(key, n=4000, d=400, density=0.7)
+    dense = synth.make_higgs_like(key, n=4000, d=28)
+    sparse8 = synth.make_realsim_like(key, n=1000, d=300, density=0.05)
+    out = {"costs": {}, "upper_bounds": {}, "predicted": {}}
+    t0 = time.time()
+
+    def eps_for(runner, ds, kwname, frac=0.7, **kw):
+        """epsilon = the loss the 2-worker run reaches after `frac` of its
+        budget — reachable by all settings, discriminative between them."""
+        tr, te = ds.split(key=key)
+        probe = runner(tr, te, iters=iters, eval_every=iters // 20,
+                       **{kwname: 2}, **kw)
+        losses = np.array(probe["losses"])
+        eps = float(losses[int(len(losses) * frac)])
+        return (tr, te), eps
+
+    jobs = [
+        ("hogwild", run_hogwild, ub, "m", True, {"gamma": 0.05}),
+        ("minibatch", run_minibatch, dense, "batch_size", False, {}),
+        ("ecd_psgd", run_ecd_psgd, dense, "m", False, {}),
+        ("dadm", run_dadm, sparse8, "m", False, {}),
+    ]
+    for name, runner, ds, kwname, is_async, kw in jobs:
+        (tr, te), eps = eps_for(runner, ds, kwname, **kw)
+        costs = []
+        for m in MS:
+            r = runner(tr, te, iters=iters, eval_every=iters // 20,
+                       **{kwname: m}, **kw)
+            c = SC.cost_per_worker(r, eps, asynchronous=is_async)
+            costs.append(c if math.isfinite(c) else float(iters))
+        gg = SC.gain_growth_from_costs(costs)
+        bound = SC.measured_upper_bound(MS[:-1], gg)
+        out["costs"][name] = dict(zip(map(str, MS), costs))
+        out["upper_bounds"][name] = bound
+    out["predicted"]["hogwild_on_ub"] = SC.predict_hogwild_mmax(ub.X)
+    out["predicted"]["sync_on_dense"] = SC.predict_sync_mmax(dense.X)
+    out["predicted"]["dadm_on_sparse8"] = SC.predict_dadm_mmax(sparse8.X[:600])
+    us = (time.time() - t0) * 1e6 / (len(MS) * len(jobs))
+    save_json("paper_upper_bound", out)
+    for name in out["costs"]:
+        costs = list(out["costs"][name].values())
+        emit(f"tableII_{name}_cost_per_worker", us,
+             ";".join(f"m{m}={c:.0f}" for m, c in zip(MS, costs))
+             + f";bound_at_m={out['upper_bounds'][name]}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,90 @@
+"""Roofline table (EXPERIMENTS.md §Roofline): three terms per
+(arch x shape) on the single-pod mesh, from the dry-run JSON + the analytic
+FLOP model (HLO flops under-count scan trip counts; both are reported).
+
+Reads results/dryrun_1pod.json if present (produced by
+``python -m repro.launch.dryrun --all --json results/dryrun_1pod.json``);
+otherwise emits analytic-only terms.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit, save_json
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import ARCH_IDS, pair_supported
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256
+
+
+def run(dryrun_json="results/dryrun_1pod.json", quick=False):
+    from repro.launch.analytic import model_bytes, model_flops
+    from repro.launch.dryrun import arch_for_pair
+
+    hlo = {}
+    if os.path.exists(dryrun_json):
+        with open(dryrun_json) as f:
+            hlo = json.load(f)
+
+    table = {}
+    archs = ARCH_IDS[:3] if quick else ARCH_IDS
+    for arch in archs:
+        for shape_name, shape in INPUT_SHAPES.items():
+            ok, reason = pair_supported(arch, shape_name)
+            key = f"{arch}|{shape_name}"
+            if not ok:
+                table[key] = {"status": "skipped", "reason": reason}
+                continue
+            cfg = arch_for_pair(arch, shape_name)
+            mf = model_flops(cfg, shape)
+            mb = model_bytes(cfg, shape)
+            compute_t = mf["model_flops"] / (CHIPS * PEAK_FLOPS)
+            memory_t = mb / (CHIPS * HBM_BW)
+            row = {
+                "status": "ok",
+                "params_total": mf["params_total"],
+                "params_active": mf["params_active"],
+                "model_flops": mf["model_flops"],
+                "model_bytes_min": mb,
+                "compute_term_s": compute_t,
+                "memory_term_s_analytic": memory_t,
+            }
+            h = hlo.get(f"{arch}|{shape_name}|1pod_16x16", {})
+            if h.get("status") == "ok":
+                row.update({
+                    "hlo_flops_per_device": h["flops_per_device"],
+                    "hlo_bytes_per_device": h["bytes_per_device"],
+                    "collective_bytes_per_device":
+                        h["collective_bytes_per_device"],
+                    "memory_term_s": h["memory_term_s"],
+                    "collective_term_s": h["collective_term_s"],
+                    "temp_bytes": h.get("temp_size_in_bytes"),
+                    "arg_bytes": h.get("argument_size_in_bytes"),
+                    "useful_flops_ratio":
+                        mf["model_flops"] / CHIPS
+                        / max(h["flops_per_device"], 1.0),
+                })
+                terms = {"compute": compute_t,
+                         "memory": h["memory_term_s"],
+                         "collective": h["collective_term_s"]}
+                row["dominant_term"] = max(terms, key=terms.get)
+            else:
+                terms = {"compute": compute_t, "memory": memory_t}
+                row["dominant_term"] = max(terms, key=terms.get)
+            table[key] = row
+            emit(f"roofline_{arch}_{shape_name}", 0.0,
+                 f"compute={compute_t:.4f}s;"
+                 f"memory={row.get('memory_term_s', memory_t):.4f}s;"
+                 f"collective={row.get('collective_term_s', 0.0):.4f}s;"
+                 f"dominant={row['dominant_term']}")
+    save_json("roofline", table)
+    return table
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Benchmark harness — one entry per paper table/figure + kernels + roofline.
+
+``PYTHONPATH=src python -m benchmarks.run``          (quick mode, CI-friendly)
+``PYTHONPATH=src python -m benchmarks.run --full``   (paper-scale iterations)
+
+Prints ``name,us_per_call,derived`` CSV per the bench contract; full curves
+land in results/*.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale iteration counts")
+    ap.add_argument("--only", help="run a single benchmark module")
+    args, _ = ap.parse_known_args()
+    quick = not args.full
+
+    from benchmarks import (kernel_bench, paper_diversity, paper_ls,
+                            paper_upper_bound, paper_variance_sparsity,
+                            roofline)
+    benches = [
+        ("paper_variance_sparsity",                                # Figs 3-5
+         lambda: paper_variance_sparsity.run(quick=quick)),
+        ("paper_diversity", lambda: paper_diversity.run(quick=quick)),  # Fig 6
+        ("paper_ls", lambda: paper_ls.run(quick=quick)),           # Figs 7-10
+        ("paper_upper_bound",                                      # Table II
+         lambda: paper_upper_bound.run(quick=quick)),
+        ("kernel_bench", lambda: kernel_bench.run(quick=quick)),   # kernels/
+        ("roofline", lambda: roofline.run()),                      # §Roofline
+    ]
+    failed = 0
+    for name, fn in benches:
+        if args.only and args.only != name:
+            continue
+        print(f"# === {name} ===")
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failed += 1
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

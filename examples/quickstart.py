@@ -1,0 +1,48 @@
+"""Quickstart: the public API in ~60 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCH_IDS, get_arch
+from repro.core.advisor import ScalabilityAdvisor
+from repro.data import synth
+from repro.kernels import ops
+from repro.models import model as M
+
+key = jax.random.PRNGKey(0)
+
+# --- 1. the paper in three lines: dataset characters -> scalability advice
+ds = synth.make_realsim_like(key, n=1000, d=400, density=0.03)
+report = ScalabilityAdvisor().from_dataset(ds.X, tau_max=8, batch_size=8)
+print("dataset characters:", {k: round(float(report[k]), 4)
+                              for k in ("sparsity", "mean_feature_variance",
+                                        "diversity_ratio", "csim_async")})
+print("predicted Hogwild! m_max:", report["hogwild"]["predicted_m_max"])
+print("advice:", report["recommendation"])
+
+# --- 2. any of the 10 assigned architectures, reduced for CPU
+print("\narchs:", ", ".join(ARCH_IDS))
+cfg = get_arch("gemma3-1b").reduced()
+params = M.init_params(key, cfg)
+batch = {"tokens": jax.random.randint(key, (2, 32), 0, cfg.vocab_size),
+         "labels": jax.random.randint(key, (2, 32), 0, cfg.vocab_size)}
+loss, aux = M.loss_fn(params, cfg, batch)
+print(f"\n{cfg.name}: loss at init = {float(loss):.3f} "
+      f"(ln V = {float(jnp.log(cfg.vocab_size)):.3f})")
+
+# --- 3. one decode step against a KV cache
+state = M.init_decode_state(cfg, batch=2, max_len=64)
+logits, state = M.decode_step(params, cfg, batch["tokens"][:, :1], state)
+print("decode_step ->", logits.shape, "position:", int(state["position"]))
+
+# --- 4. the Pallas kernels (interpret mode on CPU, BlockSpec-tiled for TPU)
+q = jax.random.normal(key, (1, 128, 4, 64))
+k = jax.random.normal(key, (1, 128, 2, 64))
+v = jax.random.normal(key, (1, 128, 2, 64))
+out = ops.flash_attention(q, k, v, causal=True)
+print("flash_attention ->", out.shape)
+print("csim (paper Eq. 3) of the sparse dataset:",
+      float(ops.csim(ds.X[:256], 8)))

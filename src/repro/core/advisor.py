@@ -1,0 +1,102 @@
+"""ScalabilityAdvisor — the paper's contribution as a first-class framework
+feature: measure the dataset/gradient characters the trainer actually sees
+and report the predicted scalability envelope next to the measured curve.
+
+Production usage (any of the 10 archs):
+    advisor = ScalabilityAdvisor()
+    report = advisor.from_grads(per_shard_grads)    # gradient-level characters
+    report = advisor.from_dataset(X, ...)           # raw-dataset characters
+Both return {characters..., predicted m_max per strategy, recommendation}.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics as MX
+from repro.core import scalability as SC
+
+
+def _flatten(tree):
+    return jnp.concatenate([jnp.ravel(x).astype(jnp.float32)
+                            for x in jax.tree.leaves(tree)])
+
+
+class ScalabilityAdvisor:
+    def __init__(self, *, parallel_cost=1e-3, sparsity_tol=1e-8):
+        self.parallel_cost = parallel_cost
+        self.tol = sparsity_tol
+
+    # -- gradient-level characters (production tier) ------------------------
+    def grad_characters(self, per_shard_grads: List) -> Dict:
+        """per_shard_grads: list of grad pytrees, one per data shard (or per
+        microbatch) — the sample-difference proxies of §IV measured on the
+        gradients the optimizer actually consumes."""
+        flats = jnp.stack([_flatten(g) for g in per_shard_grads])   # (m, P)
+        gvar = float(jnp.mean(jnp.var(flats, axis=0)))
+        gmean_sq = float(jnp.mean(jnp.mean(flats, axis=0) ** 2))
+        sparsity = float(jnp.mean(jnp.abs(flats) <= self.tol))
+        # pairwise cosine similarity across shards = LS proxy
+        normed = flats / (jnp.linalg.norm(flats, axis=1, keepdims=True) + 1e-9)
+        cos = normed @ normed.T
+        m = flats.shape[0]
+        off = (jnp.sum(cos) - m) / (m * (m - 1) + 1e-9)
+        return {
+            "grad_variance": gvar,
+            "grad_noise_scale": gvar / (gmean_sq + 1e-12),
+            "grad_sparsity": sparsity,
+            "shard_cosine_similarity": float(off),
+        }
+
+    def from_grads(self, per_shard_grads: List) -> Dict:
+        ch = self.grad_characters(per_shard_grads)
+        # gradient-noise-scale plays sigma's role in the Thm 3 curve
+        sigma = ch["grad_noise_scale"] ** 0.5
+        m = 1
+        while m < 4096 and SC.predict_sync_gain_growth(m, sigma) > self.parallel_cost:
+            m += 1
+        ch["predicted_m_max_sync"] = m
+        # Hogwild staleness tolerance needs gradient sparsity
+        om = (1.0 - ch["grad_sparsity"])
+        ch["predicted_m_max_stale"] = max(
+            1, int((1.0 / (6.0 * max(om, 1e-6))) ** 0.5))
+        ch["recommendation"] = self._recommend(ch)
+        return ch
+
+    # -- dataset-level characters (faithful tier) ---------------------------
+    def from_dataset(self, X, *, tau_max=8, batch_size=8) -> Dict:
+        ch = MX.summarize(X, tau_max=tau_max, batch_size=batch_size)
+        ch["hogwild"] = SC.predict_hogwild_mmax(X)
+        ch["sync"] = SC.predict_sync_mmax(X, parallel_cost=self.parallel_cost)
+        ch["dadm"] = SC.predict_dadm_mmax(X, parallel_cost=self.parallel_cost)
+        ch["recommendation"] = self._recommend_dataset(ch)
+        return ch
+
+    def _recommend(self, ch: Dict) -> str:
+        if ch["grad_sparsity"] > 0.5:
+            return ("sparse gradients: async/stale exchange scales "
+                    f"(predicted m_max ~{ch['predicted_m_max_stale']}); "
+                    "sync batch scaling limited")
+        if ch["grad_noise_scale"] > 1.0:
+            return ("high gradient noise: sync batch scaling pays off up to "
+                    f"m~{ch['predicted_m_max_sync']}")
+        return ("low gradient noise: batch scaling saturates early "
+                f"(m_max~{ch['predicted_m_max_sync']}); consider gossip to "
+                "cut exchange cost instead of adding workers")
+
+    def _recommend_dataset(self, ch: Dict) -> str:
+        if ch["sparsity"] > 0.9:
+            return ("sparse + low-variance dataset: Hogwild!-class (predicted "
+                    f"m_max {ch['hogwild']['predicted_m_max']}); mini-batch "
+                    "gains will be minor (paper Fig 3b)")
+        if ch["mean_feature_variance"] > 1.0:
+            return ("dense high-variance dataset: mini-batch SGD/ECD-PSGD "
+                    f"class, m_max ~{ch['sync']['predicted_m_max']} "
+                    "(paper Fig 3a)")
+        if ch["diversity_ratio"] < 0.5:
+            return ("low diversity: DADM and all model-average methods "
+                    "saturate early (paper Fig 6); deduplicate or reshuffle")
+        return "balanced characters: any strategy; bound set by parallel cost"

@@ -1,0 +1,5 @@
+from repro.core.algorithms.lr import logloss, lr_grad, test_logloss
+from repro.core.algorithms.hogwild import run_hogwild
+from repro.core.algorithms.minibatch import run_minibatch
+from repro.core.algorithms.ecd_psgd import run_ecd_psgd
+from repro.core.algorithms.dadm import run_dadm

@@ -1,0 +1,67 @@
+"""Hogwild! (Alg 1) under the Perfect Computer Assumption.
+
+TPU/SPMD adaptation (DESIGN.md §6): the x86 lock-free shared-memory race is
+simulated *deterministically* — the gradient applied at server iteration j
+was computed against the model at iteration j - tau, with tau cycling over
+[1, m] (Thm 1: with m equal workers the lag is exactly the worker count).
+Convergence behaviour depends only on tau_max (Thm 2), so the insight
+survives the mechanism swap.
+
+Under the PCA, wall-time for m workers = t_single / m * n_iterations, so the
+figures report iterations (server) and iterations-per-worker (= cost).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.algorithms.lr import lr_grad, test_logloss, LAMBDA
+
+
+@functools.partial(jax.jit, static_argnames=("m", "iters", "eval_every"))
+def _run(X, y, Xte, yte, key, m, iters, gamma, lam, eval_every):
+    n, d = X.shape
+    order = jax.random.randint(key, (iters,), 0, n)
+
+    def step(carry, j):
+        x, hist = carry                       # hist: (m, d) past models
+        # stale model: the one from j - tau, tau = (j % m) + 1
+        tau = (j % m) + 1
+        x_stale = hist[(j - tau) % m]
+        i = order[j]
+        g = lr_grad(x_stale, X[i], y[i], lam)
+        x_new = x - gamma * g
+        hist = hist.at[j % m].set(x_new)
+        return (x_new, hist), None
+
+    x0 = jnp.zeros((d,))
+    hist0 = jnp.zeros((m, d))
+    n_evals = iters // eval_every
+
+    def outer(carry, e):
+        carry, _ = jax.lax.scan(
+            step, carry, e * eval_every + jnp.arange(eval_every))
+        return carry, test_logloss(carry[0], Xte, yte)
+
+    (x, _), losses = jax.lax.scan(outer, (x0, hist0), jnp.arange(n_evals))
+    return x, losses
+
+
+def run_hogwild(train, test, *, m=4, iters=4000, gamma=0.1, lam=LAMBDA,
+                eval_every=100, key=None):
+    """Returns dict with the convergence curve (server-iteration indexed)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    x, losses = _run(train.X, train.y, test.X, test.y, key,
+                     m, iters, gamma, lam, eval_every)
+    return {
+        "algorithm": "hogwild",
+        "m": m,
+        "iters": iters,
+        "eval_every": eval_every,
+        "losses": jax.device_get(losses),
+        "x": x,
+        "iters_per_worker": iters / m,
+    }

@@ -1,0 +1,42 @@
+"""The paper's model: L2-regularized logistic regression (Eq. 4).
+
+  argmin_x (1/n) sum_i Phi(label_i * xi_i . x) + (lambda/2) ||x||^2,
+  Phi(t) = log(1 + exp(-t)),  lambda = 0.01.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LAMBDA = 0.01
+
+
+def logloss_point(x, xi, yi):
+    t = yi * jnp.dot(xi, x)
+    return jnp.logaddexp(0.0, -t)
+
+
+def logloss(x, X, y, lam=LAMBDA):
+    t = y * (X @ x)
+    return jnp.mean(jnp.logaddexp(0.0, -t)) + 0.5 * lam * jnp.sum(x * x)
+
+
+def test_logloss(x, X, y):
+    """Paper figures plot *test* log loss (no regularizer)."""
+    t = y * (X @ x)
+    return jnp.mean(jnp.logaddexp(0.0, -t))
+
+
+def lr_grad(x, xi, yi, lam=LAMBDA):
+    """Per-sample (sub)gradient G_xi(x).  For sparse xi the data term is
+    supported on xi's nonzeros — the paper's Omega/delta/rho story."""
+    t = yi * jnp.dot(xi, x)
+    sig = jax.nn.sigmoid(-t)           # = 1 - 1/(1+e^-t)
+    return -sig * yi * xi + lam * x
+
+
+def lr_grad_batch(x, Xb, yb, lam=LAMBDA):
+    t = yb * (Xb @ x)
+    sig = jax.nn.sigmoid(-t)
+    return -(sig * yb) @ Xb / Xb.shape[0] + lam * x

@@ -1,0 +1,54 @@
+"""Mini-batch SGD (Alg 2) under the PCA.
+
+One worker computes one sample's gradient per server iteration; the server
+averages batch_size of them (all-gather in Alg 2 => the degree of parallelism
+IS the batch size, Fact 1).  Iteration count on the x-axis is *server*
+iterations, so larger batch = more parallel workers at the same x.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.algorithms.lr import lr_grad_batch, test_logloss, LAMBDA
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("batch_size", "iters", "eval_every"))
+def _run(X, y, Xte, yte, key, batch_size, iters, gamma, lam, eval_every):
+    n, d = X.shape
+    order = jax.random.randint(key, (iters, batch_size), 0, n)
+
+    def step(x, idx):
+        g = lr_grad_batch(x, X[idx], y[idx], lam)
+        return x - gamma * g, None
+
+    n_evals = iters // eval_every
+
+    def outer(x, e):
+        x, _ = jax.lax.scan(step, x, order[e * eval_every:(e + 1) * eval_every]
+                            if False else jax.lax.dynamic_slice_in_dim(
+                                order, e * eval_every, eval_every, axis=0))
+        return x, test_logloss(x, Xte, yte)
+
+    x, losses = jax.lax.scan(outer, jnp.zeros((d,)), jnp.arange(n_evals))
+    return x, losses
+
+
+def run_minibatch(train, test, *, batch_size=4, iters=4000, gamma=0.1,
+                  lam=LAMBDA, eval_every=100, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    x, losses = _run(train.X, train.y, test.X, test.y, key,
+                     batch_size, iters, gamma, lam, eval_every)
+    return {
+        "algorithm": "minibatch",
+        "m": batch_size,
+        "iters": iters,
+        "eval_every": eval_every,
+        "losses": jax.device_get(losses),
+        "x": x,
+        "iters_per_worker": iters,   # synchronous: every worker runs them all
+    }

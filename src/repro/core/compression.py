@@ -1,0 +1,35 @@
+"""Stochastic quantization — ECD-PSGD's compression operator C(.).
+
+Unbiased (E[dequantize(quantize(x))] = x) per Tang et al.'s requirement
+(Eq. 7: E(C(z) - z) = 0), implemented as stochastic rounding to ``bits``-bit
+integers with a per-tensor scale.  The Pallas TPU kernel in
+``repro.kernels.quantize`` implements the same operator; this jnp version is
+its oracle (ref.py re-exports it).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_stochastic(x, key, *, bits=8):
+    """x -> (q int8/int16, scale f32).  Stochastic rounding => unbiased."""
+    assert bits in (4, 8, 16)
+    qmax = 2.0 ** (bits - 1) - 1.0
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / qmax
+    u = jax.random.uniform(key, x.shape, jnp.float32)
+    q = jnp.floor(xf / scale + u)
+    q = jnp.clip(q, -qmax - 1, qmax)
+    dt = jnp.int8 if bits <= 8 else jnp.int16
+    return q.astype(dt), scale
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def quantize_error(x, key, *, bits=8):
+    q, s = quantize_stochastic(x, key, bits=bits)
+    return dequantize(q, s) - x.astype(jnp.float32)

@@ -1,0 +1,146 @@
+"""The paper's dataset-character indices (§IV).
+
+  feature_variance   per-feature variance over the dataset (§IV.B)
+  sparsity/density   fraction of zero elements (§IV.B)
+  diversity          number of distinct sample kinds (§IV.C)
+  C_sim_range        Eq. 3: windowed mean L0 distance along the sampling
+                     sequence
+  LS_A(D, S)         local similarity per algorithm class (§IV.A):
+                       async (Hogwild!): C_sim_{tau_max} over the sequence
+                       sync  (mini-batch/ECD-PSGD/DADM): the max over batches
+                       of the batch-internal similarity
+
+The Pallas kernel in repro.kernels.csim computes the Eq. 3 hot loop
+(O(n * range * d)); csim_ref here is its oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def feature_mean(X):
+    return jnp.mean(X, axis=0)
+
+
+def feature_variance(X):
+    """Per-feature variance (paper's 'feature variance_k')."""
+    return jnp.var(X, axis=0)
+
+
+def mean_feature_variance(X):
+    return float(jnp.mean(feature_variance(X)))
+
+
+def sparsity(X, tol=0.0):
+    """Fraction of zero elements."""
+    return float(jnp.mean(jnp.abs(X) <= tol))
+
+
+def density(X, tol=0.0):
+    return 1.0 - sparsity(X, tol)
+
+
+def diversity(X, *, decimals=6):
+    """Number of distinct sample kinds (exact row dedup)."""
+    Xr = np.asarray(jax.device_get(X))
+    Xr = np.round(Xr, decimals)
+    return int(np.unique(Xr, axis=0).shape[0])
+
+
+def diversity_ratio(X, **kw):
+    return diversity(X, **kw) / X.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# C_sim (Eq. 3) and LS_A
+# ---------------------------------------------------------------------------
+
+def l0_distance(a, b, tol=0.0):
+    """||a - b||_0 — number of differing coordinates."""
+    return jnp.sum((jnp.abs(a - b) > tol).astype(jnp.float32), axis=-1)
+
+
+def csim_ref(X, rng: int, tol=0.0):
+    """Eq. 3: C_sim_range = (1/n) sum_i (1/range) sum_{j=1..range}
+    ||xi_i - xi_{(i+j) % n}||_0   (pure-jnp oracle for the Pallas kernel)."""
+    n = X.shape[0]
+    total = jnp.zeros((), jnp.float32)
+    for j in range(1, rng + 1):
+        total = total + jnp.sum(l0_distance(X, jnp.roll(X, -j, axis=0), tol))
+    return float(total / (n * rng))
+
+
+def csim(X, rng: int, tol=0.0, use_kernel=False):
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return float(kops.csim(X, rng, tol))
+    return csim_ref(X, rng, tol)
+
+
+def batch_internal_similarity(Xb, tol=0.0):
+    """Mean pairwise L0 distance within a batch — tractable proxy for the
+    paper's 'max C_sim over orderings of the batch' (exact ordering search is
+    a TSP; the mean pairwise distance brackets it and preserves ranking)."""
+    b = Xb.shape[0]
+    diff = (jnp.abs(Xb[:, None, :] - Xb[None, :, :]) > tol)
+    d = jnp.sum(diff.astype(jnp.float32), axis=-1)
+    off = jnp.sum(d) - jnp.sum(jnp.diag(d))
+    return float(off / (b * (b - 1) + 1e-9))
+
+
+def ls_async(X, tau_max: int, tol=0.0):
+    """LS_A for asynchronous algorithms (Hogwild!): C_sim_{tau_max}."""
+    return csim(X, tau_max, tol)
+
+
+def ls_sync(X, batch_size: int, tol=0.0):
+    """LS_A for synchronous algorithms: max over batches of the batch's
+    internal similarity."""
+    n = (X.shape[0] // batch_size) * batch_size
+    batches = X[:n].reshape(-1, batch_size, X.shape[1])
+    vals = [batch_internal_similarity(batches[i])
+            for i in range(batches.shape[0])]
+    return float(max(vals))
+
+
+# ---------------------------------------------------------------------------
+# Hogwild! theorem-2 parameters (Omega, delta, rho) from the dataset
+# ---------------------------------------------------------------------------
+
+def hogwild_params(X, tol=0.0):
+    """Estimate (Omega, delta, rho) of Thm 2 for a *linear* model, where the
+    gradient sparsity pattern equals the sample sparsity pattern.
+
+      Omega: max #nonzeros in a sample
+      delta: max frequency of any feature being nonzero
+      rho:   max probability two random samples share a nonzero feature
+    """
+    nz = (jnp.abs(X) > tol).astype(jnp.float32)        # (n, d)
+    omega = float(jnp.max(jnp.sum(nz, axis=1)))
+    freq = jnp.mean(nz, axis=0)                        # (d,)
+    delta = float(jnp.max(freq))
+    # P(collision) <= sum_k freq_k^2  (union bound over features)
+    rho = float(jnp.minimum(jnp.sum(freq * freq), 1.0))
+    # omega_frac: support size as a fraction of d — the normalization that
+    # makes Thm 2's "Omega delta^{1/2} extremely small" dimensionless
+    return {"omega": omega, "omega_frac": omega / X.shape[1],
+            "delta": delta, "rho": rho}
+
+
+def summarize(X, *, tau_max=8, batch_size=8):
+    """All paper indices in one report."""
+    hw = hogwild_params(X)
+    return {
+        "n": int(X.shape[0]), "d": int(X.shape[1]),
+        "mean_feature_variance": mean_feature_variance(X),
+        "sparsity": sparsity(X),
+        "density": density(X),
+        "diversity": diversity(X),
+        "diversity_ratio": diversity_ratio(X),
+        "csim_async": ls_async(X, tau_max),
+        "csim_sync": ls_sync(X, batch_size),
+        **hw,
+    }

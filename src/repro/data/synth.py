@@ -1,0 +1,125 @@
+"""Synthetic datasets matching the paper's Table I constructions (offline
+container: the real real-sim / HIGGS downloads are reproduced as scaled
+generators with the same *characters* — sparsity, feature range, density).
+
+Labels everywhere follow the paper: label_i = sign(xi_i . ruler),
+ruler = (-1, 2, -3, 4, ..., (-1)^d * d).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def ruler(d):
+    r = jnp.arange(1, d + 1, dtype=jnp.float32)
+    return r * ((-1.0) ** r)
+
+
+def label_with_ruler(X):
+    y = jnp.sign(X @ ruler(X.shape[1]))
+    return jnp.where(y == 0, 1.0, y)
+
+
+@dataclasses.dataclass
+class Dataset:
+    X: jax.Array                 # (n, d)
+    y: jax.Array                 # (n,) in {-1, +1}
+    name: str = ""
+
+    def split(self, train_frac=0.7, valid_frac=0.2, key=None):
+        """Paper §VII.A: 70% train / 20% valid split."""
+        n = self.X.shape[0]
+        idx = (jax.random.permutation(key, n) if key is not None
+               else jnp.arange(n))
+        ntr = int(n * train_frac)
+        nva = int(n * valid_frac)
+        tr = Dataset(self.X[idx[:ntr]], self.y[idx[:ntr]], self.name + ":train")
+        va = Dataset(self.X[idx[ntr:ntr + nva]], self.y[idx[ntr:ntr + nva]],
+                     self.name + ":valid")
+        return tr, va
+
+
+def make_realsim_like(key, n=8000, d=2000, density=0.03, lo=0.0, hi=1.0):
+    """Sparse, small-feature-variance dataset (real-sim analogue, scaled to
+    the container: 20958 features / 72309 rows in the paper)."""
+    k1, k2 = jax.random.split(key)
+    mask = jax.random.bernoulli(k1, density, (n, d))
+    vals = jax.random.uniform(k2, (n, d), minval=lo, maxval=hi)
+    X = jnp.where(mask, vals, 0.0)
+    return Dataset(X, label_with_ruler(X), "realsim_like")
+
+
+def make_higgs_like(key, n=8000, d=28, lo=-4.0, hi=3.0):
+    """Dense, large-feature-variance dataset (HIGGS analogue)."""
+    X = jax.random.uniform(key, (n, d), minval=lo, maxval=hi)
+    return Dataset(X, label_with_ruler(X), "higgs_like")
+
+
+def make_ls_sequence(key, n=8000, d=28, mutate_frac=0.1, density=1.0,
+                     lo=-4.0, hi=3.0, first_sample=None):
+    """LS-controlled sampling sequence (§VII.A): sample t is sample t-1 with
+    ``mutate_frac`` of features re-drawn; small frac => small C_sim (similar
+    neighbors => LOW local distance), large frac => large C_sim.
+
+    For density < 1 the mutated sample is re-sparsified to the density of the
+    first sample (paper's sparse LS variants).
+    """
+    keys = jax.random.split(key, 4)
+    if first_sample is None:
+        first_sample = jax.random.uniform(keys[0], (d,), minval=lo, maxval=hi)
+        if density < 1.0:
+            m0 = jax.random.bernoulli(keys[1], density, (d,))
+            first_sample = jnp.where(m0, first_sample, 0.0)
+
+    n_mut = max(1, int(mutate_frac * d))
+
+    def step(x, k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        idx = jax.random.choice(k1, d, (n_mut,), replace=False)
+        newv = jax.random.uniform(k2, (n_mut,), minval=lo, maxval=hi)
+        x_new = x.at[idx].set(newv)
+        if density < 1.0:
+            keep = jax.random.bernoulli(k3, density, (d,))
+            x_new = jnp.where(keep, x_new, 0.0)
+        return x_new, x_new
+
+    _, X = jax.lax.scan(step, first_sample, jax.random.split(keys[2], n))
+    return Dataset(X, label_with_ruler(X), f"ls_seq_mut{mutate_frac}")
+
+
+def make_diversity_variants(base: Dataset):
+    """real_sim / real_sim2 / real_sim4 duplication construction (§VII.A):
+    cut into 4 equal parts; middle = {p1,p1,p2,p2}; low = {p1,p1,p1,p1}."""
+    n = (base.X.shape[0] // 4) * 4
+    X, y = base.X[:n], base.y[:n]
+    q = n // 4
+    p = [(X[i * q:(i + 1) * q], y[i * q:(i + 1) * q]) for i in range(4)]
+    high = Dataset(X, y, base.name + ":div_high")
+    mid = Dataset(jnp.concatenate([p[0][0], p[0][0], p[1][0], p[1][0]]),
+                  jnp.concatenate([p[0][1], p[0][1], p[1][1], p[1][1]]),
+                  base.name + ":div_mid")
+    low = Dataset(jnp.concatenate([p[0][0]] * 4),
+                  jnp.concatenate([p[0][1]] * 4),
+                  base.name + ":div_low")
+    return high, mid, low
+
+
+def make_upper_bound_dataset(key, n=6000, d=400, density=0.7, lo=0.0, hi=1.0):
+    """§VII.E: 70%-density simulated dataset whose Hogwild! upper bound is
+    reachable with few workers."""
+    k1, k2 = jax.random.split(key)
+    mask = jax.random.bernoulli(k1, density, (n, d))
+    vals = jax.random.uniform(k2, (n, d), minval=lo, maxval=hi)
+    X = jnp.where(mask, vals, 0.0)
+    return Dataset(X, label_with_ruler(X), "upper_bound_sim")
+
+
+def make_one_sample_dataset(key, n=1024, d=64):
+    """Example 12: dataset = one sample duplicated n times (diversity 1)."""
+    x = jax.random.uniform(key, (d,))
+    X = jnp.tile(x[None], (n, 1))
+    return Dataset(X, label_with_ruler(X), "one_sample")

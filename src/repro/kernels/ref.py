@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the per-kernel allclose tests
+sweep shapes/dtypes against these)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import dequantize as dequantize_ref           # noqa: F401
+from repro.core.compression import quantize_stochastic as quantize_ref   # noqa: F401
+from repro.core.metrics import csim_ref                                  # noqa: F401
+from repro.core.metrics import l0_distance
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B,H,S,D); k,v: (B,KV,T,D) -> (B,H,S,Dv).  Unchunked, f32."""
+    B, H, S, D = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=1)
+        v = jnp.repeat(v, H // KV, axis=1)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(D))
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask = mask & (cols <= rows)
+    if window:
+        mask = mask & (cols > rows - window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def l0_rows_ref(x, y, tol=0.0):
+    return l0_distance(x, y, tol)
+
+
+def rmsnorm_ref(x, gain, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * gain.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,102 @@
+"""Analytic FLOP/byte model per (arch x shape) — the roofline's numerator.
+
+Why analytic: XLA:CPU's ``cost_analysis`` counts each while-loop body ONCE
+(scan trip counts are not multiplied in), so HLO flops under-count layer-
+scanned models by ~num_layers.  EXPERIMENTS.md reports both numbers; the
+roofline terms use the analytic MODEL_FLOPS (6*N*D dense / 6*N_active*D MoE
++ exact attention terms), and the HLO numbers calibrate the per-iteration
+constant.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import model as M
+
+
+def param_counts(cfg: ArchConfig):
+    """(total_params, active_params) — active excludes non-routed experts."""
+    shapes = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    total = int(sum(np.prod(x.shape) for x in jax.tree.leaves(shapes)))
+    active = total
+    if cfg.moe is not None:
+        m = cfg.moe
+        # per MoE layer: routed expert params not in the top_k are inactive
+        expert_params = 3 * cfg.d_model * m.expert_d_ff
+        n_moe_layers = sum(cfg.is_moe_layer(i) for i in range(cfg.num_layers))
+        inactive = n_moe_layers * (m.num_experts - m.top_k) * expert_params
+        active = total - inactive
+    return total, active
+
+
+def _attn_layers(cfg: ArchConfig):
+    full, windowed = 0, 0
+    for i, spec in enumerate(M.layer_plan(cfg)):
+        if spec.kind in ("attn", "mla", "shared_attn"):
+            if spec.window:
+                windowed += 1
+            else:
+                full += 1
+    return full, windowed
+
+
+def model_flops(cfg: ArchConfig, shape: InputShape):
+    """Returns dict with matmul + attention FLOPs for the shape's mode."""
+    B, S = shape.global_batch, shape.seq_len
+    total, active = param_counts(cfg)
+    full_l, win_l = _attn_layers(cfg)
+    hd = cfg.resolved_head_dim
+    H = cfg.num_heads
+    w = cfg.sliding_window or 0
+
+    if shape.mode == "train":
+        tokens = B * S
+        mat = 6 * active * tokens
+        # causal attention: 2 matmuls * (S^2/2) * H * hd, fwd+bwd = x3
+        attn = full_l * 3 * 2 * 2 * B * (S * S / 2) * H * hd
+        attn += win_l * 3 * 2 * 2 * B * S * min(w, S) * H * hd
+    elif shape.mode == "prefill":
+        tokens = B * S
+        mat = 2 * active * tokens
+        attn = full_l * 2 * 2 * B * (S * S / 2) * H * hd
+        attn += win_l * 2 * 2 * B * S * min(w, S) * H * hd
+    else:  # decode: ONE token against a cache of S
+        tokens = B
+        mat = 2 * active * tokens
+        attn = full_l * 2 * 2 * B * S * H * hd
+        attn += win_l * 2 * 2 * B * min(w, S) * H * hd
+
+    return {"params_total": total, "params_active": active,
+            "matmul_flops": float(mat), "attention_flops": float(attn),
+            "model_flops": float(mat + attn), "tokens": tokens}
+
+
+def model_bytes(cfg: ArchConfig, shape: InputShape, *, opt_bytes=8,
+                param_bytes=2):
+    """Minimum HBM traffic per step: params read (+opt state r/w for train)
+    + KV cache traffic for decode."""
+    total, active = param_counts(cfg)
+    if shape.mode == "train":
+        # fwd+bwd params read twice + grad write + opt m/v read+write
+        b = total * (2 * param_bytes + param_bytes + 2 * opt_bytes)
+    elif shape.mode == "prefill":
+        b = total * param_bytes
+    else:
+        b = active * param_bytes
+        # KV cache read per decode step
+        kv = 0
+        for spec in M.layer_plan(cfg):
+            if spec.kind == "attn" or spec.kind == "shared_attn":
+                T = min(spec.window or shape.seq_len, shape.seq_len)
+                kv += (2 * shape.global_batch * T * cfg.num_kv_heads
+                       * cfg.resolved_head_dim * param_bytes)
+            elif spec.kind == "mla":
+                kv += (shape.global_batch * shape.seq_len *
+                       (cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim)
+                       * param_bytes)
+        b += kv
+    return float(b)

@@ -1,0 +1,223 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) on the
+production mesh(es); print memory/cost analysis and collective schedule.
+
+This is the proof that the distribution config is coherent without real
+hardware: a sharding mismatch, compile-time OOM, or unsupported collective
+fails loudly here.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --json dryrun.json
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import (ARCH_IDS, get_arch, pair_supported)
+from repro.launch import hlo_stats
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as S
+from repro.sharding import (batch_specs, data_axes, decode_state_specs,
+                            param_specs)
+
+# v5e hardware constants for the roofline terms (EXPERIMENTS.md §Roofline)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def arch_for_pair(arch_id, shape_name):
+    if arch_id == "qwen2.5-3b" and shape_name == "long_500k":
+        from repro.configs.qwen2_5_3b import SLIDING_VARIANT
+        return SLIDING_VARIANT
+    return get_arch(arch_id)
+
+
+def lower_pair(arch_id, shape_name, mesh, *, strategy="sync", seq_shard=True,
+               donate=True, microbatches=4):
+    """Returns (lowered, meta) for the right step kind for this shape."""
+    cfg = arch_for_pair(arch_id, shape_name)
+    shape = INPUT_SHAPES[shape_name]
+
+    if shape.mode == "train":
+        import jax.numpy as _jnp
+        from repro.train.steps import make_train_step, train_state_specs
+        step = make_train_step(cfg, mesh, strategy=strategy, remat=True,
+                               seq_shard=seq_shard, microbatches=microbatches,
+                               grad_accum_dtype=getattr(
+                                   _jnp, os.environ.get(
+                                       "REPRO_GRAD_ACCUM_DTYPE", "float32")),
+                               accum_mode=os.environ.get(
+                                   "REPRO_ACCUM_MODE", "explicit"))
+        state_shapes = S.train_state_shapes(cfg, strategy)
+        st_specs = train_state_specs(state_shapes, mesh)
+        b_specs = batch_specs(S.input_specs(cfg, shape), mesh)
+        jf = jax.jit(step,
+                     in_shardings=(_ns(mesh, st_specs), _ns(mesh, b_specs)),
+                     out_shardings=(_ns(mesh, st_specs), None),
+                     donate_argnums=(0,) if donate else ())
+        lowered = jf.lower(state_shapes, S.input_specs(cfg, shape))
+    elif shape.mode == "prefill":
+        from repro.serve.engine import make_prefill_step
+        from repro.sharding import act_constraint
+        step = make_prefill_step(
+            cfg, constrain=act_constraint(mesh, seq_shard=seq_shard))
+        p_shapes = S.param_shapes(cfg)
+        p_specs = param_specs(p_shapes, mesh)
+        b_specs = batch_specs(S.input_specs(cfg, shape), mesh)
+        jf = jax.jit(step,
+                     in_shardings=(_ns(mesh, p_specs), _ns(mesh, b_specs)))
+        lowered = jf.lower(p_shapes, S.input_specs(cfg, shape))
+    else:  # decode
+        from repro.serve.engine import make_serve_step
+        from repro.sharding import decode_act_constraint
+        c_dec = (decode_act_constraint(mesh)
+                 if os.environ.get("REPRO_DECODE_REPL", "1") == "1" else None)
+        step = make_serve_step(cfg, constrain=c_dec)
+        p_shapes = S.param_shapes(cfg)
+        p_specs = param_specs(p_shapes, mesh)
+        st_shapes = S.serve_state_shapes(cfg, shape)
+        shardable = shape.global_batch >= mesh.shape.get("data", 1)
+        st_specs = {"decode": decode_state_specs(
+            st_shapes["decode"], mesh, shardable_batch=shardable)}
+        if "enc_out" in st_shapes:
+            fd = data_axes(mesh)
+            st_specs["enc_out"] = P(fd if shardable else None, None, None)
+        tok_spec = batch_specs(S.decode_token_specs(cfg, shape), mesh,
+                               shardable_batch=shardable)
+        jf = jax.jit(step,
+                     in_shardings=(_ns(mesh, p_specs), _ns(mesh, st_specs),
+                                   _ns(mesh, tok_spec)),
+                     donate_argnums=(1,) if donate else ())
+        lowered = jf.lower(p_shapes, st_shapes,
+                           S.decode_token_specs(cfg, shape))
+    return lowered, {"cfg": cfg, "shape": shape}
+
+
+def analyze(lowered, mesh, verbose=True):
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    n_chips = mesh.devices.size
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = hlo_stats.collective_stats_trips(hlo)   # while-loop trip-aware
+    coll_bytes = sum(v["bytes"] for v in coll.values())
+
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    result = {
+        "chips": int(n_chips),
+        "compile_s": round(compile_s, 1),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": float(coll_bytes),
+        "collectives": {k: {"count": int(v["count"]),
+                            "bytes": float(v["bytes"])}
+                        for k, v in coll.items()},
+        "compute_term_s": flops_dev / PEAK_FLOPS,
+        "memory_term_s": bytes_dev / HBM_BW,
+        "collective_term_s": coll_bytes / ICI_BW,
+    }
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        try:
+            result[attr] = int(getattr(mem, attr))
+        except Exception:
+            pass
+    terms = {"compute": result["compute_term_s"],
+             "memory": result["memory_term_s"],
+             "collective": result["collective_term_s"]}
+    result["dominant_term"] = max(terms, key=terms.get)
+    if verbose:
+        print(f"  compiled in {compile_s:.1f}s on {n_chips} chips")
+        print(f"  per-device: flops={flops_dev:.3e} bytes={bytes_dev:.3e} "
+              f"collective_bytes={coll_bytes:.3e}")
+        print(f"  roofline terms (s): compute={terms['compute']:.4f} "
+              f"memory={terms['memory']:.4f} "
+              f"collective={terms['collective']:.4f} "
+              f"-> dominant: {result['dominant_term']}")
+        arg = result.get("argument_size_in_bytes", 0)
+        tmp = result.get("temp_size_in_bytes", 0)
+        print(f"  memory: args={arg/1e9:.2f}GB temp={tmp/1e9:.2f}GB")
+        if coll:
+            sched = ", ".join(f"{k} x{v['count']} ({v['bytes']/1e6:.1f}MB)"
+                              for k, v in sorted(coll.items()))
+            print(f"  collective schedule: {sched}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="also run the 2-pod (512 chip) mesh")
+    ap.add_argument("--strategy", default="sync", choices=["sync", "stale"])
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--json", help="write results to this path")
+    args = ap.parse_args()
+
+    pairs = ([(args.arch, args.shape)] if not args.all else
+             [(a, s) for a in ARCH_IDS for s in INPUT_SHAPES])
+    meshes = [("1pod_16x16", make_production_mesh(multi_pod=False))]
+    if args.multi_pod:
+        meshes.append(("2pod_2x16x16", make_production_mesh(multi_pod=True)))
+
+    results = {}
+    n_fail = 0
+    for mesh_name, mesh in meshes:
+        for arch_id, shape_name in pairs:
+            key = f"{arch_id}|{shape_name}|{mesh_name}"
+            ok, reason = pair_supported(arch_id, shape_name)
+            if not ok:
+                print(f"[SKIP] {key}: {reason}")
+                results[key] = {"status": "skipped", "reason": reason}
+                continue
+            print(f"[RUN ] {key} (strategy={args.strategy})")
+            try:
+                lowered, meta = lower_pair(
+                    arch_id, shape_name, mesh, strategy=args.strategy,
+                    seq_shard=not args.no_seq_shard,
+                    microbatches=args.microbatches)
+                res = analyze(lowered, mesh)
+                res["status"] = "ok"
+                results[key] = res
+            except Exception as e:
+                n_fail += 1
+                traceback.print_exc()
+                results[key] = {"status": "fail",
+                                "error": f"{type(e).__name__}: {e}"}
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.json}")
+    n_ok = sum(1 for r in results.values() if r.get("status") == "ok")
+    n_skip = sum(1 for r in results.values() if r.get("status") == "skipped")
+    print(f"== dry-run: {n_ok} ok, {n_skip} skipped, {n_fail} failed ==")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,173 @@
+"""Parse collective traffic + op stats out of (S)HLO text.
+
+``collective_bytes`` sums the *result* shape bytes of every collective op in
+the post-SPMD module — a per-device link-traffic proxy (ring all-gather moves
+~result bytes per device; all-reduce ~2x operand bytes; we report the raw sum
+per op kind so the roofline can weight them).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one shape token like bf16[256,4096,8192]
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Returns {op_kind: {"count": n, "bytes": total_result_bytes}}."""
+    stats: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.search(r"=\s*(\(?[a-z0-9]+\[.*?\)?)\s+"
+                      r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                      r"collective-permute)(-start|-done)?\(", line)
+        if not m:
+            continue
+        if m.group(3) == "-done":        # avoid double counting async pairs
+            continue
+        shapes_txt, kind = m.group(1), m.group(2)
+        total = sum(_shape_bytes(dt, dims)
+                    for dt, dims in _SHAPE_RE.findall(shapes_txt))
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += total
+    return dict(stats)
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    return int(sum(v["bytes"] for v in collective_stats(hlo_text).values()))
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\s{re.escape(opname)}\(", hlo_text))
+
+
+# ---------------------------------------------------------------------------
+# Trip-count-aware accounting: collectives inside while-loop bodies (scans
+# over layers / microbatches / CE chunks) execute trip_count times, but the
+# HLO text lists them once.  We reconstruct multipliers from the loop
+# structure: computation blocks, while ops (condition/body refs), and the
+# loop bound constant in each condition computation.
+# ---------------------------------------------------------------------------
+
+def _normalize(hlo_text):
+    """Join multi-line op statements so per-line regexes see whole ops."""
+    out = []
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        st = line.strip()
+        is_stmt = st.startswith("%") or st.startswith("ROOT") or \
+            st.startswith("ENTRY") or st == "}" or st.endswith("{")
+        if is_stmt or not out:
+            out.append(line)
+        else:
+            out[-1] += " " + st
+    return "\n".join(out)
+
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(\([^)]*\))?\s*"
+                       r"(\([^)]*\)\s*)?->.*{\s*$")
+_WHILE_RE = re.compile(
+    r"\bwhile\([^)]*\)[^\n]*?condition=%?([\w.\-]+)[^\n]*?body=%?([\w.\-]+)")
+_WHILE_RE2 = re.compile(
+    r"\bwhile\([^)]*\)[^\n]*?body=%?([\w.\-]+)[^\n]*?condition=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_CALL_RE = re.compile(r"\b(?:call|conditional|async-start)\([^\n]*?"
+                      r"(?:to_apply|called_computation)=%?([\w.\-]+)")
+
+
+def _split_computations(hlo_text):
+    """Returns {comp_name: body_text} and the entry computation name."""
+    text = _normalize(hlo_text)
+    comps, entry = {}, None
+    cur, buf = None, []
+    for line in text.splitlines():
+        st = line.strip()
+        if ("->" in st and st.endswith("{")
+                and (st.startswith("%") or st.startswith("ENTRY"))):
+            if cur is not None:
+                comps[cur] = "\n".join(buf)
+            name = st.split()[1] if st.startswith("ENTRY") else st.split()[0]
+            cur = name.lstrip("%").split("(")[0].rstrip()
+            buf = [line]
+            if st.startswith("ENTRY"):
+                entry = cur
+        elif cur is not None:
+            buf.append(line)
+    if cur is not None:
+        comps[cur] = "\n".join(buf)
+    return comps, entry
+
+
+def _lookup(comps, name):
+    if name in comps:
+        return comps[name]
+    for k in comps:                      # fuzzy: clone/suffix variants
+        if k.startswith(name) or name.startswith(k):
+            return comps[k]
+    return ""
+
+
+def _trip_count(cond_text):
+    consts = [int(x) for x in _CONST_RE.findall(cond_text)]
+    return max(consts) if consts else 1
+
+
+def _whiles_in(text):
+    pairs = [(c, b) for c, b in _WHILE_RE.findall(text)]
+    pairs += [(c, b) for b, c in _WHILE_RE2.findall(text)
+              if (c, b) not in pairs]
+    return pairs
+
+
+def collective_stats_trips(hlo_text):
+    """{op_kind: {count, bytes}} with while-loop trip multipliers applied."""
+    comps, entry = _split_computations(hlo_text)
+    if entry is None:
+        return collective_stats(hlo_text)
+    import sys
+    sys.setrecursionlimit(10000)
+
+    def stats_of(comp_name, mult, acc, seen, via_lookup=True):
+        text = _lookup(comps, comp_name) if via_lookup else comp_name
+        local = collective_stats(text)
+        for k, v in local.items():
+            acc[k]["count"] += v["count"] * mult
+            acc[k]["bytes"] += v["bytes"] * mult
+        for cond, body in _whiles_in(text):
+            tc = _trip_count(_lookup(comps, cond))
+            if body not in seen:
+                stats_of(body, mult * tc, acc, seen | {body})
+        for callee in _CALL_RE.findall(text):
+            if callee not in seen:
+                stats_of(callee, mult, acc, seen | {callee})
+        return acc
+
+    acc = defaultdict(lambda: {"count": 0, "bytes": 0})
+    stats_of(entry, 1, acc, frozenset())
+    return dict(acc)
+
+
+def total_collective_bytes_trips(hlo_text):
+    return int(sum(v["bytes"]
+                   for v in collective_stats_trips(hlo_text).values()))

@@ -1,0 +1,56 @@
+"""ShapeDtypeStruct stand-ins for every model input / state — the dry-run
+contract: weak-type-correct, shardable, zero device allocation."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import model as M
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape):
+    """Inputs for train/prefill.  Modality frontends are the stated stub:
+    audio provides frame embeddings, VLM provides patch embeddings."""
+    B, S = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    dtype = jnp.dtype(cfg.dtype)
+    batch = {"tokens": sd((B, S), jnp.int32)}
+    if shape.mode == "train":
+        batch["labels"] = sd((B, S), jnp.int32)
+    if cfg.vision_tokens:
+        batch["vision_embeds"] = sd((B, cfg.vision_tokens, cfg.d_model), dtype)
+        batch["positions"] = sd((3, B, S), jnp.int32)     # M-RoPE t/h/w
+    if cfg.encoder_layers:
+        batch["frames"] = sd((B, cfg.encoder_seq, cfg.d_model), dtype)
+    return batch
+
+
+def param_shapes(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def train_state_shapes(cfg: ArchConfig, strategy="sync"):
+    from repro.train.steps import init_train_state
+    return jax.eval_shape(
+        lambda: init_train_state(jax.random.PRNGKey(0), cfg,
+                                 strategy=strategy))
+
+
+def decode_state_shapes(cfg: ArchConfig, shape: InputShape):
+    return jax.eval_shape(
+        lambda: M.init_decode_state(cfg, shape.global_batch, shape.seq_len,
+                                    jnp.dtype(cfg.dtype)))
+
+
+def serve_state_shapes(cfg: ArchConfig, shape: InputShape):
+    from repro.serve.engine import init_serve_state
+    return jax.eval_shape(
+        lambda: init_serve_state(cfg, shape.global_batch, shape.seq_len,
+                                 jnp.dtype(cfg.dtype)))
+
+
+def decode_token_specs(cfg: ArchConfig, shape: InputShape):
+    return jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)

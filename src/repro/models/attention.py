@@ -1,0 +1,354 @@
+"""Attention blocks: GQA (with optional sliding window), MLA (DeepSeek-V2),
+cross-attention (whisper), plus their decode-time KV caches.
+
+Reference implementations are pure jnp (the Pallas flash kernel in
+``repro.kernels`` is the TPU hot-spot path and is validated against these).
+
+Shapes: hidden (B, S, d_model); caches (B, T, kv_heads, head_dim).
+MLA caches the *compressed* latent (B, T, kv_lora) + shared rope key
+(B, T, rope_dim) and uses the absorbed-matmul decode path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import _dense_init, apply_mrope, apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Param init
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg: ArchConfig, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, h * hd), dtype),
+        "wk": _dense_init(ks[1], (d, kv * hd), dtype),
+        "wv": _dense_init(ks[2], (d, kv * hd), dtype),
+        "wo": _dense_init(ks[3], (h * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    return p
+
+
+def init_mla(key, cfg: ArchConfig, dtype):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq_a": _dense_init(ks[0], (d, m.q_lora_rank), dtype),
+        "wq_b": _dense_init(ks[1], (m.q_lora_rank, h * qk_head), dtype),
+        "wkv_a": _dense_init(ks[2], (d, m.kv_lora_rank), dtype),
+        "wk_rope": _dense_init(ks[3], (d, m.qk_rope_head_dim), dtype),
+        "wk_b": _dense_init(ks[4], (m.kv_lora_rank, h * m.qk_nope_head_dim), dtype),
+        "wv_b": _dense_init(ks[5], (m.kv_lora_rank, h * m.v_head_dim), dtype),
+        "wo": _dense_init(ks[6], (h * m.v_head_dim, d), dtype),
+    }
+
+
+def init_cross_attn(key, cfg: ArchConfig, dtype):
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(ks[0], (d, h * hd), dtype),
+        "wk": _dense_init(ks[1], (d, h * hd), dtype),
+        "wv": _dense_init(ks[2], (d, h * hd), dtype),
+        "wo": _dense_init(ks[3], (h * hd, d), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Masks + core attention math
+# ---------------------------------------------------------------------------
+
+def causal_mask(q_len, kv_len, q_offset=0, window=0):
+    """(q_len, kv_len) bool mask.  window=0 -> plain causal."""
+    qi = jnp.arange(q_len)[:, None] + q_offset
+    kj = jnp.arange(kv_len)[None, :]
+    m = kj <= qi
+    if window:
+        m = m & (kj > qi - window)
+    return m
+
+
+Q_CHUNK = 1024          # q-row tiling threshold for long sequences
+
+
+def _attn_rows(q, k, v, mask, D):
+    """One q-row-block of attention.  q: (B,c,H,D); k,v: (B,T,H,Dv);
+    mask broadcastable to (B,1,c,T)."""
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(D))
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", w.astype(v.dtype), v)
+
+
+def gqa_attention(q, k, v, mask=None):
+    """q: (B,S,H,D); k,v: (B,T,KV,D); mask broadcastable to (B,1,S,T).
+
+    Head-major formulation: KV heads are repeated up to H so every einsum
+    carries a clean head axis — SPMD shards it on 'model' without the
+    involuntary full rematerializations the (kv, group) split provokes.
+
+    Decode (S == 1) keeps the grouped form (no KV repeat — repeating a 32k
+    cache 8x would be a 9x HBM hit).  Long sequences (S > Q_CHUNK) tile over
+    q rows so live score buffers stay (B, H, Q_CHUNK, T) — the jnp analogue
+    of the Pallas flash kernel's row blocking.
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    if S == 1 and KV != H:
+        G = H // KV
+        qg = q.reshape(B, KV, G, D)
+        scores = jnp.einsum("bkgd,btkd->bkgt", qg, k).astype(jnp.float32)
+        scores = scores / jnp.sqrt(jnp.float32(D))
+        if mask is not None:           # (B,1,1,T) -> (B,1,1,T) broadcast
+            scores = jnp.where(mask[:, :, 0, None, :] if mask.ndim == 4
+                               else mask, scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgt,btkd->bkgd", w.astype(v.dtype), v)
+        return out.reshape(B, 1, H, v.shape[-1])
+
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    if mask is not None and mask.ndim == 3:
+        mask = mask[:, :, None]
+
+    if S <= Q_CHUNK or S % Q_CHUNK:
+        out = _attn_rows(q, k, v, mask, D)
+        return out.reshape(B, S, H, v.shape[-1])
+
+    nc = S // Q_CHUNK
+
+    def body(_, i):
+        qc = jax.lax.dynamic_slice_in_dim(q, i * Q_CHUNK, Q_CHUNK, axis=1)
+        mc = (jax.lax.dynamic_slice_in_dim(mask, i * Q_CHUNK,
+                                           Q_CHUNK, axis=2)
+              if mask is not None and mask.shape[2] == S else mask)
+        return _, _attn_rows(qc, k, v, mc, D)
+
+    _, chunks = jax.lax.scan(body, None, jnp.arange(nc))
+    out = chunks.transpose(1, 0, 2, 3, 4).reshape(B, S, H, v.shape[-1])
+    return out
+
+
+def _rope_any(cfg, x, positions):
+    if cfg.rope_theta == 0.0:
+        return x            # learned absolute positions (whisper)
+    if cfg.rope_kind == "mrope":
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# GQA forward (train/prefill) and decode
+# ---------------------------------------------------------------------------
+
+def _project_qkv(p, cfg, x):
+    B, S, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"])
+    k = jnp.einsum("bsd,de->bse", x, p["wk"])
+    v = jnp.einsum("bsd,de->bse", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (q.reshape(B, S, h, hd), k.reshape(B, S, kv, hd),
+            v.reshape(B, S, kv, hd))
+
+
+def gqa_forward(p, cfg: ArchConfig, x, positions, *, window=0,
+                attention_impl="reference"):
+    """Full-sequence causal attention (training / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x)
+    q = _rope_any(cfg, q, positions)
+    k = _rope_any(cfg, k, positions)
+    if attention_impl == "pallas":
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(q, k, v, causal=True, window=window)
+    else:
+        mask = causal_mask(S, S, window=window)[None, None]
+        out = gqa_attention(q, k, v, mask)
+    out = out.reshape(B, S, -1)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"])
+
+
+@dataclasses.dataclass
+class KVCache:
+    k: jax.Array            # (B, T, KV, D) — T = max_len or window
+    v: jax.Array
+    pos: jax.Array          # (B, T) int32 absolute position per slot (-1 empty)
+    index: jax.Array        # scalar int32: next write slot (ring for window)
+    window: int = 0         # 0 -> full cache
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.pos, self.index), (self.window,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, window=aux[0])
+
+
+jax.tree_util.register_dataclass(
+    KVCache, data_fields=("k", "v", "pos", "index"), meta_fields=("window",))
+
+
+def init_kv_cache(cfg: ArchConfig, batch, max_len, dtype, window=0):
+    T = window if window else max_len
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return KVCache(
+        k=jnp.zeros((batch, T, kv, hd), dtype),
+        v=jnp.zeros((batch, T, kv, hd), dtype),
+        pos=jnp.full((batch, T), -1, jnp.int32),
+        index=jnp.zeros((), jnp.int32),
+        window=window,
+    )
+
+
+def gqa_decode(p, cfg: ArchConfig, x, cache: KVCache, position):
+    """One-token decode.  x: (B, 1, d); position: scalar int32 (absolute)."""
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(p, cfg, x)
+    pos_b = jnp.broadcast_to(position[None, None], (B, 1))
+    if cfg.rope_kind == "mrope":
+        pos3 = jnp.broadcast_to(position[None, None, None], (3, B, 1))
+        q = _rope_any(cfg, q, pos3)
+        k_new = _rope_any(cfg, k_new, pos3)
+    else:
+        q = _rope_any(cfg, q, pos_b)
+        k_new = _rope_any(cfg, k_new, pos_b)
+    slot = cache.index % cache.k.shape[1] if cache.window else cache.index
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=1)
+    pos = jax.lax.dynamic_update_slice_in_dim(
+        cache.pos, jnp.broadcast_to(position[None, None], (B, 1)).astype(jnp.int32),
+        slot, axis=1)
+    valid = pos >= 0                                  # (B, T)
+    if cache.window:
+        valid = valid & (pos > position - cache.window)
+    mask = valid[:, None, None, :]                    # (B,1,1,T)
+    out = gqa_attention(q, k, v, mask)                # (B,1,H,D)
+    out = out.reshape(B, 1, -1)
+    y = jnp.einsum("bse,ed->bsd", out, p["wo"])
+    new_cache = KVCache(k=k, v=v, pos=pos, index=cache.index + 1,
+                        window=cache.window)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MLACache:
+    c_kv: jax.Array          # (B, T, kv_lora)
+    k_rope: jax.Array        # (B, T, rope_dim)
+    index: jax.Array
+
+    def tree_flatten(self):
+        return (self.c_kv, self.k_rope, self.index), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_dataclass(
+    MLACache, data_fields=("c_kv", "k_rope", "index"), meta_fields=())
+
+
+def init_mla_cache(cfg: ArchConfig, batch, max_len, dtype):
+    m = cfg.mla
+    return MLACache(
+        c_kv=jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+        index=jnp.zeros((), jnp.int32),
+    )
+
+
+def _mla_q(p, cfg, x, positions):
+    m, B, S, h = cfg.mla, x.shape[0], x.shape[1], cfg.num_heads
+    cq = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
+    q = jnp.einsum("bsr,re->bse", cq, p["wq_b"]).reshape(
+        B, S, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_forward(p, cfg: ArchConfig, x, positions):
+    """Training/prefill MLA: decompress keys/values (flash-friendly form)."""
+    m, B, S, h = cfg.mla, x.shape[0], x.shape[1], cfg.num_heads
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    k_rope = jnp.einsum("bsd,dr->bsr", x, p["wk_rope"])   # shared across heads
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    k_nope = jnp.einsum("bsr,re->bse", c_kv, p["wk_b"]).reshape(
+        B, S, h, m.qk_nope_head_dim)
+    v = jnp.einsum("bsr,re->bse", c_kv, p["wv_b"]).reshape(B, S, h, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(
+        k_rope, (B, S, h, m.qk_rope_head_dim))], axis=-1)
+    mask = causal_mask(S, S)[None, None]
+    out = gqa_attention(q, k, v, mask)                    # MHA: KV == H
+    return jnp.einsum("bse,ed->bsd", out.reshape(B, S, -1), p["wo"])
+
+
+def mla_decode(p, cfg: ArchConfig, x, cache: MLACache, position):
+    """Absorbed-matmul decode: scores against the *compressed* cache."""
+    m, B, h = cfg.mla, x.shape[0], cfg.num_heads
+    pos_b = jnp.broadcast_to(position[None, None], (B, 1))
+    q_nope, q_rope = _mla_q(p, cfg, x, pos_b)             # (B,1,h,·)
+    c_new = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    kr_new = apply_rope(
+        jnp.einsum("bsd,dr->bsr", x, p["wk_rope"])[:, :, None, :],
+        pos_b, cfg.rope_theta)[:, :, 0, :]
+    c_kv = jax.lax.dynamic_update_slice_in_dim(cache.c_kv, c_new, cache.index, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache.k_rope, kr_new, cache.index, axis=1)
+    # absorb W_uk into q: (B,1,h,nope) x (r, h*nope) -> (B,1,h,r)
+    wk_b = p["wk_b"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, wk_b)
+    scores = (jnp.einsum("bshr,btr->bhst", q_lat, c_kv)
+              + jnp.einsum("bshn,btn->bhst", q_rope, k_rope)
+              ).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(m.qk_nope_head_dim + m.qk_rope_head_dim))
+    T = c_kv.shape[1]
+    valid = jnp.arange(T)[None, None, None, :] <= cache.index
+    scores = jnp.where(valid, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    lat = jnp.einsum("bhst,btr->bshr", w, c_kv)           # (B,1,h,r)
+    wv_b = p["wv_b"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bshr,rhv->bshv", lat, wv_b)
+    y = jnp.einsum("bse,ed->bsd", out.reshape(B, 1, -1), p["wo"])
+    return y, MLACache(c_kv=c_kv, k_rope=k_rope, index=cache.index + 1)
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder -> encoder output)
+# ---------------------------------------------------------------------------
+
+def cross_attn_forward(p, cfg: ArchConfig, x, enc_out):
+    B, S, _ = x.shape
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    Te = enc_out.shape[1]
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(B, S, h, hd)
+    k = jnp.einsum("btd,de->bte", enc_out, p["wk"]).reshape(B, Te, h, hd)
+    v = jnp.einsum("btd,de->bte", enc_out, p["wv"]).reshape(B, Te, h, hd)
+    out = gqa_attention(q, k, v, mask=None)
+    return jnp.einsum("bse,ed->bsd", out.reshape(B, S, -1), p["wo"])

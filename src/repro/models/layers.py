@@ -1,0 +1,139 @@
+"""Shared building blocks: norms, MLPs, rotary embeddings (standard + M-RoPE).
+
+Parameters are plain pytrees (dicts of jnp arrays).  Every ``init_*`` takes a
+PRNG key and returns the param subtree; every ``apply_*`` is a pure function.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def apply_rmsnorm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def apply_layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def init_norm(kind, d, dtype):
+    return init_rmsnorm(d, dtype) if kind == "rmsnorm" else init_layernorm(d, dtype)
+
+
+def apply_norm(kind, p, x):
+    return apply_rmsnorm(p, x) if kind == "rmsnorm" else apply_layernorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model, d_ff, kind, dtype):
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "wi_gate": _dense_init(ks[0], (d_model, d_ff), dtype),
+            "wi_up": _dense_init(ks[1], (d_model, d_ff), dtype),
+            "wo": _dense_init(ks[2], (d_ff, d_model), dtype),
+        }
+    return {  # gelu
+        "wi": _dense_init(ks[0], (d_model, d_ff), dtype),
+        "bi": jnp.zeros((d_ff,), dtype),
+        "wo": _dense_init(ks[1], (d_ff, d_model), dtype),
+        "bo": jnp.zeros((d_model,), dtype),
+    }
+
+
+def apply_mlp(p, x, kind):
+    if kind == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, p["wi_gate"])
+        u = jnp.einsum("...d,df->...f", x, p["wi_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        return jnp.einsum("...f,fd->...d", h, p["wo"])
+    h = jnp.einsum("...d,df->...f", x, p["wi"]) + p["bi"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["wo"]) + p["bo"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    # half-dim inverse frequencies
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv   # (..., seq, hd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., None, :]                           # broadcast over heads
+    cos = cos[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta, sections: Sequence[int]):
+    """Qwen2-VL multimodal RoPE.
+
+    x: (batch, seq, heads, head_dim); positions3: (3, batch, seq) —
+    temporal/height/width position ids.  ``sections`` splits head_dim/2
+    frequency slots among the three axes.
+    """
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # (hd/2,)
+    # per-frequency-slot axis selector
+    sec = jnp.concatenate([
+        jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)
+    ])
+    assert sec.shape[0] == hd // 2, (sec.shape, hd)
+    # gather the right positional stream per slot: (batch, seq, hd/2)
+    pos3t = positions3.transpose(1, 2, 0).astype(jnp.float32)   # (b, s, 3)
+    pos = pos3t[:, :, sec]                                      # (b, s, hd/2)
+    ang = pos * inv[None, None, :]
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def init_embedding(key, vocab, d_model, dtype):
+    return {"table": _dense_init(key, (vocab, d_model), dtype, scale=0.02)}
+
+
+def init_learned_positions(key, max_len, d_model, dtype):
+    return {"pos": _dense_init(key, (max_len, d_model), dtype, scale=0.02)}

@@ -1,0 +1,564 @@
+"""Unified CausalLM covering all assigned families.
+
+A model is a sequence of *segments*: maximal runs of identical layer specs
+(run-length encoding of the per-layer block plan).  Each segment's params are
+stacked on a leading axis and executed with ``jax.lax.scan`` — this keeps the
+HLO size O(#distinct block kinds), not O(num_layers), which is what makes the
+80-layer dry-runs compile quickly on 512 virtual devices.
+
+Entry points:
+  init_params(key, cfg)                         -> param pytree
+  forward(params, cfg, batch, ...)              -> logits (train / prefill)
+  init_decode_state(cfg, batch, max_len, dtype) -> per-layer caches
+  decode_step(params, cfg, tokens, state)       -> (logits, new state)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_mlp, apply_norm, init_embedding,
+                                 init_learned_positions, init_mlp, init_norm,
+                                 _dense_init)
+from repro.models.moe import init_moe, moe_forward
+
+
+# ---------------------------------------------------------------------------
+# Layer plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    kind: str                 # attn | mla | mamba2 | mlstm | slstm | shared_attn
+    moe: bool = False
+    window: int = 0           # sliding window for attn (0 = full)
+    cross: bool = False       # whisper decoder: add cross-attention
+
+
+def layer_plan(cfg: ArchConfig) -> List[LayerSpec]:
+    specs = []
+    for i in range(cfg.num_layers):
+        kind = cfg.block_kind(i)
+        if kind == "attn" and cfg.attention == "mla":
+            kind = "mla"
+        window = 0
+        if kind == "attn" and cfg.sliding_window and not cfg.is_global_attn_layer(i):
+            window = cfg.sliding_window
+        specs.append(LayerSpec(
+            kind=kind,
+            moe=cfg.is_moe_layer(i) if kind in ("attn", "mla") else False,
+            window=window,
+            cross=cfg.cross_attention and kind == "attn",
+        ))
+    return specs
+
+
+def segments(cfg: ArchConfig) -> List[Tuple[LayerSpec, int]]:
+    """Run-length encoding of the layer plan."""
+    out: List[Tuple[LayerSpec, int]] = []
+    for s in layer_plan(cfg):
+        if out and out[-1][0] == s:
+            out[-1] = (s, out[-1][1] + 1)
+        else:
+            out.append((s, 1))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Per-block init / apply
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ArchConfig, spec: LayerSpec, dtype):
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {"norm1": init_norm(cfg.norm, cfg.d_model, dtype)}
+    if spec.kind in ("attn", "mla"):
+        p["attn"] = (attn.init_mla(ks[0], cfg, dtype) if spec.kind == "mla"
+                     else attn.init_gqa(ks[0], cfg, dtype))
+        p["norm2"] = init_norm(cfg.norm, cfg.d_model, dtype)
+        if spec.moe:
+            p["moe"] = init_moe(ks[1], cfg, dtype)
+        else:
+            p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_kind, dtype)
+        if spec.cross:
+            p["cross"] = attn.init_cross_attn(ks[2], cfg, dtype)
+            p["norm_cross"] = init_norm(cfg.norm, cfg.d_model, dtype)
+    elif spec.kind == "mamba2":
+        p["block"] = ssm_mod.init_mamba2(ks[0], cfg, dtype)
+    elif spec.kind == "mlstm":
+        p["block"] = ssm_mod.init_mlstm(ks[0], cfg, dtype)
+    elif spec.kind == "slstm":
+        p["block"] = ssm_mod.init_slstm(ks[0], cfg, dtype)
+    elif spec.kind == "shared_attn":
+        # zamba2: weights live in params["shared_attn"]; per-layer we only
+        # keep the input norm + the down-projection back into the stream.
+        p["down"] = _dense_init(ks[0], (cfg.d_model, cfg.d_model), dtype)
+    else:
+        raise ValueError(spec.kind)
+    return p
+
+
+@jax.custom_vjp
+def _grad_cast_leaf(x):
+    return x
+
+
+def _grad_cast_leaf_fwd(x):
+    # zero-size residual carries the primal dtype (dtypes aren't jax types)
+    return x, jnp.zeros((0,), x.dtype)
+
+
+def _grad_cast_leaf_bwd(res, ct):
+    return (ct.astype(res.dtype),)
+
+
+_grad_cast_leaf.defvjp(_grad_cast_leaf_fwd, _grad_cast_leaf_bwd)
+
+
+def grad_cast(tree):
+    """Identity whose COTANGENT is cast to the primal dtype.  Applied to the
+    per-layer param slice: mixed-precision internals (f32 silu/softmax/rope)
+    otherwise promote weight-grad matmuls to f32, doubling the bytes of the
+    per-layer gradient reduction (measured f32[8192,49152] all-reduces on
+    qwen110b)."""
+    return jax.tree.map(_grad_cast_leaf, tree)
+
+
+def init_shared_attn(key, cfg: ArchConfig, dtype):
+    """zamba2 shared block: concat(h, h0) -> proj -> attn -> mlp."""
+    ks = jax.random.split(key, 4)
+    return {
+        "w_concat": _dense_init(ks[0], (2 * cfg.d_model, cfg.d_model), dtype),
+        "attn": attn.init_gqa(ks[1], cfg, dtype),
+        "norm2": init_norm(cfg.norm, cfg.d_model, dtype),
+        "mlp": init_mlp(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_kind, dtype),
+    }
+
+
+def _apply_block(p, cfg: ArchConfig, spec: LayerSpec, h, *, positions,
+                 h0=None, shared=None, enc_out=None, causal=True,
+                 attention_impl="reference", constrain_inner=None):
+    """Full-sequence (train / prefill) block application.  Returns (h, aux)."""
+    ci = constrain_inner or (lambda x, kind="attn": x)
+    res = lambda y: ci(y, kind="residual")
+    aux = {}
+    x = ci(apply_norm(cfg.norm, p["norm1"], h), kind="attn")
+    if spec.kind == "attn":
+        y = attn.gqa_forward(p["attn"], cfg, x, positions, window=spec.window,
+                             attention_impl=attention_impl)
+        h = h + res(y)
+        if spec.cross and enc_out is not None:
+            xc = apply_norm(cfg.norm, p["norm_cross"], h)
+            h = h + res(attn.cross_attn_forward(p["cross"], cfg, xc, enc_out))
+        x2 = ci(apply_norm(cfg.norm, p["norm2"], h), kind="mlp")
+        if spec.moe:
+            y2, aux = moe_forward(p["moe"], cfg, x2)
+        else:
+            y2 = apply_mlp(p["mlp"], x2, cfg.mlp_kind)
+        h = h + res(y2)
+    elif spec.kind == "mla":
+        y = attn.mla_forward(p["attn"], cfg, x, positions)
+        h = h + res(y)
+        x2 = ci(apply_norm(cfg.norm, p["norm2"], h), kind="mlp")
+        if spec.moe:
+            y2, aux = moe_forward(p["moe"], cfg, x2)
+        else:
+            y2 = apply_mlp(p["mlp"], x2, cfg.mlp_kind)
+        h = h + res(y2)
+    elif spec.kind in ("mamba2", "mlstm", "slstm"):
+        fwd = {"mamba2": ssm_mod.mamba2_forward,
+               "mlstm": ssm_mod.mlstm_forward,
+               "slstm": ssm_mod.slstm_forward}[spec.kind]
+        h = h + res(fwd(p["block"], cfg, x))
+    elif spec.kind == "shared_attn":
+        z = jnp.concatenate([x, h0], axis=-1)
+        z = jnp.einsum("bsd,de->bse", z, shared["w_concat"])
+        z = z + attn.gqa_forward(shared["attn"], cfg, z, positions,
+                                 attention_impl=attention_impl)
+        z2 = apply_norm(cfg.norm, shared["norm2"], z)
+        z = z + apply_mlp(shared["mlp"], z2, cfg.mlp_kind)
+        h = h + res(jnp.einsum("bsd,de->bse", z, p["down"]))
+    return h, aux
+
+
+def _decode_block(p, cfg: ArchConfig, spec: LayerSpec, h, cache, *, position,
+                  h0=None, shared=None, enc_out=None):
+    """One-token decode through a block.  Returns (h, new_cache)."""
+    x = apply_norm(cfg.norm, p["norm1"], h)
+    if spec.kind == "attn":
+        y, cache = attn.gqa_decode(p["attn"], cfg, x, cache, position)
+        h = h + y
+        if spec.cross and enc_out is not None:
+            xc = apply_norm(cfg.norm, p["norm_cross"], h)
+            h = h + attn.cross_attn_forward(p["cross"], cfg, xc, enc_out)
+        x2 = apply_norm(cfg.norm, p["norm2"], h)
+        if spec.moe:
+            y2, _ = moe_forward(p["moe"], cfg, x2, dropless=True)
+        else:
+            y2 = apply_mlp(p["mlp"], x2, cfg.mlp_kind)
+        h = h + y2
+    elif spec.kind == "mla":
+        y, cache = attn.mla_decode(p["attn"], cfg, x, cache, position)
+        h = h + y
+        x2 = apply_norm(cfg.norm, p["norm2"], h)
+        if spec.moe:
+            y2, _ = moe_forward(p["moe"], cfg, x2, dropless=True)
+        else:
+            y2 = apply_mlp(p["mlp"], x2, cfg.mlp_kind)
+        h = h + y2
+    elif spec.kind in ("mamba2", "mlstm", "slstm"):
+        step = {"mamba2": ssm_mod.mamba2_step,
+                "mlstm": ssm_mod.mlstm_step,
+                "slstm": ssm_mod.slstm_step}[spec.kind]
+        y, cache = step(p["block"], cfg, x, cache)
+        h = h + y
+    elif spec.kind == "shared_attn":
+        z = jnp.concatenate([x, h0], axis=-1)
+        z = jnp.einsum("bsd,de->bse", z, shared["w_concat"])
+        y, cache = attn.gqa_decode(shared["attn"], cfg, z, cache, position)
+        z = z + y
+        z2 = apply_norm(cfg.norm, shared["norm2"], z)
+        z = z + apply_mlp(shared["mlp"], z2, cfg.mlp_kind)
+        h = h + jnp.einsum("bsd,de->bse", z, p["down"])
+    return h, cache
+
+
+def _init_block_cache(cfg: ArchConfig, spec: LayerSpec, batch, max_len, dtype):
+    if spec.kind == "attn":
+        return attn.init_kv_cache(cfg, batch, max_len, dtype,
+                                  window=spec.window)
+    if spec.kind == "shared_attn":
+        return attn.init_kv_cache(cfg, batch, max_len, dtype)
+    if spec.kind == "mla":
+        return attn.init_mla_cache(cfg, batch, max_len, dtype)
+    if spec.kind == "mamba2":
+        return ssm_mod.init_mamba2_state(cfg, batch, dtype)
+    if spec.kind == "mlstm":
+        return ssm_mod.init_mlstm_state(cfg, batch, dtype)
+    if spec.kind == "slstm":
+        return ssm_mod.init_slstm_state(cfg, batch, dtype)
+    raise ValueError(spec.kind)
+
+
+# ---------------------------------------------------------------------------
+# Whisper encoder
+# ---------------------------------------------------------------------------
+
+def _init_encoder(key, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, cfg.encoder_layers + 2)
+    layers = []
+    for i in range(cfg.encoder_layers):
+        k = jax.random.split(ks[i], 3)
+        layers.append({
+            "norm1": init_norm(cfg.norm, cfg.d_model, dtype),
+            "attn": attn.init_gqa(k[0], cfg, dtype),
+            "norm2": init_norm(cfg.norm, cfg.d_model, dtype),
+            "mlp": init_mlp(k[1], cfg.d_model, cfg.d_ff, cfg.mlp_kind, dtype),
+        })
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return {
+        "pos": init_learned_positions(ks[-2], cfg.encoder_seq, cfg.d_model,
+                                      dtype),
+        "layers": stacked,
+        "final_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+
+
+def _encode(params, cfg: ArchConfig, frames, remat=False):
+    """frames: (B, encoder_seq, d) — the stubbed conv-frontend output."""
+    h = frames + params["pos"]["pos"][None, :frames.shape[1]]
+
+    def body(h, lp):
+        x = apply_norm(cfg.norm, lp["norm1"], h)
+        B, S, _ = x.shape
+        hd = cfg.resolved_head_dim
+        q = jnp.einsum("bsd,de->bse", x, lp["attn"]["wq"]).reshape(
+            B, S, cfg.num_heads, hd)
+        k = jnp.einsum("bsd,de->bse", x, lp["attn"]["wk"]).reshape(
+            B, S, cfg.num_kv_heads, hd)
+        v = jnp.einsum("bsd,de->bse", x, lp["attn"]["wv"]).reshape(
+            B, S, cfg.num_kv_heads, hd)
+        y = attn.gqa_attention(q, k, v, mask=None)        # bidirectional
+        h = h + jnp.einsum("bse,ed->bsd", y.reshape(B, S, -1),
+                           lp["attn"]["wo"])
+        x2 = apply_norm(cfg.norm, lp["norm2"], h)
+        h = h + apply_mlp(lp["mlp"], x2, cfg.mlp_kind)
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    return apply_norm(cfg.norm, params["final_norm"], h)
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ArchConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    segs = segments(cfg)
+    ks = jax.random.split(key, len(segs) + 5)
+    params: Dict[str, Any] = {
+        "embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense_init(
+            ks[1], (cfg.d_model, cfg.vocab_size), dtype)
+    if cfg.rope_theta == 0.0:           # learned absolute positions
+        params["pos_embed"] = init_learned_positions(
+            ks[2], cfg.max_seq_len, cfg.d_model, dtype)
+    if cfg.encoder_layers:
+        params["encoder"] = _init_encoder(ks[3], cfg, dtype)
+    if any(s.kind == "shared_attn" for s, _ in segs):
+        params["shared_attn"] = init_shared_attn(ks[4], cfg, dtype)
+
+    seg_params = []
+    for i, (spec, n) in enumerate(segs):
+        keys = jax.random.split(jax.random.fold_in(ks[-1], i), n)
+        stacked = jax.vmap(
+            lambda k, spec=spec: _init_block(k, cfg, spec, dtype))(keys)
+        seg_params.append(stacked)
+    params["segments"] = seg_params
+    return params
+
+
+def _embed_inputs(params, cfg: ArchConfig, batch):
+    """Returns (h, positions).  batch may contain tokens, vision_embeds,
+    positions (M-RoPE 3-stream), frames (audio)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = jnp.take(params["embed"]["table"], tokens, axis=0)
+    if cfg.vision_tokens and "vision_embeds" in batch:
+        V = batch["vision_embeds"].shape[1]
+        h = jnp.concatenate([batch["vision_embeds"].astype(h.dtype),
+                             h[:, V:]], axis=1)
+    if "positions" in batch:
+        positions = batch["positions"]
+    elif cfg.rope_kind == "mrope":
+        p = jnp.arange(S)[None].repeat(B, 0)
+        positions = jnp.stack([p, p, p])               # text-only M-RoPE
+    else:
+        positions = jnp.arange(S)[None].repeat(B, 0)
+    if cfg.rope_theta == 0.0 and "pos_embed" in params:
+        # clip so shapes beyond the learned table still lower (whisper's
+        # assigned 32k shapes are a shape exercise — DESIGN.md §4)
+        ids = jnp.clip(jnp.arange(S), 0,
+                       params["pos_embed"]["pos"].shape[0] - 1)
+        h = h + jnp.take(params["pos_embed"]["pos"], ids, axis=0)[None]
+    return h, positions
+
+
+def forward_hidden(params, cfg: ArchConfig, batch, *, remat=False,
+                   attention_impl="reference", constrain=None,
+                   constrain_layer=None, constrain_inner=None):
+    """Train / prefill trunk.  Returns (final-norm hidden states, aux).
+
+    ``constrain``: optional h -> h sharding-constraint hook (sequence-parallel
+    activation layout), applied to the residual stream after every segment.
+    """
+    constrain = constrain or (lambda x: x)
+    h, positions = _embed_inputs(params, cfg, batch)
+    h = constrain(h)
+    h0 = h
+    enc_out = None
+    if cfg.encoder_layers and "frames" in batch:
+        enc_out = _encode(params["encoder"], cfg, batch["frames"],
+                          remat=remat)
+    shared = params.get("shared_attn")
+    aux_losses = {"load_balance_loss": jnp.zeros((), jnp.float32)}
+
+    for (spec, n), stack in zip(segments(cfg), params["segments"]):
+        def body(carry, layer_p, spec=spec):
+            h, lb = carry
+            layer_p = grad_cast(layer_p)   # bf16 weight-grad cotangents
+            if constrain_layer is not None:
+                # pins the per-layer param slice (and, via the transpose rule,
+                # its cotangent) to the FSDP layout -> per-layer
+                # reduce-scatter of gradients inside the scan backward
+                layer_p = constrain_layer(layer_p)
+            base_fn = functools.partial(
+                _apply_block, cfg=cfg, spec=spec, positions=positions,
+                h0=h0, shared=shared, enc_out=enc_out,
+                attention_impl=attention_impl,
+                constrain_inner=constrain_inner)
+            if remat:
+                ck_fn = jax.checkpoint(
+                    lambda p_, h_: base_fn(p_, h=h_),
+                    policy=jax.checkpoint_policies.nothing_saveable)
+                h_new, aux = ck_fn(layer_p, h)
+            else:
+                h_new, aux = base_fn(layer_p, h=h)
+            lb = lb + aux.get("load_balance_loss", 0.0)
+            return (h_new, lb), None
+
+        (h, aux_losses["load_balance_loss"]), _ = jax.lax.scan(
+            body, (h, aux_losses["load_balance_loss"]), stack)
+        h = constrain(h)
+
+    h = apply_norm(cfg.norm, params["final_norm"], h)
+    return h, aux_losses
+
+
+def project_logits(params, cfg: ArchConfig, h):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"]["table"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    return logits.astype(jnp.float32)
+
+
+def forward(params, cfg: ArchConfig, batch, *, remat=False,
+            attention_impl="reference", constrain=None):
+    """Train / prefill forward returning full logits.  Returns (logits, aux)."""
+    constrain = constrain or (lambda x: x)
+    h, aux = forward_hidden(params, cfg, batch, remat=remat,
+                            attention_impl=attention_impl,
+                            constrain=constrain)
+    return constrain(project_logits(params, cfg, h)), aux
+
+
+encode = _encode
+
+
+def init_decode_state(cfg: ArchConfig, batch, max_len, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    caches = []
+    for spec, n in segments(cfg):
+        one = _init_block_cache(cfg, spec, batch, max_len, dtype)
+        caches.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n,) + x.shape), one))
+    return {"caches": caches, "position": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params, cfg: ArchConfig, tokens, state, *, enc_out=None,
+                vision_embeds=None, constrain=None):
+    """tokens: (B, 1) -> (logits (B,1,V), new_state).
+
+    ``constrain``: optional decode activation hook.  Pinning h REPLICATED
+    between blocks turns every weight use into a partial-matmul + tiny psum
+    (the (B,1,d) activation is ~2MB) instead of re-gathering the FSDP-
+    sharded weights every token (measured 13.9GB/step/device on qwen110b).
+    """
+    constrain = constrain or (lambda x: x)
+    B = tokens.shape[0]
+    h = jnp.take(params["embed"]["table"], tokens, axis=0)
+    h = constrain(h)
+    position = state["position"]
+    if cfg.rope_theta == 0.0 and "pos_embed" in params:
+        h = h + jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"]["pos"], position, 1, axis=0)[None, 0:1]
+    h0 = h
+    shared = params.get("shared_attn")
+    new_caches = []
+    for (spec, n), stack, cache in zip(segments(cfg), params["segments"],
+                                       state["caches"]):
+        def body(h, xs, spec=spec):
+            layer_p, layer_cache = xs
+            h, new_cache = _decode_block(
+                layer_p, cfg, spec, h, layer_cache, position=position,
+                h0=h0, shared=shared, enc_out=enc_out)
+            return constrain(h), new_cache
+
+        h, nc = jax.lax.scan(body, h, (stack, cache))
+        h = constrain(h)
+        new_caches.append(nc)
+    h = apply_norm(cfg.norm, params["final_norm"], h)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", h, params["embed"]["table"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    return logits.astype(jnp.float32), {"caches": new_caches,
+                                        "position": position + 1}
+
+
+def chunked_ce(params, cfg: ArchConfig, h, labels, *, chunk=0,
+               constrain=None, constrain_head=None):
+    # ``constrain`` is the *logits* constraint (vocab-parallel);
+    # ``constrain_head`` pins the (V,d)/(d,V) head weight OUTSIDE the chunk
+    # scan (otherwise XLA re-gathers the f32 head every chunk — measured
+    # 150MB x 1024 iterations on gemma3/train_4k)
+    """Cross-entropy without materializing (B, S, V) logits.
+
+    Scans over sequence chunks; each chunk's logits are rematerialized in the
+    backward pass (jax.checkpoint), so the live logits buffer is
+    (B, chunk, V) — the enabler for vocab-262k configs at 1M-token batches.
+    """
+    constrain = constrain or (lambda x: x)
+    B, S, d = h.shape
+    if chunk <= 0:
+        # auto: target ~128 MB of f32 logits per DEVICE per chunk (more
+        # chunks => more per-chunk head-grad reductions, measured 311MB x
+        # #chunks on qwen110b; fewer chunks => bigger live logits buffer).
+        # chunk must DIVIDE S: pick the largest divisor <= the target
+        # (naive halving can collapse to chunk=1 -> one-token chunks).
+        budget = 128 * 2 ** 20 * max(jax.device_count(), 1)
+        target = max(1, min(S, budget // max(B * cfg.vocab_size * 4, 1)))
+        chunk = 1
+        for c in range(target, 0, -1):
+            if S % c == 0:
+                chunk = c
+                break
+    if S % chunk:
+        chunk = S     # fallback: no chunking for awkward lengths
+    nc = S // chunk
+    hc = h.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"]          # (V, d)
+        proj = lambda hh, ww: jnp.einsum("bsd,vd->bsv", hh, ww)
+    else:
+        w = params["lm_head"]                 # (d, V)
+        proj = lambda hh, ww: jnp.einsum("bsd,dv->bsv", hh, ww)
+    if constrain_head is not None:
+        w = constrain_head(w)                 # hoisted out of the scan
+
+    @jax.checkpoint
+    def chunk_loss(h_c, lab_c):
+        logits = constrain(proj(h_c, w).astype(jnp.float32))
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        # label pick via local-vocab mask-sum: take_along_axis on the
+        # vocab-sharded dim would all-gather the full f32 logits chunk
+        # (226MB x #chunks on gemma3 — measured); the iota-mask reduction
+        # stays shard-local and psums a scalar instead
+        onehot = (jnp.arange(logits.shape[-1])[None, None, :]
+                  == jnp.maximum(lab_c, 0)[..., None])
+        ll = jnp.sum(jnp.where(onehot, logp, 0.0), axis=-1)
+        mask = (lab_c >= 0).astype(jnp.float32)
+        return jnp.sum(ll * mask), jnp.sum(mask)
+
+    def body(acc, xs):
+        s, n = chunk_loss(*xs)
+        return (acc[0] + s, acc[1] + n), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc))
+    return -tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, remat=False,
+            attention_impl="reference", lb_coef=0.01, constrain=None,
+            ce_chunk=0, constrain_layer=None, constrain_logits=None,
+            constrain_inner=None, constrain_head=None):
+    """Next-token cross-entropy (+ MoE load-balance aux)."""
+    h, aux = forward_hidden(params, cfg, batch, remat=remat,
+                            attention_impl=attention_impl,
+                            constrain=constrain,
+                            constrain_layer=constrain_layer,
+                            constrain_inner=constrain_inner)
+    loss = chunked_ce(params, cfg, h, batch["labels"], chunk=ce_chunk,
+                      constrain=constrain_logits,
+                      constrain_head=constrain_head)
+    total = loss + lb_coef * aux["load_balance_loss"]
+    return total, {"ce_loss": loss, **aux}

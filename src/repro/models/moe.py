@@ -1,0 +1,114 @@
+"""Mixture-of-Experts block: top-k routing with capacity-factor dispatch,
+optional shared experts (DeepSeek-V2) and a parallel dense residual MLP
+(Arctic).
+
+TPU/SPMD adaptation: dispatch bookkeeping (one-hot cumsum -> position in
+expert) is computed PER BATCH ROW, so it stays shard-local under the
+batch@data layout — a global-token cumsum would serialize across shards
+(measured 1.5GB x layers x microbatches of collective traffic on
+deepseek-v2).  The only cross-shard exchange is the (B, E, cap, d) expert
+buffer resharding batch@data -> expert@model, i.e. the MoE all-to-all.
+
+Gather/scatter (bytes) rather than one-hot einsums (N*E*cap*d FLOPs).
+Router load-balance aux loss follows Switch/GShard; per-expert dispatch
+entropy is exported as the paper's *diversity* proxy (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import _dense_init, apply_mlp, init_mlp
+
+
+def init_moe(key, cfg: ArchConfig, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": _dense_init(ks[0], (d, m.num_experts), jnp.float32),
+        # experts stacked on axis 0: (E, d, ff) / (E, ff, d)
+        "wi_gate": _dense_init(ks[1], (m.num_experts, d, m.expert_d_ff), dtype),
+        "wi_up": _dense_init(ks[2], (m.num_experts, d, m.expert_d_ff), dtype),
+        "wo": _dense_init(ks[3], (m.num_experts, m.expert_d_ff, d), dtype),
+    }
+    if m.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, m.shared_d_ff, "swiglu", dtype)
+    if m.dense_residual_d_ff:
+        p["dense_residual"] = init_mlp(ks[5], d, m.dense_residual_d_ff,
+                                       "swiglu", dtype)
+    return p
+
+
+def moe_forward(p, cfg: ArchConfig, x, dropless=False):
+    """x: (B, S, d) -> (y, aux) where aux has load-balance loss + diversity.
+
+    ``dropless=True`` sizes capacity so no token is ever dropped — used for
+    decode, where a 1-token batch must not lose its expert assignment.
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    E = m.num_experts
+    k = m.top_k
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                       # (B,S,E)
+    gate_vals, top_idx = jax.lax.top_k(probs, k)                  # (B,S,k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    # --- per-row dispatch bookkeeping (shard-local under batch@data) ------
+    cap = (S if dropless
+           else max(1, int(m.capacity_factor * S * k / E)))
+    flat_e = top_idx.reshape(B, S * k)                            # (B, Sk)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)           # (B,Sk,E)
+    pos_in_e = (jnp.cumsum(onehot, axis=1) - 1)                   # (B,Sk,E)
+    pos_in_e = jnp.sum(pos_in_e * onehot, axis=-1)                # (B,Sk)
+    keep = pos_in_e < cap
+    gate_vals = gate_vals * keep.reshape(B, S, k)
+
+    dest = jnp.where(keep, flat_e * cap + pos_in_e, E * cap)      # (B,Sk)
+    tok_ids = jnp.reshape(
+        jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None, :, None],
+                         (B, S, k)), (B, S * k))
+    token_for_slot = jnp.zeros((B, E * cap + 1), jnp.int32
+                               ).at[jnp.arange(B)[:, None], dest].set(
+                                   tok_ids, mode="drop")
+    filled = jnp.zeros((B, E * cap + 1), jnp.bool_
+                       ).at[jnp.arange(B)[:, None], dest].set(True,
+                                                              mode="drop")
+
+    # --- gather rows -> (B, E, cap, d) expert buffers ---------------------
+    xe = jnp.take_along_axis(x, token_for_slot[:, :E * cap, None], axis=1)
+    xe = xe * filled[:, :E * cap, None].astype(x.dtype)
+    xe = xe.reshape(B, E, cap, d)
+
+    # --- expert compute (E@model): the b<->e reshard is the all-to-all ----
+    g = jnp.einsum("becd,edf->becf", xe, p["wi_gate"])
+    u = jnp.einsum("becd,edf->becf", xe, p["wi_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    ye = jnp.einsum("becf,efd->becd", h, p["wo"])                 # (B,E,cap,d)
+
+    # --- combine: per-row gather back + gated scatter-add -----------------
+    ye_flat = jnp.concatenate(
+        [ye.reshape(B, E * cap, d), jnp.zeros((B, 1, d), ye.dtype)], axis=1)
+    contrib = jnp.take_along_axis(ye_flat, dest[..., None], axis=1)  # (B,Sk,d)
+    contrib = contrib * gate_vals.reshape(B, S * k, 1).astype(ye.dtype)
+    y = jnp.sum(contrib.reshape(B, S, k, d), axis=2)
+
+    if m.num_shared_experts:
+        y = y + apply_mlp(p["shared"], x, "swiglu")
+    if m.dense_residual_d_ff:
+        y = y + apply_mlp(p["dense_residual"], x, "swiglu")
+
+    # aux: Switch load-balance loss + dispatch entropy (diversity proxy)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_idx[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    lb_loss = E * jnp.sum(frac_tokens * frac_probs)
+    entropy = -jnp.sum(frac_probs * jnp.log(frac_probs + 1e-9))
+    aux = {"load_balance_loss": lb_loss,
+           "dispatch_entropy": entropy,
+           "expert_fraction": frac_probs}
+    return y, aux

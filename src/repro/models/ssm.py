@@ -1,0 +1,450 @@
+"""SSM blocks: Mamba2 (chunked SSD), xLSTM's mLSTM (chunkwise matrix-memory)
+and sLSTM (stabilized scalar-memory recurrence).
+
+TPU adaptation (DESIGN.md §6): the CUDA selective-scan becomes a *chunked*
+formulation — within-chunk work is MXU-friendly (chunk x chunk matmuls,
+chunk=128 aligns with the systolic array), and only chunk-boundary states are
+materialized (HBM footprint O(T/chunk), not O(T)).  Inter-chunk recurrence is
+a short ``lax.scan``.
+
+All blocks expose:
+  init_*            -> param subtree
+  *_forward(p, x)   -> (B, T, d)          full-sequence (train / prefill)
+  *_step(p, x, st)  -> ((B, 1, d), state) single-token decode
+  init_*_state      -> decode state (constant-size: the long_500k enabler)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models.layers import _dense_init
+
+HEAD_DIM = 64
+
+
+# ---------------------------------------------------------------------------
+# Mamba2
+# ---------------------------------------------------------------------------
+
+def _mamba_dims(cfg: ArchConfig):
+    s = cfg.ssm
+    inner = s.expand * cfg.d_model
+    heads = s.num_heads or inner // HEAD_DIM
+    return s, inner, heads, inner // heads, s.state_dim
+
+
+def init_mamba2(key, cfg: ArchConfig, dtype):
+    s, inner, H, hd, N = _mamba_dims(cfg)
+    d = cfg.d_model
+    conv_ch = inner + 2 * N          # x, B, C all pass through the conv
+    ks = jax.random.split(key, 5)
+    return {
+        # in_proj -> [z(inner), xBC(conv_ch), dt(H)]
+        "in_proj": _dense_init(ks[0], (d, 2 * inner + 2 * N + H), dtype),
+        "conv_w": _dense_init(ks[1], (s.conv_width, conv_ch), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((H,), jnp.float32),        # A = -exp(a_log)
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "out_proj": _dense_init(ks[2], (inner, d), dtype),
+        "norm_scale": jnp.ones((inner,), dtype),      # gated RMSNorm
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: (B, T, C); w: (W, C) depthwise."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return out + b
+
+
+def _gated_rmsnorm(x, z, scale, eps=1e-6):
+    x = x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def _ssd_chunked(xh, dt, B_, C_, a_log, chunk):
+    """Chunked SSD core.
+
+    xh: (B,T,H,hd)  dt: (B,T,H)  B_,C_: (B,T,N)  ->  y: (B,T,H,hd),
+    final state (B,H,hd,N).
+    """
+    Bsz, T, H, hd = xh.shape
+    N = B_.shape[-1]
+    nc = T // chunk
+    A = -jnp.exp(a_log)                                   # (H,) negative
+    dt = jax.nn.softplus(dt.astype(jnp.float32))          # (B,T,H)
+    glog = (dt * A).reshape(Bsz, nc, chunk, H)            # log-decay per step
+    xin = (xh.astype(jnp.float32)
+           * dt[..., None]).reshape(Bsz, nc, chunk, H, hd)
+    Bc = B_.astype(jnp.float32).reshape(Bsz, nc, chunk, N)
+    Cc = C_.astype(jnp.float32).reshape(Bsz, nc, chunk, N)
+
+    cs = jnp.cumsum(glog, axis=2)                         # (B,nc,L,H)
+    total = cs[:, :, -1]                                  # (B,nc,H)
+
+    # within-chunk (attention-like, causal)
+    rel = cs[:, :, :, None, :] - cs[:, :, None, :, :]     # (B,nc,L,L,H) t,s
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    M = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+    qk = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)            # (B,nc,L,L)
+    y_intra = jnp.einsum("bcts,bctsh,bcshd->bcthd", qk, M, xin)
+
+    # chunk summary state: decay inputs to chunk end
+    decay_to_end = jnp.exp(total[:, :, None, :] - cs)     # (B,nc,L,H)
+    S_chunk = jnp.einsum("bclh,bclhd,bcln->bchdn",
+                         decay_to_end, xin, Bc)           # (B,nc,H,hd,N)
+
+    # inter-chunk scan
+    def step(S_prev, inp):
+        tot, Sc = inp                                     # (B,H), (B,H,hd,N)
+        S_new = jnp.exp(tot)[..., None, None] * S_prev + Sc
+        return S_new, S_prev
+
+    S0 = jnp.zeros((Bsz, H, hd, N), jnp.float32)
+    S_last, S_befores = jax.lax.scan(
+        step, S0,
+        (total.transpose(1, 0, 2), S_chunk.transpose(1, 0, 2, 3, 4)))
+    S_befores = S_befores.transpose(1, 0, 2, 3, 4)        # (B,nc,H,hd,N)
+
+    y_inter = jnp.einsum("bcln,bclh,bchdn->bclhd",
+                         Cc, jnp.exp(cs), S_befores)
+    y = (y_intra + y_inter).reshape(Bsz, T, H, hd)
+    return y, S_last
+
+
+def mamba2_forward(p, cfg: ArchConfig, x, return_state=False):
+    s, inner, H, hd, N = _mamba_dims(cfg)
+    B, T, _ = x.shape
+    proj = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    z, xBC, dt = jnp.split(proj, [inner, 2 * inner + 2 * N], axis=-1)
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"])
+                      .astype(jnp.float32)).astype(x.dtype)
+    xh, B_, C_ = jnp.split(xBC, [inner, inner + N], axis=-1)
+    xh = xh.reshape(B, T, H, hd)
+    chunk = min(s.chunk_size, T)
+    pad = (-T) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+    y, S_last = _ssd_chunked(xh, dt, B_, C_, p["a_log"], chunk)
+    y = y[:, :T]
+    y = y + p["d_skip"][None, None, :, None] * xh[:, :T].astype(jnp.float32)
+    y = y.reshape(B, T, inner).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"])
+    if return_state:
+        return out, S_last
+    return out
+
+
+@dataclasses.dataclass
+class Mamba2State:
+    conv: jax.Array          # (B, W-1, conv_ch) trailing inputs
+    ssm: jax.Array           # (B, H, hd, N) f32
+
+    def tree_flatten(self):
+        return (self.conv, self.ssm), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_dataclass(
+    Mamba2State, data_fields=("conv", "ssm"), meta_fields=())
+
+
+def init_mamba2_state(cfg: ArchConfig, batch, dtype):
+    s, inner, H, hd, N = _mamba_dims(cfg)
+    conv_ch = inner + 2 * N
+    return Mamba2State(
+        conv=jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+        ssm=jnp.zeros((batch, H, hd, N), jnp.float32),
+    )
+
+
+def mamba2_step(p, cfg: ArchConfig, x, state: Mamba2State):
+    """x: (B,1,d) -> (y, new_state)."""
+    s, inner, H, hd, N = _mamba_dims(cfg)
+    B = x.shape[0]
+    proj = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    z, xBC, dt = jnp.split(proj, [inner, 2 * inner + 2 * N], axis=-1)
+    hist = jnp.concatenate([state.conv, xBC], axis=1)     # (B, W, C)
+    conv_out = (jnp.einsum("bwc,wc->bc", hist, p["conv_w"]) + p["conv_b"])
+    xBC = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)[:, None, :]
+    xh, B_, C_ = jnp.split(xBC, [inner, inner + N], axis=-1)
+    xh = xh.reshape(B, H, hd).astype(jnp.float32)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32))   # (B,H)
+    A = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dtv * A)                              # (B,H)
+    Bv = B_[:, 0].astype(jnp.float32)                     # (B,N)
+    Cv = C_[:, 0].astype(jnp.float32)
+    S = (decay[..., None, None] * state.ssm
+         + jnp.einsum("bh,bhd,bn->bhdn", dtv, xh, Bv))
+    y = jnp.einsum("bn,bhdn->bhd", Cv, S)
+    y = y + p["d_skip"][None, :, None] * xh
+    y = y.reshape(B, 1, inner).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"])
+    return out, Mamba2State(conv=hist[:, 1:], ssm=S)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory) — chunkwise linear-attention-with-gates form
+# ---------------------------------------------------------------------------
+
+def _mlstm_dims(cfg: ArchConfig):
+    H = cfg.ssm.num_heads or cfg.num_heads
+    inner = cfg.ssm.expand * cfg.d_model
+    return inner, H, inner // H
+
+
+def init_mlstm(key, cfg: ArchConfig, dtype):
+    inner, H, hd = _mlstm_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": _dense_init(ks[0], (d, inner), dtype),
+        "wk": _dense_init(ks[1], (d, inner), dtype),
+        "wv": _dense_init(ks[2], (d, inner), dtype),
+        "w_if": _dense_init(ks[3], (d, 2 * H), dtype, scale=0.01),
+        "b_i": jnp.full((H,), -3.0, jnp.float32),   # small input gates at init
+        "b_f": jnp.full((H,), 3.0, jnp.float32),    # open forget gates at init
+        "wz": _dense_init(ks[4], (d, inner), dtype),
+        "out_proj": _dense_init(ks[5], (inner, d), dtype),
+        "norm_scale": jnp.ones((inner,), dtype),
+    }
+
+
+def _mlstm_gates(p, x):
+    gf = jnp.einsum("btd,de->bte", x, p["w_if"]).astype(jnp.float32)
+    H = p["b_i"].shape[0]
+    i_raw = gf[..., :H] + p["b_i"]
+    f_raw = gf[..., H:] + p["b_f"]
+    log_f = jax.nn.log_sigmoid(f_raw)                     # <= 0
+    log_i = jnp.clip(i_raw, -20.0, 10.0)                  # soft-capped exp gate
+    return log_i, log_f
+
+
+def mlstm_forward(p, cfg: ArchConfig, x, return_state=False):
+    inner, H, hd = _mlstm_dims(cfg)
+    B, T, _ = x.shape
+    q = jnp.einsum("btd,de->bte", x, p["wq"]).reshape(B, T, H, hd)
+    k = jnp.einsum("btd,de->bte", x, p["wk"]).reshape(B, T, H, hd)
+    v = jnp.einsum("btd,de->bte", x, p["wv"]).reshape(B, T, H, hd)
+    z = jnp.einsum("btd,de->bte", x, p["wz"])
+    log_i, log_f = _mlstm_gates(p, x)                     # (B,T,H)
+
+    chunk = min(cfg.ssm.chunk_size, T)
+    pad = (-T) % chunk
+    if pad:
+        q, k, v = (jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for a in (q, k, v))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)))
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)), constant_values=0.0)
+    Tp = T + pad
+    nc = Tp // chunk
+    qc = q.reshape(B, nc, chunk, H, hd).astype(jnp.float32) / jnp.sqrt(float(hd))
+    kc = k.reshape(B, nc, chunk, H, hd).astype(jnp.float32)
+    vc = v.reshape(B, nc, chunk, H, hd).astype(jnp.float32)
+    li = log_i.reshape(B, nc, chunk, H)
+    lf = log_f.reshape(B, nc, chunk, H)
+
+    cs = jnp.cumsum(lf, axis=2)                           # (B,nc,L,H)
+    total = cs[:, :, -1]
+
+    # within-chunk: M[t,s] = exp(cs_t - cs_s + li_s), causal
+    rel = cs[:, :, :, None, :] - cs[:, :, None, :, :] + li[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    M = jnp.where(causal[None, None, :, :, None], jnp.exp(rel), 0.0)
+    qk = jnp.einsum("bcthd,bcshd->bctsh", qc, kc)
+    y_intra = jnp.einsum("bctsh,bctsh,bcshd->bcthd", qk, M, vc)
+
+    # chunk summary: C_chunk = sum_s exp(total - cs_s + li_s) k_s v_s^T
+    w_end = jnp.exp(total[:, :, None, :] - cs + li)       # (B,nc,L,H)
+    C_chunk = jnp.einsum("bclh,bclhd,bclhe->bchde", w_end, kc, vc)
+    n_chunk = jnp.einsum("bclh,bclhd->bchd", w_end, kc)
+
+    def step(carry, inp):
+        C_prev, n_prev = carry
+        tot, Cc, nc_ = inp
+        decay = jnp.exp(tot)[..., None, None]
+        C_new = decay * C_prev + Cc
+        n_new = jnp.exp(tot)[..., None] * n_prev + nc_
+        return (C_new, n_new), (C_prev, n_prev)
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    (C_last, n_last), (C_bef, n_bef) = jax.lax.scan(
+        step, (C0, n0),
+        (total.transpose(1, 0, 2), C_chunk.transpose(1, 0, 2, 3, 4),
+         n_chunk.transpose(1, 0, 2, 3)))
+    C_bef = C_bef.transpose(1, 0, 2, 3, 4)
+    n_bef = n_bef.transpose(1, 0, 2, 3)
+
+    y_inter = jnp.einsum("bclhd,bclh,bchde->bclhe",
+                         qc, jnp.exp(cs), C_bef)
+    n_inter = jnp.einsum("bclhd,bclh,bchd->bclh", qc, jnp.exp(cs), n_bef)
+    n_intra_s = jnp.einsum("bctsh,bcshd,bcthd->bcth", M, kc, qc)
+    denom = jnp.maximum(jnp.abs(n_inter + n_intra_s), 1.0)[..., None]
+    y = (y_intra + y_inter) / denom
+    y = y.reshape(B, Tp, inner)[:, :T].astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"])
+    if return_state:
+        return out, (C_last, n_last)
+    return out
+
+
+@dataclasses.dataclass
+class MLSTMState:
+    C: jax.Array             # (B,H,hd,hd) f32
+    n: jax.Array             # (B,H,hd) f32
+
+    def tree_flatten(self):
+        return (self.C, self.n), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_dataclass(
+    MLSTMState, data_fields=("C", "n"), meta_fields=())
+
+
+def init_mlstm_state(cfg: ArchConfig, batch, dtype):
+    inner, H, hd = _mlstm_dims(cfg)
+    return MLSTMState(C=jnp.zeros((batch, H, hd, hd), jnp.float32),
+                      n=jnp.zeros((batch, H, hd), jnp.float32))
+
+
+def mlstm_step(p, cfg: ArchConfig, x, state: MLSTMState):
+    inner, H, hd = _mlstm_dims(cfg)
+    B = x.shape[0]
+    q = jnp.einsum("btd,de->bte", x, p["wq"]).reshape(B, H, hd).astype(jnp.float32)
+    k = jnp.einsum("btd,de->bte", x, p["wk"]).reshape(B, H, hd).astype(jnp.float32)
+    v = jnp.einsum("btd,de->bte", x, p["wv"]).reshape(B, H, hd).astype(jnp.float32)
+    z = jnp.einsum("btd,de->bte", x, p["wz"])
+    log_i, log_f = _mlstm_gates(p, x)                     # (B,1,H)
+    fi, ii = jnp.exp(log_f[:, 0]), jnp.exp(log_i[:, 0])   # (B,H)
+    q = q / jnp.sqrt(float(hd))
+    C = fi[..., None, None] * state.C + ii[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", k, v)
+    n = fi[..., None] * state.n + ii[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), 1.0)
+    y = (num / den[..., None]).reshape(B, 1, inner).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"])
+    return out, MLSTMState(C=C, n=n)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — stabilized scalar-memory recurrence with head-wise recurrent mixing
+# ---------------------------------------------------------------------------
+
+def _slstm_dims(cfg: ArchConfig):
+    H = cfg.ssm.num_heads or cfg.num_heads
+    return cfg.d_model, H, cfg.d_model // H
+
+
+def init_slstm(key, cfg: ArchConfig, dtype):
+    d, H, hd = _slstm_dims(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "w_in": _dense_init(ks[0], (d, 4 * d), dtype),        # i,f,z,o
+        "r": _dense_init(ks[1], (H, hd, 4 * hd), dtype, scale=1.0 / hd ** 0.5),
+        "b": jnp.concatenate([jnp.full((d,), -3.0), jnp.full((d,), 3.0),
+                              jnp.zeros((2 * d,))]).astype(jnp.float32),
+        "out_proj": _dense_init(ks[2], (d, d), dtype),
+        "norm_scale": jnp.ones((d,), dtype),
+    }
+
+
+def _slstm_cell(p, wx_t, carry):
+    """One sLSTM step.  wx_t: (B, 4d) precomputed input projection."""
+    c, n, m, h = carry                                    # (B,H,hd) each, f32
+    B, H, hd = c.shape
+    rh = jnp.einsum("bhd,hde->bhe", h, p["r"].astype(jnp.float32))  # (B,H,4hd)
+    wx = wx_t.astype(jnp.float32).reshape(B, 4, H, hd).transpose(0, 2, 3, 1)
+    rr = rh.reshape(B, H, 4, hd).transpose(0, 1, 3, 2)
+    pre = wx + rr + p["b"].reshape(4, H, hd).transpose(1, 2, 0)[None]
+    i_r, f_r, z_r, o_r = [pre[..., j] for j in range(4)]
+    zt = jnp.tanh(z_r)
+    ot = jax.nn.sigmoid(o_r)
+    log_f = jax.nn.log_sigmoid(f_r)
+    m_new = jnp.maximum(log_f + m, i_r)
+    c_new = jnp.exp(log_f + m - m_new) * c + jnp.exp(i_r - m_new) * zt
+    n_new = jnp.exp(log_f + m - m_new) * n + jnp.exp(i_r - m_new)
+    h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_forward(p, cfg: ArchConfig, x, return_state=False):
+    d, H, hd = _slstm_dims(cfg)
+    B, T, _ = x.shape
+    wx = jnp.einsum("btd,de->bte", x, p["w_in"])          # (B,T,4d)
+
+    def step(carry, wx_t):
+        new = _slstm_cell(p, wx_t, carry)
+        return new, new[3]
+
+    init = tuple(jnp.zeros((B, H, hd), jnp.float32) for _ in range(3)) + (
+        jnp.zeros((B, H, hd), jnp.float32),)
+    init = (init[0], init[1], jnp.full((B, H, hd), -1e9, jnp.float32), init[3])
+    carry, hs = jax.lax.scan(step, init, wx.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2, 3).reshape(B, T, d).astype(x.dtype)
+    y = _gated_rmsnorm(y, jnp.ones_like(y), p["norm_scale"])
+    out = jnp.einsum("btd,de->bte", y, p["out_proj"])
+    if return_state:
+        return out, carry
+    return out
+
+
+@dataclasses.dataclass
+class SLSTMState:
+    c: jax.Array
+    n: jax.Array
+    m: jax.Array
+    h: jax.Array
+
+    def tree_flatten(self):
+        return (self.c, self.n, self.m, self.h), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_dataclass(
+    SLSTMState, data_fields=("c", "n", "m", "h"), meta_fields=())
+
+
+def init_slstm_state(cfg: ArchConfig, batch, dtype):
+    d, H, hd = _slstm_dims(cfg)
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return SLSTMState(c=z, n=z, m=jnp.full((batch, H, hd), -1e9, jnp.float32),
+                      h=z)
+
+
+def slstm_step(p, cfg: ArchConfig, x, state: SLSTMState):
+    d, H, hd = _slstm_dims(cfg)
+    B = x.shape[0]
+    wx = jnp.einsum("btd,de->bte", x, p["w_in"])[:, 0]
+    carry = _slstm_cell(p, wx, (state.c, state.n, state.m, state.h))
+    y = carry[3].reshape(B, 1, d).astype(x.dtype)
+    y = _gated_rmsnorm(y, jnp.ones_like(y), p["norm_scale"])
+    out = jnp.einsum("btd,de->bte", y, p["out_proj"])
+    return out, SLSTMState(*carry)

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import (adamw_init, adamw_update, sgd_init,
+                                    sgd_update, momentum_init, momentum_update)

@@ -1,0 +1,86 @@
+"""Hand-rolled sharded-state-aware optimizers (no external deps).
+
+State layout is a plain dict so the sharding rules can mirror param specs:
+  adamw: {"m": tree, "v": tree, "count": scalar}
+  sgd/momentum: {"m": tree or (), "count": scalar}
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _zeros_like_f32(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+# --- AdamW ------------------------------------------------------------------
+
+def adamw_init(params):
+    return {"m": _zeros_like_f32(params), "v": _zeros_like_f32(params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, *, lr=1e-4, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1):
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** cf
+    bc2 = 1.0 - b2 ** cf
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * gf
+        v_new = b2 * v + (1 - b2) * gf * gf
+        mh = m_new / bc1
+        vh = v_new / bc2
+        step = mh / (jnp.sqrt(vh) + eps)
+        if p.ndim >= 2:                      # decoupled decay on matrices only
+            step = step + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}
+
+
+# --- SGD / momentum ----------------------------------------------------------
+
+def sgd_init(params):
+    return {"count": jnp.zeros((), jnp.int32)}
+
+
+def sgd_update(params, grads, state, *, lr=0.1, weight_decay=0.0):
+    def upd(p, g):
+        gf = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * gf).astype(p.dtype)
+
+    return (jax.tree.map(upd, params, grads),
+            {"count": state["count"] + 1})
+
+
+def momentum_init(params):
+    return {"m": _zeros_like_f32(params), "count": jnp.zeros((), jnp.int32)}
+
+
+def momentum_update(params, grads, state, *, lr=0.1, beta=0.9,
+                    weight_decay=0.0):
+    def upd(p, g, m):
+        gf = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+        m_new = beta * m + gf
+        return (p.astype(jnp.float32) - lr * m_new).astype(p.dtype), m_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    out = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+    return (treedef.unflatten([o[0] for o in out]),
+            {"m": treedef.unflatten([o[1] for o in out]),
+             "count": state["count"] + 1})

@@ -1,0 +1,65 @@
+"""Serving: prefill + single-token decode steps, and a batched request
+driver (continuous-batching-lite: fixed slots, per-slot position/active
+flags) used by the serving example.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+
+
+def make_prefill_step(cfg: ArchConfig, attention_impl="reference",
+                      constrain=None):
+    def prefill(params, batch):
+        logits, _ = M.forward(params, cfg, batch,
+                              attention_impl=attention_impl,
+                              constrain=constrain)
+        return logits[:, -1, :]          # next-token logits
+    return prefill
+
+
+def make_serve_step(cfg: ArchConfig, constrain=None):
+    """serve_step: ONE new token against a KV cache of the shape's seq_len."""
+    def serve(params, state, tokens):
+        enc_out = state.get("enc_out")
+        logits, new_state = M.decode_step(params, cfg, tokens, state["decode"],
+                                          enc_out=enc_out,
+                                          constrain=constrain)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        out = {"decode": new_state}
+        if enc_out is not None:
+            out["enc_out"] = enc_out
+        return next_tok, out
+    return serve
+
+
+def init_serve_state(cfg: ArchConfig, batch, max_len, dtype=None,
+                     with_encoder=False):
+    state = {"decode": M.init_decode_state(cfg, batch, max_len, dtype)}
+    if with_encoder or cfg.encoder_layers:
+        d = jnp.dtype(dtype or cfg.dtype)
+        state["enc_out"] = jnp.zeros((batch, cfg.encoder_seq, cfg.d_model), d)
+    return state
+
+
+def greedy_generate(params, cfg: ArchConfig, prompt_tokens, steps,
+                    max_len=None, enc_out=None):
+    """Simple generate loop used by examples/tests (CPU-scale)."""
+    B, S = prompt_tokens.shape
+    max_len = max_len or (S + steps + 8)
+    state = M.init_decode_state(cfg, B, max_len, jnp.dtype(cfg.dtype))
+    tok = None
+    for t in range(S):
+        logits, state = M.decode_step(params, cfg, prompt_tokens[:, t:t + 1],
+                                      state, enc_out=enc_out)
+    out = []
+    tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    for _ in range(steps):
+        out.append(tok)
+        logits, state = M.decode_step(params, cfg, tok, state, enc_out=enc_out)
+        tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)

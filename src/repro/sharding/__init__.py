@@ -1,0 +1,6 @@
+from repro.sharding.rules import (param_specs, batch_specs,
+                                  decode_state_specs, opt_state_specs,
+                                  act_constraint, decode_act_constraint,
+                                  head_constraint, inner_act_constraint,
+                                  layer_constraint, logits_constraint,
+                                  FSDP_AXES, data_axes)

@@ -1,0 +1,310 @@
+"""Logical sharding rules -> jax.sharding.PartitionSpec.
+
+Layout (DESIGN.md §5):
+  * FSDP:  params / optimizer state sharded over ('pod','data') on the
+    d_model-ish dim; gradients reduce over the same axes.
+  * TP:    heads / ffn-hidden / experts sharded over 'model'.
+  * batch: ('pod','data'); KV-cache sequence dim: 'model' (sequence-parallel
+    decode attention); SSM heads: 'model'.
+
+Rules are name-based over pytree paths.  Stacked segment params carry a
+leading layer axis (never sharded).  GSPMD handles non-divisible dims by
+padding, so rules don't need per-arch divisibility checks.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+FSDP_AXES = ("pod", "data")     # collapsed to just ('data',) on 1-pod meshes
+
+
+def data_axes(mesh) -> Any:
+    """The data-parallel (FSDP/batch) mesh axes present in `mesh`."""
+    names = mesh.axis_names
+    ax = tuple(a for a in FSDP_AXES if a in names)
+    return ax if len(ax) > 1 else (ax[0] if ax else None)
+
+
+# name -> spec builder over the *unstacked* weight dims.
+# FD = fsdp axes placeholder, substituted at call time.
+_FD = "__FSDP__"
+
+_RULES_2D = {
+    # (in, out) projections: shard in-dim on FSDP, out-dim on model
+    "wq": (_FD, "model"), "wk": (_FD, "model"), "wv": (_FD, "model"),
+    "wi": (_FD, "model"), "wi_gate": (_FD, "model"), "wi_up": (_FD, "model"),
+    "wq_a": (_FD, None), "wq_b": (_FD, "model"),
+    "wkv_a": (_FD, None), "wk_rope": (_FD, None),
+    "wk_b": (_FD, "model"), "wv_b": (_FD, "model"),
+    "in_proj": (_FD, "model"), "w_if": (_FD, None), "wz": (_FD, "model"),
+    "w_in": (_FD, "model"), "w_concat": (_FD, "model"),
+    "router": (_FD, None),
+    "lm_head": (_FD, "model"),
+    # output projections: shard in-dim on model, out-dim on FSDP
+    "wo": ("model", _FD), "out_proj": ("model", _FD), "down": ("model", _FD),
+    # embeddings
+    "table": ("model", _FD),
+    "pos": (None, _FD),
+    # depthwise conv (W, C): channels on model
+    "conv_w": (None, "model"),
+    # sLSTM recurrent mixer (H, hd, 4hd): small; replicate
+    "r": (None, None, None),
+}
+
+# 3D MoE expert banks (E, d, ff)/(E, ff, d): experts on model, d on FSDP
+_RULES_MOE = {
+    "wi_gate": ("model", _FD, None),
+    "wi_up": ("model", _FD, None),
+    "wo": ("model", None, _FD),
+}
+
+
+def _axis_size(mesh_shape, ax):
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= mesh_shape.get(a, 1)
+        return n
+    return mesh_shape.get(ax, 1)
+
+
+def fit_spec(spec, shape, mesh):
+    """jit in_shardings require divisibility; drop axes on dims that don't
+    divide (internal with_sharding_constraint handles padding, the boundary
+    does not)."""
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for i, ax in enumerate(spec):
+        if i >= len(shape):
+            break
+        size = _axis_size(mesh_shape, ax)
+        out.append(ax if (size > 1 and shape[i] % size == 0) or size == 1
+                   else None)
+    return P(*out)
+
+
+def _leaf_spec(path, leaf, fd):
+    keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+    name = keys[-1]
+    stacked = "segments" in keys or "layers" in keys
+    base_ndim = leaf.ndim - (1 if stacked else 0)
+    in_moe = "moe" in keys
+
+    if base_ndim <= 1:
+        spec = (None,) * base_ndim
+    elif in_moe and name in _RULES_MOE and base_ndim == 3:
+        spec = _RULES_MOE[name]
+    elif name in _RULES_2D and base_ndim == len(_RULES_2D[name]):
+        spec = _RULES_2D[name]
+    elif name in _RULES_2D and base_ndim == 2:
+        spec = _RULES_2D[name][:2]
+    else:
+        spec = (None,) * base_ndim
+    spec = tuple(fd if s == _FD else s for s in spec)
+    if stacked:
+        spec = (None,) + spec
+    return P(*spec)
+
+
+def param_specs(params_tree, mesh):
+    fd = data_axes(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: fit_spec(_leaf_spec(p, x, fd), x.shape, mesh),
+        params_tree)
+
+
+def opt_state_specs(opt_state_tree, param_spec_tree):
+    """Adam m/v mirror the param sharding; scalar counts replicate."""
+    def f(spec, leaf_like):
+        return spec
+    # opt state = {"m": params-like, "v": params-like, "count": scalar}
+    return {
+        "m": param_spec_tree,
+        "v": param_spec_tree,
+        "count": P(),
+    }
+
+
+def batch_specs(batch_tree, mesh, *, shardable_batch=True):
+    """Inputs: batch dim over data axes (when divisible), rest replicated."""
+    fd = data_axes(mesh)
+
+    def f(leaf):
+        if leaf.ndim == 0:
+            return P()
+        if not shardable_batch:
+            return P(*([None] * leaf.ndim))
+        if leaf.ndim == 3 and leaf.shape[0] == 3:     # M-RoPE (3, B, S)
+            spec = P(None, fd, *([None] * (leaf.ndim - 2)))
+        else:
+            spec = P(fd, *([None] * (leaf.ndim - 1)))
+        return fit_spec(spec, leaf.shape, mesh)
+
+    return jax.tree.map(f, batch_tree)
+
+
+def decode_state_specs(state_tree, mesh, *, shardable_batch=True):
+    """KV caches: (L, B, T, ...) -> batch on data axes, seq/heads on model.
+
+    When the batch is not shardable (long_500k, B=1) the sequence dim is
+    sharded over *both* data and model axes.
+    """
+    fd = data_axes(mesh)
+    seq_ax = "model" if shardable_batch else (
+        (fd + ("model",)) if isinstance(fd, tuple) else (fd, "model"))
+    b_ax = fd if shardable_batch else None
+
+    def f(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        name = keys[-1]
+        if name == "position" or leaf.ndim <= 1:
+            return P()
+        # all cache leaves carry leading (L, B, ...) dims
+        if name in ("k", "v"):            # (L,B,T,KV,D)
+            spec = P(None, b_ax, seq_ax, None, None)
+        elif name == "pos":               # (L,B,T)
+            spec = P(None, b_ax, seq_ax)
+        elif name in ("c_kv", "k_rope"):  # (L,B,T,r)
+            spec = P(None, b_ax, seq_ax, None)
+        elif name == "conv":              # (L,B,W-1,C)
+            spec = P(None, b_ax, None, "model")
+        elif name == "ssm":               # (L,B,H,hd,N)
+            spec = P(None, b_ax, "model", None, None)
+        elif name == "C":                 # (L,B,H,hd,hd)
+            spec = P(None, b_ax, "model", None, None)
+        elif name in ("n", "c", "m", "h"):  # (L,B,H,hd)
+            spec = P(None, b_ax, "model", None)
+        elif name == "index":             # (L,)
+            spec = P(None)
+        else:
+            spec = P(*([None] * leaf.ndim))
+        return fit_spec(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(f, state_tree)
+
+
+def layer_constraint(mesh):
+    """Constraint applied to the per-layer param slice inside the scan body.
+
+    Paths inside the body lack the 'segments' prefix, so _leaf_spec sees the
+    unstacked shapes.  Via the transpose rule this also pins the gradient
+    cotangent -> per-layer reduce-scatter instead of a whole-stack all-reduce.
+    """
+    fd = data_axes(mesh)
+
+    def constrain(tree):
+        return jax.tree_util.tree_map_with_path(
+            lambda p, x: jax.lax.with_sharding_constraint(
+                x, jax.sharding.NamedSharding(mesh, _leaf_spec(p, x, fd))),
+            tree)
+
+    return constrain
+
+
+def logits_constraint(mesh):
+    """CE chunk logits (B, c, V): vocab on 'model' — keeps the lm_head use
+    and its gradient V-sharded instead of gathering a (d, V) f32 per device."""
+    fd = data_axes(mesh)
+
+    def constrain(logits):
+        return jax.lax.with_sharding_constraint(
+            logits, jax.sharding.NamedSharding(mesh, P(fd, None, "model")))
+
+    return constrain
+
+
+def head_constraint(mesh):
+    """LM head weight inside the CE scan: vocab on 'model', d replicated —
+    gathered once per step instead of once per chunk."""
+    def constrain(w):
+        v_first = w.shape[0] > w.shape[1]      # (V, d) tied vs (d, V) head
+        spec = P("model", None) if v_first else P(None, "model")
+        return jax.lax.with_sharding_constraint(
+            w, jax.sharding.NamedSharding(mesh, spec))
+    return constrain
+
+
+def decode_act_constraint(mesh):
+    """Decode-time h pin: d_model sharded over the data axes (batch
+    replicated).  The (B,1,d) activation then CONTRACTS against the FSDP
+    weight shard locally -> partial matmul + tiny psum, instead of
+    re-gathering ~params/TP bytes of weights every decoded token (GSPMD's
+    dot heuristic otherwise gathers the weight side; measured 18.6GB/step
+    on qwen110b)."""
+    fd = data_axes(mesh)
+
+    def constrain(h):
+        if h.ndim == 3 and h.shape[-1] % 2 == 0:
+            return jax.lax.with_sharding_constraint(
+                h, jax.sharding.NamedSharding(mesh, P(None, None, fd)))
+        return h
+    return constrain
+
+
+def act_constraint(mesh, *, seq_shard=True):
+    """Returns a callable h -> h applying the sequence-parallel activation
+    sharding constraint (B on data, S on model)."""
+    fd = data_axes(mesh)
+
+    def constrain(h):
+        if h.ndim == 3 and seq_shard and h.shape[1] > 1:
+            return jax.lax.with_sharding_constraint(
+                h, jax.sharding.NamedSharding(mesh, P(fd, "model", None)))
+        return h
+
+    return constrain
+
+
+def inner_act_constraint(mesh, *, seq_shard=True, cfg=None):
+    """Megatron-SP block-entry constraint: gather the sequence dim so the
+    'model' axis is free for TP (heads / d_ff / experts) inside the block.
+
+    Without this, seq-sharding and TP fight over 'model' and XLA resolves
+    the conflict by all-gathering FULL weight matrices per device (observed:
+    f32[8192,49152] per-device buffers on qwen110b).  With it, the block
+    boundary becomes the classic SP pattern: all-gather(seq) on entry,
+    reduce-scatter(seq) via the residual-stream constraint on exit.
+
+    Heads-aware refinement (§Perf iteration 2): when the arch's head count
+    does not divide the 'model' axis (gemma3: H=4 on TP=16), head-TP is
+    impossible and gathering the sequence only feeds a full-batch f32
+    re-gather inside attention (measured 537MB x layers x microbatches).
+    In that case the attention input KEEPS its sequence sharding — the
+    chunked reference attention then computes q-row-parallel attention
+    against gathered (small, GQA) k/v.  The MLP side gathers only when
+    d_ff divides the model axis.
+    """
+    fd = data_axes(mesh)
+    n_model = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    attn_gather = True
+    mlp_gather = True
+    if cfg is not None:
+        attn_gather = cfg.num_heads % n_model == 0
+        mlp_gather = (cfg.d_ff % n_model == 0) if cfg.d_ff else False
+
+    def constrain(x, kind="attn"):
+        if x.ndim != 3 or not seq_shard or x.shape[1] <= 1:
+            return x
+        if kind == "residual":
+            # block OUTPUTS pinned REPLICATED over 'model': the wsc
+            # transpose pins the cotangent to the same spec, so a gathered
+            # output means a gathered output-cotangent — which is exactly
+            # what the TP backward needs (dW = h_ff^T @ dy with ff@model,
+            # dy replicated).  A seq-sharded pin instead re-creates the
+            # model-axis conflict and XLA gathers full f32 weights in the
+            # backward (measured 1.6GB x layers x microbatches, qwen110b).
+            spec = P(fd, None, None)
+        else:
+            gather = attn_gather if kind == "attn" else mlp_gather
+            spec = P(fd, None, None) if gather else P(fd, "model", None)
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(mesh, spec))
+
+    return constrain

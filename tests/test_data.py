@@ -1,0 +1,73 @@
+"""Synthetic dataset generators: Table I characters + hypothesis properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics as MX
+from repro.data import synth
+from repro.data.lm import LMConfig, hmm_stream, token_characters
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_ruler_labels():
+    """label = sign(xi . ruler), ruler = (-1, 2, -3, ...)."""
+    r = synth.ruler(4)
+    np.testing.assert_array_equal(np.asarray(r), [-1.0, 2.0, -3.0, 4.0])
+    X = jnp.array([[1.0, 0, 0, 0], [0, 1.0, 0, 0]])
+    y = synth.label_with_ruler(X)
+    np.testing.assert_array_equal(np.asarray(y), [-1.0, 1.0])
+
+
+def test_realsim_like_characters():
+    ds = synth.make_realsim_like(KEY, n=1000, d=500, density=0.03)
+    assert abs(MX.density(ds.X) - 0.03) < 0.005          # Table I: <3%
+    assert float(ds.X.min()) >= 0.0 and float(ds.X.max()) <= 1.0
+    assert set(np.unique(np.asarray(ds.y))) <= {-1.0, 1.0}
+
+
+def test_higgs_like_characters():
+    ds = synth.make_higgs_like(KEY, n=1000)
+    assert ds.X.shape[1] == 28                            # Table I
+    assert float(ds.X.min()) >= -4.0 and float(ds.X.max()) <= 3.0
+    assert MX.density(ds.X) == pytest.approx(1.0)
+
+
+def test_split_fractions():
+    ds = synth.make_higgs_like(KEY, n=1000)
+    tr, va = ds.split(key=KEY)
+    assert tr.X.shape[0] == 700 and va.X.shape[0] == 200  # paper: 70/20
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([0.1, 0.3, 0.6, 0.9]))
+def test_ls_mutation_monotone(frac):
+    """C_sim grows monotonically with the mutation fraction."""
+    a = synth.make_ls_sequence(KEY, n=200, d=40, mutate_frac=frac)
+    b = synth.make_ls_sequence(KEY, n=200, d=40, mutate_frac=min(1.0, frac + 0.3) if frac < 0.7 else frac)
+    ca, cb = MX.csim_ref(a.X, 4), MX.csim_ref(b.X, 4)
+    if frac < 0.7:
+        assert ca < cb + 1e-6
+
+
+def test_ls_sparse_keeps_density():
+    ds = synth.make_ls_sequence(KEY, n=300, d=100, mutate_frac=0.1,
+                                density=0.05, lo=0, hi=1)
+    assert MX.density(ds.X) < 0.12
+
+
+def test_hmm_stream_learnable_and_shaped():
+    cfg = LMConfig(vocab_size=512, seq_len=32, batch_size=4)
+    batches = list(hmm_stream(KEY, cfg, 3))
+    assert len(batches) == 3
+    b = batches[0]
+    assert b["tokens"].shape == (4, 32) and b["labels"].shape == (4, 32)
+    assert int(b["tokens"].max()) < 512
+    # labels are next-token shifted
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+    ch = token_characters(b["tokens"])
+    assert 0 < ch["sequence_diversity"] <= 1.0

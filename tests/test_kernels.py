@@ -1,0 +1,145 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)
++ hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import quantize_stochastic as quantize_oracle
+from repro.core.metrics import csim_ref, l0_distance
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,KV,D,window", [
+    (1, 64, 2, 2, 32, 0),
+    (2, 128, 4, 2, 64, 0),
+    (2, 200, 4, 1, 64, 0),        # ragged seq (padding path)
+    (1, 256, 8, 8, 128, 0),       # MHA
+    (2, 128, 4, 2, 64, 32),       # sliding window
+    (1, 96, 6, 3, 48, 16),        # odd head dim / window
+])
+def test_flash_attention_matches_ref(B, S, H, KV, D, window, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, D), dtype)
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              bq=64, bk=64)
+    r = ref.attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), causal=True,
+                          window=window).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_block_shape_independence():
+    """Output must not depend on the BlockSpec tiling."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 32))
+    k = jax.random.normal(ks[1], (1, 128, 2, 32))
+    v = jax.random.normal(ks[2], (1, 128, 2, 32))
+    a = ops.flash_attention(q, k, v, bq=32, bk=32)
+    b = ops.flash_attention(q, k, v, bq=128, bk=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# csim / l0
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,d,rng", [(32, 16, 1), (100, 60, 5), (64, 33, 8)])
+def test_csim_matches_ref(n, d, rng):
+    X = jax.random.normal(KEY, (n, d))
+    np.testing.assert_allclose(float(ops.csim(X, rng)), csim_ref(X, rng),
+                               rtol=1e-6)
+
+
+def test_l0_rows_matches_ref():
+    x = jax.random.normal(KEY, (70, 45))
+    y = jnp.where(jax.random.bernoulli(jax.random.PRNGKey(1), 0.5, x.shape),
+                  x, 0.0)
+    np.testing.assert_allclose(np.asarray(ops.l0_rows(x, y)),
+                               np.asarray(ref.l0_rows_ref(x, y)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 40), st.integers(1, 30), st.integers(1, 6))
+def test_csim_permutation_invariant_total(n, d, rng):
+    """Property: csim of identical rows is 0; of disjoint-support rows it's
+    bounded by d."""
+    X = jnp.ones((n, d))
+    assert csim_ref(X, min(rng, n - 1)) == 0.0
+    X2 = jnp.eye(n, d)
+    v = csim_ref(X2, min(rng, n - 1))
+    assert 0.0 <= v <= d
+
+
+# ---------------------------------------------------------------------------
+# quantize
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [4, 8, 16])
+@pytest.mark.parametrize("shape", [(16, 16), (64, 32), (7, 129)])
+def test_quantize_matches_oracle(bits, shape):
+    x = jax.random.normal(KEY, shape)
+    q, s = ops.quantize_stochastic(x, KEY, bits=bits)
+    qr, sr = quantize_oracle(x, KEY, bits=bits)
+    assert float(s) == pytest.approx(float(sr))
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+
+
+def test_quantize_error_bound():
+    x = jax.random.normal(KEY, (64, 64))
+    q, s = ops.quantize_stochastic(x, KEY, bits=8)
+    err = np.abs(np.asarray(ops.dequantize(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) * 1.0001   # stochastic rounding: < 1 ulp
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 5))
+def test_quantize_unbiased(seed):
+    """E[C(x)] = x (paper Eq. 7 requirement) — mean over many keys."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (8, 8))
+    keys = jax.random.split(jax.random.PRNGKey(seed + 100), 256)
+    deqs = [ops.dequantize(*ops.quantize_stochastic(x, k, bits=8))
+            for k in keys[:64]]
+    mean = np.mean([np.asarray(d) for d in deqs], axis=0)
+    q, s = ops.quantize_stochastic(x, keys[0], bits=8)
+    assert np.abs(mean - np.asarray(x)).max() < 3 * float(s)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n,d", [(8, 64), (300, 128), (5, 1152)])
+def test_rmsnorm_matches_ref(n, d, dtype):
+    x = jax.random.normal(KEY, (n, d), dtype)
+    g = jax.random.normal(jax.random.PRNGKey(1), (d,), dtype)
+    out = ops.rmsnorm(x, g)
+    r = ref.rmsnorm_ref(x, g)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(r, np.float32), atol=2e-2
+                               if dtype == jnp.bfloat16 else 1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.1, 100.0))
+def test_rmsnorm_scale_invariance(alpha):
+    """Property: rmsnorm(a x) == rmsnorm(x) for a > 0."""
+    x = jax.random.normal(KEY, (4, 32))
+    g = jnp.ones((32,))
+    a = ops.rmsnorm(x * alpha, g)
+    b = ops.rmsnorm(x, g)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-3)

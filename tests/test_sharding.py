@@ -1,0 +1,124 @@
+"""Sharding rules: spec construction, divisibility fitting, and a small
+real-mesh train/serve step in a subprocess (8 virtual devices)."""
+
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import get_arch
+from repro.launch import specs as S
+from repro.launch.hlo_stats import collective_stats, total_collective_bytes
+from repro.sharding.rules import fit_spec, _leaf_spec, data_axes
+
+
+class _FakeMesh:
+    def __init__(self, shape, names):
+        import numpy as np
+        self.axis_names = names
+        self.devices = np.zeros(shape)
+
+    @property
+    def shape(self):
+        return dict(zip(self.axis_names, self.devices.shape))
+
+
+MESH = _FakeMesh((16, 16), ("data", "model"))
+
+
+def test_fit_spec_drops_nondivisible_axes():
+    assert fit_spec(P("model", "data"), (51865, 768), MESH) == P(None, "data")
+    assert fit_spec(P("model", "data"), (51872, 768), MESH) == P("model", "data")
+    assert fit_spec(P(None, "model"), (4, 4), MESH) == P(None, None)
+
+
+def test_param_specs_structure():
+    from repro.sharding import param_specs
+    cfg = get_arch("qwen2.5-3b")
+    shapes = S.param_shapes(cfg)
+    specs = param_specs(shapes, MESH)
+    # stacked segment weight: leading layer dim never sharded
+    seg = specs["segments"][0]
+    assert seg["attn"]["wq"][0] is None
+    assert "model" in seg["attn"]["wq"]
+    assert specs["embed"]["table"] == P("model", "data")
+
+
+def test_leaf_spec_moe_expert_parallel():
+    import jax.tree_util as jtu
+    cfg = get_arch("arctic-480b")
+    shapes = S.param_shapes(cfg)
+    flat = jtu.tree_flatten_with_path(shapes)[0]
+    # the expert bank is the 4D (L, E, d, ff) leaf (dense_residual is 3D)
+    moe_wi = [x for p, x in flat
+              if "moe" in str(p) and str(p).endswith(
+                  "DictKey(key='wi_gate'))") and x.ndim == 4][0]
+    spec = _leaf_spec(
+        [jtu.DictKey("segments"), jtu.SequenceKey(0), jtu.DictKey("moe"),
+         jtu.DictKey("wi_gate")], moe_wi, "data")
+    assert spec == P(None, "model", "data", None)   # (L, E, d, ff)
+
+
+def test_hlo_stats_parser():
+    hlo = textwrap.dedent("""
+      %ag = bf16[16,1024] all-gather(%x), replica_groups=[2,2]
+      %ar.1 = (f32[8,8], f32[4]) all-reduce(%y, %z), channel_id=1
+      %cp = f32[128] collective-permute(%w)
+      %ar.s = f32[8] all-reduce-start(%q)
+      %ar.d = f32[8] all-reduce-done(%ar.s)
+    """)
+    st = collective_stats(hlo)
+    assert st["all-gather"]["count"] == 1
+    assert st["all-gather"]["bytes"] == 16 * 1024 * 2
+    assert st["all-reduce"]["count"] == 2      # tuple one + start (not done)
+    assert st["all-reduce"]["bytes"] == 8 * 8 * 4 + 4 * 4 + 8 * 4
+    assert total_collective_bytes(hlo) > 0
+
+
+SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys; sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp
+    from repro.configs.registry import get_arch
+    from repro.launch.dryrun import lower_pair
+    from repro.launch.mesh import make_debug_mesh
+    import dataclasses
+    mesh = make_debug_mesh(data=2, model=2, pod=2)
+    # reduced config through the REAL dryrun path on a tiny mesh
+    import repro.launch.dryrun as DR
+    import repro.configs.registry as REG
+    cfg = get_arch("qwen2.5-3b").reduced()
+    orig = DR.arch_for_pair
+    DR.arch_for_pair = lambda a, s: cfg
+    from repro.configs.base import INPUT_SHAPES, InputShape
+    INPUT_SHAPES["tiny_train"] = InputShape("tiny_train", 64, 8, "train")
+    INPUT_SHAPES["tiny_decode"] = InputShape("tiny_decode", 64, 8, "decode")
+    for shape in ("tiny_train", "tiny_decode"):
+        lowered, meta = lower_pair("qwen2.5-3b", shape, mesh, microbatches=2)
+        compiled = lowered.compile()
+        assert compiled.cost_analysis() is not None
+        print(shape, "OK", int(compiled.memory_analysis().temp_size_in_bytes))
+""")
+
+
+@pytest.mark.slow
+def test_real_mesh_lowering_subprocess():
+    """Multi-pod (2,2,2) debug mesh: lower+compile train & decode steps."""
+    r = subprocess.run([sys.executable, "-c", SUBPROC], cwd=".",
+                       capture_output=True, text=True, timeout=420)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "tiny_train OK" in r.stdout and "tiny_decode OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_gossip_strategy_subprocess():
+    """ECD-PSGD gossip step descends on a real (4 data x 2 model) mesh."""
+    r = subprocess.run([sys.executable, "examples/gossip_ecd_psgd.py"],
+                       cwd=".", capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout
