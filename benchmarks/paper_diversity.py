@@ -1,45 +1,32 @@
 """Paper Figure 6 — sample-diversity experiment.
 
-real_sim / real_sim2 / real_sim4 duplication variants on DADM and mini-batch
-SGD; higher diversity => larger parallel gap (better scalability).
+Thin adapter over `repro.experiments` (spec: ``diversity``): the
+real_sim / real_sim2 / real_sim4 duplication variants run on DADM and
+mini-batch SGD through the vmapped engine; higher diversity => larger
+parallel gap (better scalability).
 """
 
 from __future__ import annotations
 
-import time
-
-import jax
-
 from benchmarks.common import emit, loss_gap, save_json
-from repro.core.algorithms import run_dadm, run_minibatch
-from repro.data import synth
-
-MS = [1, 4, 16]
+from repro.experiments import curves_by_m, get_spec, run_sweep
 
 
 def run(iters=800, n=1600, quick=False):
-    if quick:
-        iters, n = 400, 800
-    key = jax.random.PRNGKey(0)
-    base = synth.make_realsim_like(key, n=n, d=300, density=0.05)
-    high, mid, low = synth.make_diversity_variants(base)
+    spec = (get_spec("diversity", quick=True) if quick
+            else get_spec("diversity", iters=iters, n=n))
+    # benchmarks measure: always recompute (the cache serves CLI/library use)
+    res = run_sweep(spec, force=True)
+
     out = {}
-    t0 = time.time()
-    for name, ds in [("high", high), ("mid", mid), ("low", low)]:
-        tr, te = ds.split(key=key)
-        for algo, runner, kwname in [("dadm", run_dadm, "m"),
-                                     ("minibatch", run_minibatch,
-                                      "batch_size")]:
-            curves = {}
-            for m in MS:
-                r = runner(tr, te, iters=iters, eval_every=iters // 8,
-                           **{kwname: m})
-                curves[m] = [float(x) for x in r["losses"]]
-            out[f"{name}/{algo}"] = {
-                "curves": curves,
-                "gap_1_16": loss_gap(curves[1], curves[16]),
-            }
-    us = (time.time() - t0) * 1e6 / (len(MS) * 6)
+    for key, jr in res["jobs"].items():
+        algo, variant = key.split("/", 1)
+        curves = curves_by_m(jr)
+        out[f"{variant}/{algo}"] = {
+            "curves": curves,
+            "gap_1_16": loss_gap(curves[1], curves[16]),
+        }
+    us = res["elapsed_s"] * 1e6 / (len(spec.ms) * len(res["jobs"]))
     save_json("paper_diversity", out)
     gaps = {k: out[f"{k}/dadm"]["gap_1_16"] for k in ("high", "mid", "low")}
     emit("fig6_dadm_diversity_gaps", us,

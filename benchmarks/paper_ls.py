@@ -1,68 +1,30 @@
 """Paper Figures 7-10 — LS_A(D, S) (local-similarity) experiment.
 
-Sequences built by mutating 10% (small C_sim => LOW local distance) vs 90%
-(large C_sim) of features per step (§VII.A), fed in sequence order.
+Thin adapter over `repro.experiments` (spec: ``ls``): sequences built by
+mutating 10% (small C_sim => LOW local distance) vs 90% (large C_sim) of
+features per step (§VII.A), fed in sequence order (no shuffle) through the
+vmapped engine.
 NOTE paper semantics: LARGE C_sim (= large local L0 distance = neighbors
 DIFFER more) => better scalability.  Read-outs follow §VII.D.
 """
 
 from __future__ import annotations
 
-import time
-
-import jax
-
 from benchmarks.common import emit, loss_gap, save_json
-from repro.core import metrics as MX
-from repro.core.algorithms import (run_dadm, run_ecd_psgd, run_hogwild,
-                                   run_minibatch)
-from repro.data import synth
-
-MS = [1, 4, 8]
+from repro.experiments import curves_by_m, get_spec, run_sweep
 
 
 def run(iters=1200, n=2400, quick=False):
-    if quick:
-        iters, n = 500, 1000
-    key = jax.random.PRNGKey(0)
-    # paper: dense for mini-batch (28) / ECD-PSGD (1000 -> scaled 200);
-    # sparse for Hogwild!/DADM
-    variants = {
-        "small_ls_dense": synth.make_ls_sequence(key, n=n, d=28,
-                                                 mutate_frac=0.1),
-        "large_ls_dense": synth.make_ls_sequence(key, n=n, d=28,
-                                                 mutate_frac=0.9),
-        "small_ls_sparse": synth.make_ls_sequence(key, n=n, d=200,
-                                                  mutate_frac=0.1,
-                                                  density=0.05, lo=0, hi=1),
-        "large_ls_sparse": synth.make_ls_sequence(key, n=n, d=200,
-                                                  mutate_frac=0.9,
-                                                  density=0.05, lo=0, hi=1),
-    }
-    out = {"csim": {k: MX.csim_ref(v.X[:400], 8)
-                    for k, v in variants.items()}}
-    t0 = time.time()
+    spec = (get_spec("ls", quick=True) if quick
+            else get_spec("ls", iters=iters, n=n))
+    # benchmarks measure: always recompute (the cache serves CLI/library use)
+    res = run_sweep(spec, force=True)
 
-    def curves_for(runner, ds, kwname):
-        tr, te = ds.split()          # NO shuffle: sequence order is the point
-        res = {}
-        for m in MS:
-            r = runner(tr, te, iters=iters, eval_every=iters // 8,
-                       **{kwname: m})
-            res[m] = [float(x) for x in r["losses"]]
-        return res
-
-    # fig 7: mini-batch on dense LS variants
-    for tag in ("small_ls_dense", "large_ls_dense"):
-        out[f"minibatch/{tag}"] = curves_for(run_minibatch, variants[tag],
-                                             "batch_size")
-        out[f"ecd_psgd/{tag}"] = curves_for(run_ecd_psgd, variants[tag], "m")
-    # fig 9/10: hogwild + dadm on sparse LS variants
-    for tag in ("small_ls_sparse", "large_ls_sparse"):
-        out[f"hogwild/{tag}"] = curves_for(run_hogwild, variants[tag], "m")
-        out[f"dadm/{tag}"] = curves_for(run_dadm, variants[tag], "m")
-
-    us = (time.time() - t0) * 1e6 / (len(MS) * 8)
+    out = {"csim": {k: res["datasets"][k]["csim"]
+                    for k in res["datasets"]}}
+    for key, jr in res["jobs"].items():          # key is "algo/tag" already
+        out[key] = curves_by_m(jr)
+    us = res["elapsed_s"] * 1e6 / (len(spec.ms) * len(res["jobs"]))
     save_json("paper_ls", out)
 
     g_small = loss_gap(out["minibatch/small_ls_dense"][1],

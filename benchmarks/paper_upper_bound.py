@@ -1,77 +1,47 @@
 """Paper Table II — scalability upper-bound experiment.
 
-Iterations-per-worker to reach a fixed epsilon, for m in {2,4,8,16,24},
-on each algorithm's best-performing dataset (Hogwild!: the 70%-density
-simulated set whose bound is reachable; mini-batch/ECD-PSGD: dense;
-DADM: 1/8-subsampled sparse, per §VII.E).  The upper bound is the m where
-cost stops decreasing (gain growth <= 0) — plus the theory-side predictions
-from the dataset characters.
+Thin adapter over `repro.experiments` (spec: ``upper_bound``): iterations
+per worker to reach a fixed epsilon, for m in {2,4,8,16,24}, on each
+algorithm's best-performing dataset (Hogwild!: the 70%-density simulated
+set whose bound is reachable; mini-batch/ECD-PSGD: dense; DADM:
+1/8-subsampled sparse, per §VII.E).  The epsilon schedule, cost/gain-growth
+bookkeeping and the theory-side predictions all live in the engine now;
+this module reshapes its result into the legacy JSON/CSV contract.
 """
 
 from __future__ import annotations
 
-import math
-import time
-
-import jax
-import numpy as np
-
 from benchmarks.common import emit, save_json
-from repro.core import scalability as SC
-from repro.core.algorithms import (run_dadm, run_ecd_psgd, run_hogwild,
-                                   run_minibatch)
-from repro.data import synth
+from repro.experiments import get_spec, run_sweep
 
-MS = [2, 4, 8, 16, 24]
+# engine job key -> legacy (algorithm, predicted-entry) naming
+_JOBS = {
+    "hogwild/ub": ("hogwild", "hogwild_on_ub"),
+    "minibatch/dense": ("minibatch", "sync_on_dense"),
+    "ecd_psgd/dense": ("ecd_psgd", None),
+    "dadm/sparse8": ("dadm", "dadm_on_sparse8"),
+}
 
 
 def run(iters=3000, quick=False):
-    if quick:
-        iters = 1200
-    key = jax.random.PRNGKey(0)
-    ub = synth.make_upper_bound_dataset(key, n=4000, d=400, density=0.7)
-    dense = synth.make_higgs_like(key, n=4000, d=28)
-    sparse8 = synth.make_realsim_like(key, n=1000, d=300, density=0.05)
+    spec = (get_spec("upper_bound", quick=True) if quick
+            else get_spec("upper_bound", iters=iters))
+    # benchmarks measure: always recompute (the cache serves CLI/library use)
+    res = run_sweep(spec, force=True)
+
     out = {"costs": {}, "upper_bounds": {}, "predicted": {}}
-    t0 = time.time()
-
-    def eps_for(runner, ds, kwname, frac=0.7, **kw):
-        """epsilon = the loss the 2-worker run reaches after `frac` of its
-        budget — reachable by all settings, discriminative between them."""
-        tr, te = ds.split(key=key)
-        probe = runner(tr, te, iters=iters, eval_every=iters // 20,
-                       **{kwname: 2}, **kw)
-        losses = np.array(probe["losses"])
-        eps = float(losses[int(len(losses) * frac)])
-        return (tr, te), eps
-
-    jobs = [
-        ("hogwild", run_hogwild, ub, "m", True, {"gamma": 0.05}),
-        ("minibatch", run_minibatch, dense, "batch_size", False, {}),
-        ("ecd_psgd", run_ecd_psgd, dense, "m", False, {}),
-        ("dadm", run_dadm, sparse8, "m", False, {}),
-    ]
-    for name, runner, ds, kwname, is_async, kw in jobs:
-        (tr, te), eps = eps_for(runner, ds, kwname, **kw)
-        costs = []
-        for m in MS:
-            r = runner(tr, te, iters=iters, eval_every=iters // 20,
-                       **{kwname: m}, **kw)
-            c = SC.cost_per_worker(r, eps, asynchronous=is_async)
-            costs.append(c if math.isfinite(c) else float(iters))
-        gg = SC.gain_growth_from_costs(costs)
-        bound = SC.measured_upper_bound(MS[:-1], gg)
-        out["costs"][name] = dict(zip(map(str, MS), costs))
-        out["upper_bounds"][name] = bound
-    out["predicted"]["hogwild_on_ub"] = SC.predict_hogwild_mmax(ub.X)
-    out["predicted"]["sync_on_dense"] = SC.predict_sync_mmax(dense.X)
-    out["predicted"]["dadm_on_sparse8"] = SC.predict_dadm_mmax(sparse8.X[:600])
-    us = (time.time() - t0) * 1e6 / (len(MS) * len(jobs))
+    for key, (name, pred_key) in _JOBS.items():
+        jr = res["jobs"][key]
+        out["costs"][name] = dict(zip(map(str, jr["ms"]), jr["costs"]))
+        out["upper_bounds"][name] = jr["measured_m_max"]
+        if pred_key is not None:
+            out["predicted"][pred_key] = jr["predicted"]
+    us = res["elapsed_s"] * 1e6 / (len(spec.ms) * len(_JOBS))
     save_json("paper_upper_bound", out)
     for name in out["costs"]:
         costs = list(out["costs"][name].values())
         emit(f"tableII_{name}_cost_per_worker", us,
-             ";".join(f"m{m}={c:.0f}" for m, c in zip(MS, costs))
+             ";".join(f"m{m}={c:.0f}" for m, c in zip(spec.ms, costs))
              + f";bound_at_m={out['upper_bounds'][name]}")
     return out
 

@@ -1,7 +1,9 @@
 """Paper Figures 3/4/5 — feature-variance & sparsity experiment.
 
-Dense/high-variance (HIGGS-like) vs sparse/low-variance (real-sim-like)
-datasets on mini-batch SGD, ECD-PSGD and Hogwild!, m in {1,2,4,8}.
+Thin adapter over `repro.experiments` (spec: ``variance_sparsity``): the
+dense/high-variance (HIGGS-like) vs sparse/low-variance (real-sim-like)
+m-sweep runs through the vmapped engine; this module only reshapes the
+sweep result into the legacy JSON payload and CSV emit contract.
 Read-outs (paper §VII):
   * mini-batch & ECD-PSGD: larger gap between worker counts = better
     parallel effect -> expected LARGE on dense, ~zero on sparse.
@@ -10,39 +12,23 @@ Read-outs (paper §VII):
 
 from __future__ import annotations
 
-import time
-
-import jax
-
 from benchmarks.common import emit, loss_gap, save_json
-from repro.core.algorithms import run_ecd_psgd, run_hogwild, run_minibatch
-from repro.data import synth
-
-MS = [1, 2, 4, 8]
+from repro.experiments import curves_by_m, get_spec, run_sweep
 
 
 def run(iters=1500, n=2000, quick=False):
-    if quick:
-        iters, n = 600, 1000
-    key = jax.random.PRNGKey(0)
-    dense = synth.make_higgs_like(key, n=n, d=28).split(key=key)
-    sparse = synth.make_realsim_like(key, n=n, d=400, density=0.05
-                                     ).split(key=key)
+    spec = (get_spec("variance_sparsity", quick=True) if quick
+            else get_spec("variance_sparsity", iters=iters, n=n))
+    # benchmarks measure: always recompute (the cache serves CLI/library use)
+    res = run_sweep(spec, force=True)
+
     out = {}
-    t0 = time.time()
-    for ds_name, (tr, te) in [("higgs_like", dense), ("realsim_like", sparse)]:
-        for algo, runner, kwname in [
-                ("minibatch", run_minibatch, "batch_size"),
-                ("ecd_psgd", run_ecd_psgd, "m"),
-                ("hogwild", run_hogwild, "m")]:
-            curves = {}
-            for m in MS:
-                r = runner(tr, te, iters=iters, eval_every=iters // 10,
-                           **{kwname: m})
-                curves[m] = [float(x) for x in r["losses"]]
-            gap_1_8 = loss_gap(curves[1], curves[8])
-            out[f"{ds_name}/{algo}"] = {"curves": curves, "gap_1_8": gap_1_8}
-    us = (time.time() - t0) * 1e6 / (len(MS) * 6)
+    for key, jr in res["jobs"].items():
+        algo, ds_name = key.split("/", 1)
+        curves = curves_by_m(jr)
+        out[f"{ds_name}/{algo}"] = {"curves": curves,
+                                    "gap_1_8": loss_gap(curves[1], curves[8])}
+    us = res["elapsed_s"] * 1e6 / (len(spec.ms) * len(res["jobs"]))
     save_json("paper_variance_sparsity", out)
 
     # paper-claim read-outs

@@ -1,6 +1,7 @@
 """The paper, end-to-end: build the Table-I-style datasets, measure their
 characters, run all four parallel algorithms across worker counts, compare
-the measured scalability against the characters' predictions.
+the measured scalability against the characters' predictions — all through
+the `repro.experiments` sweep engine (spec: ``scalability_study``).
 
   PYTHONPATH=src python examples/paper_scalability_study.py          (quick)
   PYTHONPATH=src python examples/paper_scalability_study.py --full
@@ -8,39 +9,35 @@ the measured scalability against the characters' predictions.
 
 import argparse
 
-import jax
 import numpy as np
 
-from repro.core import metrics as MX
-from repro.core import scalability as SC
-from repro.core.algorithms import (run_dadm, run_ecd_psgd, run_hogwild,
-                                   run_minibatch)
-from repro.data import synth
+from repro.experiments import curves_by_m, get_spec, run_sweep
+
+DISPLAY = {"higgs_like": "higgs_like(dense)",
+           "realsim_like": "realsim_like(sparse)"}
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute even if the sweep artifact is cached")
     args = ap.parse_args()
-    iters = 3000 if args.full else 800
-    n = 4000 if args.full else 1500
-    key = jax.random.PRNGKey(0)
 
-    datasets = {
-        "higgs_like(dense)": synth.make_higgs_like(key, n=n, d=28),
-        "realsim_like(sparse)": synth.make_realsim_like(key, n=n, d=400,
-                                                        density=0.05),
-    }
+    spec = get_spec("scalability_study", quick=not args.full)
+    res = run_sweep(spec, force=args.force)
+
     print("=" * 72)
     print("dataset characters (paper §IV)")
     print("=" * 72)
-    for name, ds in datasets.items():
-        c = MX.summarize(ds.X[:800], tau_max=8, batch_size=8)
+    for ds_name, info in res["datasets"].items():
+        name = DISPLAY[ds_name]
+        c = info["characters"]
         print(f"{name:24s} var={c['mean_feature_variance']:.3f} "
               f"sparsity={c['sparsity']:.3f} div={c['diversity_ratio']:.2f} "
               f"csim={c['csim_async']:.1f}")
-        hw = SC.predict_hogwild_mmax(ds.X[:800])
-        sy = SC.predict_sync_mmax(ds.X[:800])
+        hw = res["jobs"][f"hogwild/{ds_name}"]["predicted"]
+        sy = res["jobs"][f"minibatch/{ds_name}"]["predicted"]
         print(f"{'':24s} predicted m_max: hogwild={hw['predicted_m_max']} "
               f"sync={sy['predicted_m_max']}")
 
@@ -48,21 +45,19 @@ def main():
     print("=" * 72)
     print("measured scalability (gap between m=1 and m=8 convergence curves)")
     print("=" * 72)
-    for name, ds in datasets.items():
-        tr, te = ds.split(key=key)
-        for algo, runner, kw in [("minibatch", run_minibatch, "batch_size"),
-                                 ("hogwild", run_hogwild, "m"),
-                                 ("ecd_psgd", run_ecd_psgd, "m"),
-                                 ("dadm", run_dadm, "m")]:
-            r1 = runner(tr, te, iters=iters, eval_every=iters // 8, **{kw: 1})
-            r8 = runner(tr, te, iters=iters, eval_every=iters // 8, **{kw: 8})
-            gap = float(np.mean(np.array(r1["losses"])
-                                - np.array(r8["losses"])))
+    for ds_name in res["datasets"]:
+        name = DISPLAY[ds_name]
+        for algo in ("minibatch", "hogwild", "ecd_psgd", "dadm"):
+            curves = curves_by_m(res["jobs"][f"{algo}/{ds_name}"])
+            gap = float(np.mean(np.array(curves[1]) - np.array(curves[8])))
             print(f"{name:24s} {algo:10s} gap(m1->m8)={gap:+.4f} "
-                  f"final(m8)={r8['losses'][-1]:.4f}")
+                  f"final(m8)={curves[8][-1]:.4f}")
     print()
     print("paper conclusion check: dense/high-variance should show the big "
           "minibatch/ecd gaps; sparse should show ~zero Hogwild! penalty.")
+    cache = res.get("cache", {})
+    if cache.get("hit"):
+        print(f"(served from sweep cache: {cache['path']})")
 
 
 if __name__ == "__main__":

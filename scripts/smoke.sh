@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# Smoke check: tier-1 tests + one engine sweep + the README quickstart
+# commands as written.  ~10-15 min cold on CPU (sweeps are cached, so
+# re-runs are much faster).  SMOKE_FULL=1 additionally runs the whole
+# benchmark harness instead of a single representative entry.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== [1/5] tier-1 test suite =="
+python -m pytest -x -q
+
+echo "== [2/5] sweep engine: registered specs =="
+python -m repro.experiments.run --list
+
+echo "== [3/5] sweep engine: Table II (upper_bound) quick =="
+python -m repro.experiments.run --spec upper_bound --quick
+
+echo "== [4/5] benchmark harness =="
+if [ "${SMOKE_FULL:-0}" = "1" ]; then
+    python -m benchmarks.run
+else
+    python -m benchmarks.run --only paper_diversity
+fi
+
+echo "== [5/5] end-to-end paper study (quick) =="
+python examples/paper_scalability_study.py
+
+echo "smoke OK"

@@ -1,0 +1,6 @@
+"""repro.configs — the 10 assigned model architectures as `ArchConfig`
+dataclasses (one module each) plus `registry.get_arch` / `ARCH_IDS` lookup
+and the (arch x input-shape) applicability matrix.  `base.py` defines the
+config schema and the canonical input shapes.  `repro.experiments` mirrors
+this registry pattern for sweep specs.
+"""

@@ -1,3 +1,10 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""repro.core — the paper's substance.  `metrics` computes the §IV dataset
+characters (feature variance, sparsity, diversity, C_sim/LS_A);
+`algorithms` implements the four parallel training algorithms under the
+Perfect Computer Assumption; `scalability` turns convergence curves into
+gain/gain-growth/upper-bound readouts and predicts m_max from the
+characters (§V); `advisor` packages those predictions as a framework
+feature for the production training stack; `compression` holds the
+stochastic quantizer ECD-PSGD gossips with.  The sweep engine in
+`repro.experiments` drives all of it.
+"""

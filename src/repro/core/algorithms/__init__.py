@@ -1,3 +1,13 @@
+"""The paper's four parallel training algorithms on its Eq. 4 model
+(L2-regularized logistic regression, `lr.py`): Hogwild! (Alg 1, async,
+deterministic staleness simulation), mini-batch SGD (Alg 2, batch size =
+degree of parallelism), DADM (Alg 3, distributed dual coordinate ascent)
+and ECD-PSGD (Alg 4, decentralized ring gossip with compression).  Each
+`run_*` returns the shared result contract ({"losses", "m", "iters",
+"eval_every", ...}) the scalability machinery consumes; the m-grid batched
+versions live in `repro.experiments.engine`.
+"""
+
 from repro.core.algorithms.lr import logloss, lr_grad, test_logloss
 from repro.core.algorithms.hogwild import run_hogwild
 from repro.core.algorithms.minibatch import run_minibatch

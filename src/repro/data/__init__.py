@@ -1,0 +1,7 @@
+"""repro.data — dataset construction.  `synth` builds the paper's Table-I
+analogues offline (HIGGS-like dense, real-sim-like sparse, LS-controlled
+sampling sequences, diversity-duplication variants, the §VII.E upper-bound
+set) with the ruler labeling rule; `lm` streams HMM token data with
+measurable characters for the language-model tier.  Sweep specs reference
+these generators by name via `repro.experiments.spec.GENERATORS`.
+"""

@@ -1,0 +1,22 @@
+"""repro.experiments — the unified scalability-sweep engine.
+
+This package turns the paper's experiments (worker-count m x dataset
+character x algorithm) into declarative, cacheable sweeps: `spec` defines
+the :class:`SweepSpec` language and dataset materialization, `registry`
+names one spec per paper figure/table, `engine` runs the synchronous
+algorithms over the whole worker grid as a single vmapped simulation
+(Hogwild! stays sequential), `runner.run_sweep` orchestrates a spec end to
+end with content-hashed artifact caching, and ``python -m
+repro.experiments.run`` is the CLI that reproduces any figure from a spec
+name.  The legacy `benchmarks/paper_*.py` scripts are thin adapters over
+this package.  See docs/architecture.md.
+"""
+
+from repro.experiments.registry import SPEC_IDS, get_spec
+from repro.experiments.runner import curves_by_m, run_sweep
+from repro.experiments.spec import (ALGORITHMS, DatasetSpec, EpsilonSpec,
+                                    JobSpec, SweepSpec, fingerprint)
+
+__all__ = ["SPEC_IDS", "get_spec", "run_sweep", "curves_by_m", "ALGORITHMS",
+           "DatasetSpec", "EpsilonSpec", "JobSpec", "SweepSpec",
+           "fingerprint"]

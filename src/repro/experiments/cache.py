@@ -1,0 +1,55 @@
+"""Content-hashed on-disk artifact cache for sweep results.
+
+Layout: ``<cache_dir>/<spec-name>-<fingerprint16>.json`` where the
+fingerprint is `spec.fingerprint(spec)` — a sha256 over the canonical spec
+dict plus ``ENGINE_VERSION``.  Any change to the spec (grid, iters, dataset
+kwargs, epsilon policy, ...) or to the engine version lands on a different
+file, so a hit is always safe to reuse and repeated sweeps are free.
+
+The default directory is ``results/sweep_cache`` (override with the
+``REPRO_SWEEP_CACHE`` environment variable or the ``cache_dir`` argument).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Dict, Optional
+
+DEFAULT_CACHE_DIR = os.environ.get(
+    "REPRO_SWEEP_CACHE", os.path.join("results", "sweep_cache"))
+
+
+def artifact_path(cache_dir: str, name: str, fp: str) -> str:
+    return os.path.join(cache_dir, f"{name}-{fp[:16]}.json")
+
+
+def load(cache_dir: str, name: str, fp: str) -> Optional[Dict]:
+    """Return the cached payload, or None on miss / unreadable artifact."""
+    path = artifact_path(cache_dir, name, fp)
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+    if payload.get("fingerprint") != fp:      # stale / truncated artifact
+        return None
+    return payload
+
+
+def store(cache_dir: str, name: str, fp: str, payload: Dict) -> str:
+    """Atomically write the payload; returns the artifact path."""
+    os.makedirs(cache_dir, exist_ok=True)
+    path = artifact_path(cache_dir, name, fp)
+    payload = {**payload, "fingerprint": fp}
+    fd, tmp = tempfile.mkstemp(dir=cache_dir, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, default=float)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    return path

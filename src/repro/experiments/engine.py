@@ -1,0 +1,254 @@
+"""Batched m-sweep kernels: one `jax.vmap` over the whole worker grid.
+
+The legacy benchmarks re-ran each algorithm once per worker count m in a
+Python loop — S separate traces, S compilations, S dispatch chains.  Here
+each synchronous algorithm (mini-batch SGD, ECD-PSGD, DADM) is re-derived
+as a *masked, padded* simulation over a fixed worker axis of size
+``m_max = max(ms)`` in which the actual worker count m is ordinary traced
+data:
+
+  * workers with index >= m are masked out of every reduction (gradient
+    average, ring average, dual all-gather), so the padded run is
+    numerically the m-worker run;
+  * the per-iteration sample draw is a single shared ``(iters, m_max)``
+    index tensor — sweep member m consumes its first m columns, so growing
+    m adds workers without reshuffling the ones already present;
+  * the whole grid then runs as ``jax.vmap(sim)(ms)`` — one trace, one
+    compile, one `lax.scan` pipeline for every m at once.
+
+Every sweep function also takes ``use_vmap=False``, which runs the *same*
+masked kernel once per m in a Python loop — the sequential reference path
+the equivalence tests compare against.
+
+Hogwild! stays on the sequential path on purpose: its staleness recurrence
+indexes history modulo m (`hist[(j - tau) % m]`), i.e. the *shape* of the
+recurrence changes with m, and Thm 1's lag-equals-worker-count semantics
+would not survive a padded rewrite.  It loops over `run_hogwild` per m.
+
+Note the padded grid does S * work(m_max) FLOPs versus the loop's
+sum_m work(m); the win is one fused scan instead of S dispatch chains,
+which dominates at benchmark scale on CPU and accelerators alike.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.algorithms import run_hogwild
+from repro.core.algorithms.lr import LAMBDA, test_logloss
+from repro.core.compression import dequantize, quantize_stochastic
+
+
+def _losses_dict(algorithm: str, ms, losses, iters: int, eval_every: int):
+    """Engine output contract: curves for every m of the grid."""
+    return {
+        "algorithm": algorithm,
+        "ms": [int(m) for m in ms],
+        "iters": int(iters),
+        "eval_every": int(eval_every),
+        # (S, n_evals) float list-of-lists, row i <-> ms[i]
+        "losses": [[float(v) for v in row] for row in jax.device_get(losses)],
+    }
+
+
+def _run_grid(sim, ms, use_vmap: bool):
+    ms_arr = jnp.asarray(ms, jnp.int32)
+    if use_vmap:
+        return jax.jit(jax.vmap(sim))(ms_arr)
+    jsim = jax.jit(sim)          # one compile serves every m (traced scalar)
+    return jnp.stack([jsim(m) for m in ms_arr])
+
+
+# ---------------------------------------------------------------------------
+# Mini-batch SGD (Alg 2): batch size IS the worker count (Fact 1)
+# ---------------------------------------------------------------------------
+
+def sweep_minibatch(train, test, ms: Sequence[int], *, iters: int,
+                    eval_every: int, gamma=0.1, lam=LAMBDA, key=None,
+                    use_vmap=True) -> Dict:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    X, y, Xte, yte = train.X, train.y, test.X, test.y
+    n, d = X.shape
+    m_max = max(ms)
+    order = jax.random.randint(key, (iters, m_max), 0, n)
+    n_evals = iters // eval_every
+
+    def sim(m):
+        active = (jnp.arange(m_max) < m).astype(jnp.float32)
+        mf = m.astype(jnp.float32)
+
+        def step(x, idx):
+            Xb, yb = X[idx], y[idx]                  # (m_max, d), (m_max,)
+            sig = jax.nn.sigmoid(-(yb * (Xb @ x)))
+            g = -((sig * yb * active) @ Xb) / mf + lam * x
+            return x - gamma * g, None
+
+        def outer(x, e):
+            idxs = jax.lax.dynamic_slice_in_dim(order, e * eval_every,
+                                                eval_every, axis=0)
+            x, _ = jax.lax.scan(step, x, idxs)
+            return x, test_logloss(x, Xte, yte)
+
+        _, losses = jax.lax.scan(outer, jnp.zeros((d,)), jnp.arange(n_evals))
+        return losses
+
+    losses = _run_grid(sim, ms, use_vmap)
+    return _losses_dict("minibatch", ms, losses, iters, eval_every)
+
+
+# ---------------------------------------------------------------------------
+# ECD-PSGD (Alg 4): ring of m workers as a masked (m_max, m_max) mixing matrix
+# ---------------------------------------------------------------------------
+
+def _ring_matrix(m, m_max: int):
+    """W with W[i] = (e_i + e_{i-1 mod m} + e_{i+1 mod m})/3 for i < m and
+    identity rows for padded workers — the roll-based ring of ecd_psgd.py
+    expressed so that m can be traced data."""
+    ids = jnp.arange(m_max)
+    eye = jnp.eye(m_max)
+    W = (eye + eye[(ids - 1) % m] + eye[(ids + 1) % m]) / 3.0
+    return jnp.where((ids < m)[:, None], W, eye)
+
+
+def sweep_ecd_psgd(train, test, ms: Sequence[int], *, iters: int,
+                   eval_every: int, gamma=0.1, lam=LAMBDA, compress_bits=8,
+                   key=None, use_vmap=True) -> Dict:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    X, y, Xte, yte = train.X, train.y, test.X, test.y
+    n, d = X.shape
+    m_max = max(ms)
+    k_order, k_q = jax.random.split(key)
+    order = jax.random.randint(k_order, (iters, m_max), 0, n)
+    n_evals = iters // eval_every
+
+    def sim(m):
+        active = (jnp.arange(m_max) < m).astype(jnp.float32)
+        mf = m.astype(jnp.float32)
+        W = _ring_matrix(m, m_max)
+
+        def one_iter(carry, inp):
+            xs, ys = carry                   # (m_max, d) models / y-vars
+            idx, kq, t = inp
+            tf = t.astype(jnp.float32) + 1.0
+            x_half = W @ ys                  # neighbors pull compressed y
+
+            def grad_w(xi, i):
+                sig = jax.nn.sigmoid(-(y[i] * jnp.dot(X[i], xi)))
+                return -sig * y[i] * X[i] + lam * xi
+
+            x_new = x_half - gamma * jax.vmap(grad_w)(xs, idx)
+            # z = (1 - t/2) x_t + (t/2) x_{t+1};  y = (1-2/t) y + (2/t) C(z)
+            z = (1.0 - tf / 2.0) * xs + (tf / 2.0) * x_new
+            kqs = jax.random.split(kq, m_max)
+            cz = jax.vmap(lambda zz, kk: dequantize(
+                *quantize_stochastic(zz, kk, bits=compress_bits)))(z, kqs)
+            y_new = (1.0 - 2.0 / tf) * ys + (2.0 / tf) * cz
+            return (x_new, y_new), None
+
+        def outer(carry, e):
+            base = e * eval_every
+            ts = base + jnp.arange(eval_every)
+            keys = jax.vmap(lambda t: jax.random.fold_in(k_q, t))(ts)
+            idxs = jax.lax.dynamic_slice_in_dim(order, base, eval_every,
+                                                axis=0)
+            carry, _ = jax.lax.scan(one_iter, carry, (idxs, keys, ts))
+            x_avg = (active @ carry[0]) / mf      # mean over live workers
+            return carry, test_logloss(x_avg, Xte, yte)
+
+        carry0 = (jnp.zeros((m_max, d)), jnp.zeros((m_max, d)))
+        _, losses = jax.lax.scan(outer, carry0, jnp.arange(n_evals))
+        return losses
+
+    losses = _run_grid(sim, ms, use_vmap)
+    return _losses_dict("ecd_psgd", ms, losses, iters, eval_every)
+
+
+# ---------------------------------------------------------------------------
+# DADM (Alg 3): masked dual all-gather over the padded worker axis
+# ---------------------------------------------------------------------------
+
+def sweep_dadm(train, test, ms: Sequence[int], *, iters: int, eval_every: int,
+               local_batch=8, lam=LAMBDA, key=None, use_vmap=True) -> Dict:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    X, y, Xte, yte = train.X, train.y, test.X, test.y
+    n, d = X.shape
+    m_max = max(ms)
+    order = jax.random.randint(key, (iters, m_max, local_batch), 0, n)
+    sq_norms = jnp.sum(X * X, axis=1)
+    step_sz = jnp.minimum(1.0, (lam * n) / (sq_norms / 4.0 + lam * n))
+    n_evals = iters // eval_every
+
+    def sim(m):
+        active = (jnp.arange(m_max) < m).astype(jnp.float32)
+
+        def one_iter(carry, idx):
+            alpha, v = carry                 # (n,), (d,)
+            x = v
+
+            def worker(idx_w):
+                Xi, yi, ai = X[idx_w], y[idx_w], alpha[idx_w]
+                p = jax.nn.sigmoid(-(yi * (Xi @ x)))
+                da = (p - ai) * step_sz[idx_w]
+                dv = (yi * da) @ Xi / (lam * n)
+                return da, dv
+
+            das, dvs = jax.vmap(worker)(idx)         # (m_max, lb), (m_max, d)
+            das = das * active[:, None]              # padded workers sit out
+            alpha = alpha.at[idx.reshape(-1)].add(das.reshape(-1))
+            v = v + active @ dvs                     # masked all-gather sum
+            return (alpha, v), None
+
+        alpha0 = jnp.full((n,), 0.5)
+        v0 = (y * alpha0) @ X / (lam * n)
+
+        def outer(carry, e):
+            idxs = jax.lax.dynamic_slice_in_dim(order, e * eval_every,
+                                                eval_every, axis=0)
+            carry, _ = jax.lax.scan(one_iter, carry, idxs)
+            return carry, test_logloss(carry[1], Xte, yte)
+
+        _, losses = jax.lax.scan(outer, (alpha0, v0), jnp.arange(n_evals))
+        return losses
+
+    losses = _run_grid(sim, ms, use_vmap)
+    return _losses_dict("dadm", ms, losses, iters, eval_every)
+
+
+# ---------------------------------------------------------------------------
+# Hogwild! — sequential path (see module docstring)
+# ---------------------------------------------------------------------------
+
+def sweep_hogwild(train, test, ms: Sequence[int], *, iters: int,
+                  eval_every: int, gamma=0.1, lam=LAMBDA, key=None,
+                  use_vmap=True) -> Dict:
+    del use_vmap                 # accepted for interface symmetry only
+    curves = []
+    for m in ms:
+        r = run_hogwild(train, test, m=int(m), iters=iters, gamma=gamma,
+                        lam=lam, eval_every=eval_every, key=key)
+        curves.append(r["losses"])
+    return _losses_dict("hogwild", ms, jnp.stack(
+        [jnp.asarray(c) for c in curves]), iters, eval_every)
+
+
+SWEEPERS = {
+    "minibatch": sweep_minibatch,
+    "ecd_psgd": sweep_ecd_psgd,
+    "dadm": sweep_dadm,
+    "hogwild": sweep_hogwild,
+}
+
+
+def run_algorithm_sweep(algorithm: str, train, test, ms, *, iters,
+                        eval_every, use_vmap=True, **kwargs) -> Dict:
+    """Dispatch one (algorithm, dataset) job over the worker grid."""
+    try:
+        fn = SWEEPERS[algorithm]
+    except KeyError:
+        raise KeyError(f"unknown algorithm {algorithm!r}; "
+                       f"known: {sorted(SWEEPERS)}") from None
+    return fn(train, test, list(ms), iters=iters, eval_every=eval_every,
+              use_vmap=use_vmap, **kwargs)

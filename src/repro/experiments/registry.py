@@ -1,0 +1,160 @@
+"""Named sweep specs — one per paper figure/table (mirrors configs/registry).
+
+Each builder resolves a fully-concrete :class:`SweepSpec` (quick mode folds
+the CI-friendly iteration/size constants in, exactly as the legacy
+`benchmarks/paper_*.py` scripts did), so a spec name + ``quick`` flag is a
+complete, hashable description of a paper experiment:
+
+  ``variance_sparsity``   Figs 3-5   dense-vs-sparse on minibatch/ECD/Hogwild!
+  ``diversity``           Fig 6      duplication variants on DADM/minibatch
+  ``ls``                  Figs 7-10  C_sim-controlled sequences, no shuffle
+  ``upper_bound``         Table II   cost-per-worker m_max sweep + predictions
+  ``scalability_study``   end-to-end characters + m=1 vs m=8 study
+
+Use :func:`get_spec` / :data:`SPEC_IDS`; ``iters`` / ``n`` overrides thread
+through to the builders for fast smoke runs.
+"""
+
+from __future__ import annotations
+
+import warnings
+from typing import Optional
+
+from repro.experiments.spec import (DatasetSpec, EpsilonSpec, JobSpec,
+                                    SweepSpec)
+
+
+def _variance_sparsity(quick=False, iters: Optional[int] = None,
+                       n: Optional[int] = None) -> SweepSpec:
+    iters = iters if iters is not None else (600 if quick else 1500)
+    n = n if n is not None else (1000 if quick else 2000)
+    datasets = {
+        "higgs_like": DatasetSpec("higgs_like", {"n": n, "d": 28}),
+        "realsim_like": DatasetSpec("realsim_like",
+                                    {"n": n, "d": 400, "density": 0.05}),
+    }
+    jobs = tuple(JobSpec(algo, ds)
+                 for ds in ("higgs_like", "realsim_like")
+                 for algo in ("minibatch", "ecd_psgd", "hogwild"))
+    return SweepSpec(
+        name="variance_sparsity",
+        description="Figs 3-5: feature-variance & sparsity vs parallel gain",
+        ms=(1, 2, 4, 8), iters=iters, eval_every=iters // 10,
+        datasets=datasets, jobs=jobs).validate()
+
+
+def _diversity(quick=False, iters: Optional[int] = None,
+               n: Optional[int] = None) -> SweepSpec:
+    iters = iters if iters is not None else (400 if quick else 800)
+    n = n if n is not None else (800 if quick else 1600)
+    base = {"n": n, "d": 300, "density": 0.05}
+    datasets = {v: DatasetSpec("realsim_like", base, variant=v)
+                for v in ("high", "mid", "low")}
+    jobs = tuple(JobSpec(algo, ds)
+                 for ds in ("high", "mid", "low")
+                 for algo in ("dadm", "minibatch"))
+    return SweepSpec(
+        name="diversity",
+        description="Fig 6: sample-diversity duplication variants",
+        ms=(1, 4, 16), iters=iters, eval_every=iters // 8,
+        datasets=datasets, jobs=jobs).validate()
+
+
+def _ls(quick=False, iters: Optional[int] = None,
+        n: Optional[int] = None) -> SweepSpec:
+    iters = iters if iters is not None else (500 if quick else 1200)
+    n = n if n is not None else (1000 if quick else 2400)
+    sparse = {"d": 200, "density": 0.05, "lo": 0, "hi": 1}
+    datasets = {
+        "small_ls_dense": DatasetSpec(
+            "ls_sequence", {"n": n, "d": 28, "mutate_frac": 0.1},
+            shuffle_split=False),
+        "large_ls_dense": DatasetSpec(
+            "ls_sequence", {"n": n, "d": 28, "mutate_frac": 0.9},
+            shuffle_split=False),
+        "small_ls_sparse": DatasetSpec(
+            "ls_sequence", {"n": n, "mutate_frac": 0.1, **sparse},
+            shuffle_split=False),
+        "large_ls_sparse": DatasetSpec(
+            "ls_sequence", {"n": n, "mutate_frac": 0.9, **sparse},
+            shuffle_split=False),
+    }
+    jobs = tuple([JobSpec(a, ds) for ds in ("small_ls_dense",
+                                            "large_ls_dense")
+                  for a in ("minibatch", "ecd_psgd")]
+                 + [JobSpec(a, ds) for ds in ("small_ls_sparse",
+                                              "large_ls_sparse")
+                    for a in ("hogwild", "dadm")])
+    return SweepSpec(
+        name="ls",
+        description="Figs 7-10: sampling-sequence similarity (C_sim) sweeps",
+        ms=(1, 4, 8), iters=iters, eval_every=iters // 8,
+        datasets=datasets, jobs=jobs, measure_csim=8, csim_rows=400,
+    ).validate()
+
+
+def _upper_bound(quick=False, iters: Optional[int] = None,
+                 n: Optional[int] = None) -> SweepSpec:
+    if n is not None:
+        warnings.warn("the upper_bound spec ignores the n override: "
+                      "its dataset sizes are fixed by §VII.E")
+    iters = iters if iters is not None else (1200 if quick else 3000)
+    datasets = {
+        "ub": DatasetSpec("upper_bound",
+                          {"n": 4000, "d": 400, "density": 0.7}),
+        "dense": DatasetSpec("higgs_like", {"n": 4000, "d": 28}),
+        "sparse8": DatasetSpec("realsim_like",
+                               {"n": 1000, "d": 300, "density": 0.05}),
+    }
+    jobs = (
+        JobSpec("hogwild", "ub", {"gamma": 0.05}, predict=True),
+        JobSpec("minibatch", "dense", predict=True),
+        JobSpec("ecd_psgd", "dense"),
+        JobSpec("dadm", "sparse8", predict=True, predict_rows=600),
+    )
+    return SweepSpec(
+        name="upper_bound",
+        description="Table II: cost-per-worker sweep + predicted m_max",
+        ms=(2, 4, 8, 16, 24), iters=iters, eval_every=iters // 20,
+        datasets=datasets, jobs=jobs,
+        epsilon=EpsilonSpec(probe_m=2, frac=0.7)).validate()
+
+
+def _scalability_study(quick=False, iters: Optional[int] = None,
+                       n: Optional[int] = None) -> SweepSpec:
+    iters = (800 if quick else 3000) if iters is None else iters
+    n = (1500 if quick else 4000) if n is None else n
+    datasets = {
+        "higgs_like": DatasetSpec("higgs_like", {"n": n, "d": 28}),
+        "realsim_like": DatasetSpec("realsim_like",
+                                    {"n": n, "d": 400, "density": 0.05}),
+    }
+    jobs = tuple(JobSpec(algo, ds, predict=algo in ("hogwild", "minibatch"),
+                         predict_rows=800)
+                 for ds in ("higgs_like", "realsim_like")
+                 for algo in ("minibatch", "hogwild", "ecd_psgd", "dadm"))
+    return SweepSpec(
+        name="scalability_study",
+        description="end-to-end: characters + measured-vs-predicted study",
+        ms=(1, 8), iters=iters, eval_every=iters // 8,
+        datasets=datasets, jobs=jobs, characters_rows=800).validate()
+
+
+_BUILDERS = {
+    "variance_sparsity": _variance_sparsity,
+    "diversity": _diversity,
+    "ls": _ls,
+    "upper_bound": _upper_bound,
+    "scalability_study": _scalability_study,
+}
+
+SPEC_IDS = sorted(_BUILDERS)
+
+
+def get_spec(name: str, *, quick: bool = False,
+             iters: Optional[int] = None,
+             n: Optional[int] = None) -> SweepSpec:
+    """Resolve a named paper spec (quick mode folds in CI-scale constants)."""
+    if name not in _BUILDERS:
+        raise KeyError(f"unknown sweep spec {name!r}; known: {SPEC_IDS}")
+    return _BUILDERS[name](quick=quick, iters=iters, n=n)

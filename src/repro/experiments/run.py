@@ -1,0 +1,116 @@
+"""CLI for the sweep engine — reproduce any paper figure from a spec name.
+
+  PYTHONPATH=src python -m repro.experiments.run --list
+  PYTHONPATH=src python -m repro.experiments.run --spec upper_bound --quick
+  PYTHONPATH=src python -m repro.experiments.run --spec variance_sparsity \\
+      --quick --iters 100 --n 300          # smoke-scale override
+
+Repeated runs of an unchanged spec are served from the artifact cache
+(--force recomputes, --no-cache bypasses it).  --json writes the full
+result payload; the stdout report ends with the measured-vs-predicted
+m_max comparison whenever the spec produces both sides.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.experiments import registry, runner
+
+
+def _print_report(result: dict) -> None:
+    spec = result["spec"]
+    print("=" * 72)
+    print(f"sweep {result['name']}: {spec['description']}")
+    print(f"  m grid={list(spec['ms'])}  iters={spec['iters']}  "
+          f"eval_every={spec['eval_every']}")
+    print("=" * 72)
+
+    for name, info in result["datasets"].items():
+        line = f"dataset {name:18s} n={info['n']} d={info['d']}"
+        if "csim" in info:
+            line += f"  C_sim={info['csim']:.2f}"
+        if "characters" in info:
+            c = info["characters"]
+            line += (f"  var={c['mean_feature_variance']:.3f} "
+                     f"sparsity={c['sparsity']:.3f} "
+                     f"div={c['diversity_ratio']:.2f}")
+        print(line)
+
+    print()
+    comparisons = []
+    for key, jr in result["jobs"].items():
+        curves = runner.curves_by_m(jr)
+        finals = "  ".join(f"m{m}={c[-1]:.4f}" for m, c in curves.items())
+        print(f"{key:28s} final loss: {finals}")
+        if "costs" in jr:
+            costs = "  ".join(f"m{m}={c:.0f}"
+                              for m, c in zip(jr["ms"], jr["costs"]))
+            print(f"{'':28s} cost/worker (eps={jr['epsilon']:.4f}): {costs}")
+            print(f"{'':28s} measured m_max = {jr['measured_m_max']}")
+        if "predicted" in jr:
+            pm = jr["predicted"]["predicted_m_max"]
+            print(f"{'':28s} predicted m_max = {pm}")
+        if "measured_m_max" in jr and "predicted" in jr:
+            comparisons.append((key, jr["measured_m_max"],
+                                jr["predicted"]["predicted_m_max"]))
+
+    if comparisons:
+        print()
+        print("measured vs predicted scalability upper bound (core claim):")
+        for key, meas, pred in comparisons:
+            print(f"  {key:28s} measured={meas:<6d} predicted={pred}")
+
+    cache = result.get("cache", {})
+    src = "cache hit" if cache.get("hit") else \
+        f"computed in {result.get('elapsed_s', 0.0):.1f}s"
+    print(f"\n[{src}] artifact: {cache.get('path')}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.experiments.run",
+        description="run a registered scalability sweep")
+    ap.add_argument("--spec", help=f"spec name; one of {registry.SPEC_IDS}")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered specs and exit")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-scale iteration counts")
+    ap.add_argument("--iters", type=int, help="override iteration budget")
+    ap.add_argument("--n", type=int, help="override dataset size")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute even on a cache hit")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="neither read nor write the artifact cache")
+    ap.add_argument("--cache-dir", help="artifact cache directory")
+    ap.add_argument("--seq", action="store_true",
+                    help="sequential per-m loop instead of the vmapped grid")
+    ap.add_argument("--json", help="also write the full result to this path")
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name in registry.SPEC_IDS:
+            spec = registry.get_spec(name, quick=True)
+            print(f"{name:20s} {spec.description}")
+        return 0
+    if not args.spec:
+        ap.error("--spec is required (or --list)")
+
+    spec = registry.get_spec(args.spec, quick=args.quick,
+                             iters=args.iters, n=args.n)
+    result = runner.run_sweep(spec, use_cache=not args.no_cache,
+                              force=args.force, cache_dir=args.cache_dir,
+                              use_vmap=not args.seq, verbose=args.verbose)
+    _print_report(result)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=1, default=float)
+        print(f"wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,137 @@
+"""Sweep runner: SweepSpec -> datasets -> batched engine -> scalability.
+
+`run_sweep` is the one entry point every benchmark, example, and the CLI
+share.  For each job it
+
+  1. materializes the job's dataset (`spec.build_dataset`) and splits it
+     70/20 per the spec's shuffle policy,
+  2. runs the worker-count grid through `engine.run_algorithm_sweep`
+     (vmapped for the synchronous algorithms, sequential for Hogwild!),
+  3. if the spec declares an epsilon readout, derives epsilon from the
+     probe-m curve, converts curves to per-worker costs (§V.A.1), and
+     computes gain growth + the measured upper bound m_max (§V.B),
+  4. if the job requests it, runs the theory-side predictor from
+     `core.scalability` on the raw dataset characters, yielding the
+     measured-vs-predicted m_max comparison the paper is about.
+
+Results are plain JSON-serializable dicts (curves as a row-per-m list of
+lists; use `curves_by_m` for {m: curve} access) and are stored in the
+content-hashed artifact cache — re-running an unchanged spec is a disk
+read.  The fresh/cached distinction is reported in ``result["cache"]``,
+which is attached after loading and never persisted.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict, List, Optional
+
+from repro.core import metrics as MX
+from repro.core import scalability as SC
+from repro.experiments import cache as artifact_cache
+from repro.experiments import engine
+from repro.experiments import spec as spec_mod
+from repro.experiments.spec import SweepSpec
+
+_PREDICTORS = {
+    "hogwild": SC.predict_hogwild_mmax,
+    "minibatch": SC.predict_sync_mmax,
+    "ecd_psgd": SC.predict_sync_mmax,
+    "dadm": SC.predict_dadm_mmax,
+}
+
+
+def curves_by_m(job_result: Dict) -> Dict[int, List[float]]:
+    """{worker count: convergence curve} view of a job result."""
+    return {int(m): list(row) for m, row in
+            zip(job_result["ms"], job_result["losses"])}
+
+
+def _epsilon_from_probe(job_result: Dict, eps_spec) -> float:
+    """Paper Table II policy: epsilon is the loss the probe_m-worker run
+    reaches after `frac` of its eval budget — reachable by every setting,
+    discriminative between them."""
+    curve = curves_by_m(job_result)[eps_spec.probe_m]
+    return float(curve[int(len(curve) * eps_spec.frac)])
+
+
+def _cost_readout(job_result: Dict, epsilon: float, asynchronous: bool):
+    iters = job_result["iters"]
+    costs = []
+    for m, losses in zip(job_result["ms"], job_result["losses"]):
+        c = SC.cost_per_worker(
+            {"losses": losses, "eval_every": job_result["eval_every"],
+             "m": m}, epsilon, asynchronous=asynchronous)
+        costs.append(float(c) if math.isfinite(c) else float(iters))
+    gg = SC.gain_growth_from_costs(costs)
+    bound = SC.measured_upper_bound(job_result["ms"][:-1], gg)
+    return costs, gg, bound
+
+
+def run_sweep(spec: SweepSpec, *, use_cache: bool = True, force: bool = False,
+              cache_dir: Optional[str] = None, use_vmap: bool = True,
+              verbose: bool = False) -> Dict:
+    """Execute (or fetch) the full sweep a spec describes."""
+    spec.validate()
+    cache_dir = cache_dir or artifact_cache.DEFAULT_CACHE_DIR
+    fp = spec_mod.fingerprint(spec)
+
+    if use_cache and not force:
+        hit = artifact_cache.load(cache_dir, spec.name, fp)
+        if hit is not None:
+            hit["cache"] = {"hit": True,
+                            "path": artifact_cache.artifact_path(
+                                cache_dir, spec.name, fp)}
+            return hit
+
+    t0 = time.time()
+    result: Dict = {"name": spec.name, "spec": spec.to_dict(),
+                    "datasets": {}, "jobs": {}}
+
+    datasets = {name: spec_mod.build_dataset(ds)
+                for name, ds in spec.datasets.items()}
+    splits = {name: spec_mod.split_dataset(spec.datasets[name], data,
+                                           spec.split_seed)
+              for name, data in datasets.items()}
+
+    for name, data in datasets.items():
+        info: Dict = {"n": int(data.X.shape[0]), "d": int(data.X.shape[1])}
+        if spec.measure_csim > 0:
+            info["csim"] = MX.csim_ref(data.X[:spec.csim_rows],
+                                       spec.measure_csim)
+        if spec.characters_rows > 0:
+            info["characters"] = MX.summarize(data.X[:spec.characters_rows])
+        result["datasets"][name] = info
+
+    for job in spec.jobs:
+        if verbose:
+            print(f"[{spec.name}] sweep {job.key} over m={list(spec.ms)}")
+        tr, te = splits[job.dataset]
+        jr = engine.run_algorithm_sweep(
+            job.algorithm, tr, te, spec.ms, iters=spec.iters,
+            eval_every=spec.eval_every, use_vmap=use_vmap, **job.kwargs)
+        jr["dataset"] = job.dataset
+
+        if spec.epsilon is not None:
+            eps = _epsilon_from_probe(jr, spec.epsilon)
+            costs, gg, bound = _cost_readout(
+                jr, eps, asynchronous=job.algorithm
+                in spec_mod.ASYNC_ALGORITHMS)
+            jr.update(epsilon=eps, costs=costs, gain_growth=gg,
+                      measured_m_max=int(bound))
+
+        if job.predict:
+            X = datasets[job.dataset].X
+            if job.predict_rows > 0:
+                X = X[:job.predict_rows]
+            jr["predicted"] = _PREDICTORS[job.algorithm](X)
+
+        result["jobs"][job.key] = jr
+
+    result["elapsed_s"] = time.time() - t0
+    path = None
+    if use_cache:
+        path = artifact_cache.store(cache_dir, spec.name, fp, result)
+    result["cache"] = {"hit": False, "path": path}
+    return result

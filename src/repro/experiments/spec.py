@@ -1,0 +1,174 @@
+"""Declarative sweep specifications (the `repro.experiments` input language).
+
+A paper experiment is "run algorithm A on dataset D for every worker count
+m in a grid, then read scalability off the convergence curves".  A
+:class:`SweepSpec` captures that declaratively:
+
+  * ``datasets``  — named :class:`DatasetSpec` entries, each a reference to a
+    generator in :data:`GENERATORS` (the `repro.data.synth` constructors)
+    plus its kwargs, an optional diversity ``variant``, and the train/valid
+    split policy (LS-sequence specs keep sampling order, so no shuffle).
+  * ``jobs``      — (algorithm, dataset) pairs with per-job algorithm kwargs
+    and an optional theory-side prediction request.
+  * ``ms``        — the worker-count grid shared by every job.
+  * ``epsilon``   — optional cost readout: epsilon is the loss the
+    ``probe_m``-worker run reaches after ``frac`` of its budget, and cost is
+    iterations-per-worker to reach it (paper §V.B.1, Table II).
+
+Specs are frozen, JSON-round-trippable (``to_dict`` / ``from_dict``) and
+content-hashable (:func:`fingerprint`) — the fingerprint keys the on-disk
+artifact cache, so editing any field of a spec invalidates exactly that
+sweep.  Named paper specs live in `repro.experiments.registry`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Dict, Optional, Tuple
+
+import jax
+
+from repro.data import synth
+
+# Bump when engine numerics change: invalidates every cached sweep artifact.
+ENGINE_VERSION = 1
+
+ALGORITHMS = ("minibatch", "ecd_psgd", "hogwild", "dadm")
+
+#: Async algorithms divide server iterations among workers when costing
+#: (paper §V.A.1 — the Perfect Computer Assumption).
+ASYNC_ALGORITHMS = frozenset({"hogwild"})
+
+GENERATORS = {
+    "higgs_like": synth.make_higgs_like,
+    "realsim_like": synth.make_realsim_like,
+    "ls_sequence": synth.make_ls_sequence,
+    "upper_bound": synth.make_upper_bound_dataset,
+    "one_sample": synth.make_one_sample_dataset,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetSpec:
+    """One named dataset of a sweep: generator + kwargs + split policy."""
+    generator: str                       # key in GENERATORS
+    kwargs: Dict = dataclasses.field(default_factory=dict)
+    seed: int = 0                        # PRNGKey for the generator
+    shuffle_split: bool = True           # False: keep sampling-sequence order
+    variant: Optional[str] = None        # diversity: "high" | "mid" | "low"
+
+    def validate(self):
+        if self.generator not in GENERATORS:
+            raise KeyError(f"unknown generator {self.generator!r}; "
+                           f"known: {sorted(GENERATORS)}")
+        if self.variant not in (None, "high", "mid", "low"):
+            raise ValueError(f"bad diversity variant {self.variant!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    """One (algorithm, dataset) cell of the sweep grid."""
+    algorithm: str                       # one of ALGORITHMS
+    dataset: str                         # key into SweepSpec.datasets
+    kwargs: Dict = dataclasses.field(default_factory=dict)  # e.g. gamma
+    predict: bool = False                # run the theory-side m_max predictor
+    predict_rows: int = 0                # rows of X fed to it (0 = all)
+
+    @property
+    def key(self) -> str:
+        return f"{self.algorithm}/{self.dataset}"
+
+    def validate(self):
+        if self.algorithm not in ALGORITHMS:
+            raise KeyError(f"unknown algorithm {self.algorithm!r}; "
+                           f"known: {ALGORITHMS}")
+
+
+@dataclasses.dataclass(frozen=True)
+class EpsilonSpec:
+    """Cost readout: eps = probe-run loss after ``frac`` of the budget."""
+    probe_m: int = 2
+    frac: float = 0.7
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    name: str
+    description: str = ""
+    ms: Tuple[int, ...] = (1, 2, 4, 8)
+    iters: int = 1000
+    eval_every: int = 100
+    datasets: Dict[str, DatasetSpec] = dataclasses.field(default_factory=dict)
+    jobs: Tuple[JobSpec, ...] = ()
+    epsilon: Optional[EpsilonSpec] = None
+    measure_csim: int = 0                # Eq. 3 range; 0 = skip
+    csim_rows: int = 400                 # rows used for the C_sim estimate
+    characters_rows: int = 0             # §IV summary rows; 0 = skip
+    split_seed: int = 0                  # key for shuffled splits
+
+    # -- validation ---------------------------------------------------------
+    def validate(self) -> "SweepSpec":
+        if not self.jobs:
+            raise ValueError(f"spec {self.name!r} has no jobs")
+        if len(set(self.ms)) != len(self.ms) or any(m < 1 for m in self.ms):
+            raise ValueError(f"spec {self.name!r}: bad worker grid {self.ms}")
+        if self.iters < self.eval_every or self.eval_every < 1:
+            raise ValueError(f"spec {self.name!r}: iters={self.iters} "
+                             f"eval_every={self.eval_every}")
+        if self.epsilon is not None:
+            if self.epsilon.probe_m not in self.ms:
+                raise ValueError(
+                    f"spec {self.name!r}: epsilon probe_m="
+                    f"{self.epsilon.probe_m} must be in ms={self.ms}")
+            if not 0.0 < self.epsilon.frac < 1.0:
+                raise ValueError(f"spec {self.name!r}: epsilon frac="
+                                 f"{self.epsilon.frac} must be in (0, 1)")
+        for ds in self.datasets.values():
+            ds.validate()
+        for job in self.jobs:
+            job.validate()
+            if job.dataset not in self.datasets:
+                raise KeyError(f"job {job.key!r} references unknown dataset")
+        return self
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "SweepSpec":
+        d = dict(d)
+        d["ms"] = tuple(d["ms"])
+        d["datasets"] = {k: DatasetSpec(**v) for k, v in d["datasets"].items()}
+        d["jobs"] = tuple(JobSpec(**j) for j in d["jobs"])
+        if d.get("epsilon") is not None:
+            d["epsilon"] = EpsilonSpec(**d["epsilon"])
+        return cls(**d).validate()
+
+
+def fingerprint(spec: SweepSpec) -> str:
+    """Content hash of a spec (plus the engine version) — the cache key."""
+    payload = json.dumps({"engine_version": ENGINE_VERSION,
+                          "spec": spec.to_dict()},
+                         sort_keys=True, default=str)
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
+def build_dataset(ds: DatasetSpec) -> synth.Dataset:
+    """Materialize a DatasetSpec into a concrete `synth.Dataset`."""
+    ds.validate()
+    key = jax.random.PRNGKey(ds.seed)
+    base = GENERATORS[ds.generator](key, **ds.kwargs)
+    if ds.variant is not None:
+        high, mid, low = synth.make_diversity_variants(base)
+        base = {"high": high, "mid": mid, "low": low}[ds.variant]
+    return base
+
+
+def split_dataset(ds_spec: DatasetSpec, data: synth.Dataset, split_seed: int):
+    """70/20 split per the spec's policy (shuffled unless sequence-ordered)."""
+    if ds_spec.shuffle_split:
+        return data.split(key=jax.random.PRNGKey(split_seed))
+    return data.split()

@@ -1,3 +1,7 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""repro.kernels — Pallas kernels for the repo's compute hot spots, each
+with a pure-jnp oracle in `ref.py` and a dispatch wrapper in `ops.py`:
+`csim` (the paper's Eq. 3 windowed L0-distance loop, O(n·range·d)),
+`flash_attention`, `rmsnorm`, and stochastic `quantize` (the compression
+ECD-PSGD gossips with).  Tests compare kernel vs oracle in interpret mode;
+`benchmarks/kernel_bench.py` times them.
+"""

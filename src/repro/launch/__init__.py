@@ -1,0 +1,8 @@
+"""repro.launch — executable entry points for the model stack.  `train`
+runs real (CPU-scale, reduced-config) optimization; `serve` runs batched
+greedy decoding; `dryrun` lowers/compiles every (arch x shape) on the
+production mesh without executing (the 512-virtual-device coherence
+proof); `mesh`, `specs`, `hlo_stats` and `analytic` are its supporting
+mesh/shape/cost tooling.  The paper-experiment entry point is separate:
+``python -m repro.experiments.run``.
+"""

@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch x input-shape) on the
 production mesh(es); print memory/cost analysis and collective schedule.
 
@@ -13,6 +10,9 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --all --json dryrun.json
   PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
 """
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import json

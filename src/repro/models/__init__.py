@@ -1,0 +1,6 @@
+"""repro.models — architecture blocks for the configs registry: attention
+variants (`attention`), transformer layers and norms (`layers`), MoE
+routing (`moe`), state-space/xLSTM blocks (`ssm`), and the `model` module
+that assembles an `ArchConfig` into init/apply functions used by train,
+serve, and dryrun.
+"""

@@ -1,2 +1,8 @@
+"""repro.optim — optimizers for the production training stack (SGD,
+momentum, AdamW as init/update pairs over pytrees).  The paper-side
+algorithms in `repro.core.algorithms` carry their own update rules; this
+package serves the model-training tier (`repro.train`, `repro.launch`).
+"""
+
 from repro.optim.optimizers import (adamw_init, adamw_update, sgd_init,
                                     sgd_update, momentum_init, momentum_update)

@@ -1,0 +1,4 @@
+"""repro.serve — the serving tier: `engine.greedy_generate` implements
+batched greedy decoding against a preallocated KV cache, shared by the
+`repro.launch.serve` CLI and the serve tests/benchmarks.
+"""

@@ -1,3 +1,11 @@
+"""repro.sharding — mesh partitioning rules for the model stack: named
+PartitionSpecs for params, batches, optimizer and decode state, plus
+activation-sharding constraints (FSDP + tensor-parallel axes).  Consumed
+by `repro.train.steps` and the `repro.launch` mesh/dryrun tooling; the
+paper-side worker-count sweeps in `repro.experiments` simulate parallelism
+in-process instead and don't shard.
+"""
+
 from repro.sharding.rules import (param_specs, batch_specs,
                                   decode_state_specs, opt_state_specs,
                                   act_constraint, decode_act_constraint,

@@ -1,0 +1,6 @@
+"""repro.train — the model-training tier: `steps` builds jitted/sharded
+train steps (sync data-parallel and gossip strategies) over
+`repro.models` + `repro.optim`, and `checkpoint` persists/restores pytree
+state.  Scalability advice for choosing a strategy comes from
+`repro.core.advisor`.
+"""

@@ -1,0 +1,56 @@
+"""Fallback shim for `hypothesis` on bare environments.
+
+Test modules do ``from _hypothesis_compat import given, settings, st``.
+When hypothesis is installed this re-exports the real thing; otherwise
+``@given`` degrades to a ``pytest.mark.parametrize`` over a small
+deterministic sample of each strategy, so property tests still run (with
+reduced coverage) instead of killing collection for the whole suite.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+    import itertools
+
+    import pytest
+
+    class _Strategy:
+        def __init__(self, samples):
+            self.samples = list(samples)
+
+    class _St:
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(dict.fromkeys([lo, (lo + hi) // 2, hi]))
+
+        @staticmethod
+        def floats(lo, hi):
+            return _Strategy(dict.fromkeys([lo, (lo + hi) / 2.0, hi]))
+
+        @staticmethod
+        def sampled_from(xs):
+            return _Strategy(xs)
+
+    st = _St()
+
+    def settings(**_kw):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            combos = list(itertools.product(*(s.samples for s in strats)))
+            if len(combos) > 10:          # keep the fallback cheap
+                combos = combos[::max(1, len(combos) // 10)][:10]
+
+            @pytest.mark.parametrize("_hyp_args", combos)
+            def wrapper(_hyp_args):
+                fn(*_hyp_args)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

@@ -1,0 +1,198 @@
+"""repro.experiments: spec registry round-trip, vmapped-vs-sequential sweep
+equivalence, artifact cache hit/miss behavior, and a CLI smoke run."""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import synth
+from repro.experiments import (SPEC_IDS, DatasetSpec, EpsilonSpec, JobSpec,
+                               SweepSpec, curves_by_m, fingerprint, get_spec,
+                               run_sweep)
+from repro.experiments import engine
+from repro.experiments import run as cli
+from repro.core.algorithms import (run_dadm, run_ecd_psgd, run_hogwild,
+                                   run_minibatch)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tiny_spec(name="tiny", algorithms=("minibatch",), ms=(1, 2, 4),
+              epsilon=None, iters=60):
+    return SweepSpec(
+        name=name, description="test spec", ms=ms, iters=iters, eval_every=20,
+        datasets={"d0": DatasetSpec("higgs_like", {"n": 120, "d": 8})},
+        jobs=tuple(JobSpec(a, "d0") for a in algorithms),
+        epsilon=epsilon).validate()
+
+
+# ---------------------------------------------------------------------------
+# spec registry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", SPEC_IDS)
+def test_registry_roundtrip(name):
+    """Every registered spec survives dict/JSON round-trip bit-exactly."""
+    spec = get_spec(name, quick=True)
+    clone = SweepSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert clone == spec
+    assert fingerprint(clone) == fingerprint(spec)
+
+
+def test_fingerprint_tracks_content():
+    assert fingerprint(get_spec("ls", quick=True)) != \
+        fingerprint(get_spec("ls", quick=False))
+    assert fingerprint(tiny_spec(iters=60)) != fingerprint(tiny_spec(iters=80))
+
+
+def test_spec_validation_rejects_bad_specs():
+    with pytest.raises(KeyError):
+        get_spec("nope")
+    with pytest.raises(ValueError):
+        tiny_spec(ms=(1, 2, 2))
+    with pytest.raises(KeyError):
+        SweepSpec(name="x", ms=(1,), iters=40, eval_every=20,
+                  datasets={}, jobs=(JobSpec("minibatch", "ghost"),)
+                  ).validate()
+    with pytest.raises(ValueError):   # epsilon probe_m must be on the grid
+        tiny_spec(epsilon=EpsilonSpec(probe_m=3))
+    with pytest.raises(ValueError):   # epsilon frac must be a proper fraction
+        tiny_spec(epsilon=EpsilonSpec(probe_m=2, frac=1.0))
+
+
+# ---------------------------------------------------------------------------
+# engine: the vmapped grid is the sequential loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sweeper", [engine.sweep_minibatch,
+                                     engine.sweep_ecd_psgd,
+                                     engine.sweep_dadm])
+def test_vmapped_equals_sequential(sweeper):
+    ds = synth.make_higgs_like(KEY, n=160, d=10)
+    tr, te = ds.split(key=KEY)
+    kw = dict(iters=60, eval_every=20)
+    v = sweeper(tr, te, [1, 2, 4], use_vmap=True, **kw)
+    s = sweeper(tr, te, [1, 2, 4], use_vmap=False, **kw)
+    assert v["ms"] == s["ms"] == [1, 2, 4]
+    np.testing.assert_allclose(v["losses"], s["losses"],
+                               rtol=2e-4, atol=2e-5)
+    assert np.isfinite(v["losses"]).all()
+
+
+def test_hogwild_sweep_matches_single_runs():
+    """The sequential Hogwild! path is exactly the legacy per-m runner."""
+    ds = synth.make_higgs_like(KEY, n=160, d=10)
+    tr, te = ds.split(key=KEY)
+    sw = engine.sweep_hogwild(tr, te, [1, 4], iters=60, eval_every=20)
+    for m, curve in curves_by_m(sw).items():
+        r = run_hogwild(tr, te, m=m, iters=60, eval_every=20)
+        np.testing.assert_allclose(curve, r["losses"], rtol=1e-6)
+
+
+@pytest.mark.parametrize("sweeper,legacy,kwname", [
+    (engine.sweep_minibatch, run_minibatch, "batch_size"),
+    (engine.sweep_ecd_psgd, run_ecd_psgd, "m"),
+    (engine.sweep_dadm, run_dadm, "m"),
+])
+def test_engine_matches_legacy_at_full_m(sweeper, legacy, kwname):
+    """At m == m_max the padded grid uses the same index draws as the legacy
+    per-m runner (same key, same shapes, all-ones mask), so the sweep's last
+    row must reproduce the original algorithm's curve almost exactly."""
+    ds = synth.make_higgs_like(KEY, n=160, d=10)
+    tr, te = ds.split(key=KEY)
+    m_max = 4
+    sw = sweeper(tr, te, [1, 2, m_max], iters=60, eval_every=20)
+    r = legacy(tr, te, iters=60, eval_every=20, **{kwname: m_max})
+    np.testing.assert_allclose(curves_by_m(sw)[m_max], r["losses"],
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_engine_rejects_unknown_algorithm():
+    ds = synth.make_higgs_like(KEY, n=64, d=4)
+    tr, te = ds.split(key=KEY)
+    with pytest.raises(KeyError):
+        engine.run_algorithm_sweep("sgd9000", tr, te, [1],
+                                   iters=20, eval_every=20)
+
+
+# ---------------------------------------------------------------------------
+# runner: epsilon/cost readout, predictions, caching
+# ---------------------------------------------------------------------------
+
+def test_runner_epsilon_cost_readout(tmp_path):
+    spec = tiny_spec(algorithms=("minibatch", "hogwild"),
+                     epsilon=EpsilonSpec(probe_m=2, frac=0.5))
+    res = run_sweep(spec, cache_dir=str(tmp_path))
+    for jr in res["jobs"].values():
+        assert len(jr["costs"]) == len(spec.ms)
+        assert len(jr["gain_growth"]) == len(spec.ms) - 1
+        assert jr["measured_m_max"] in spec.ms
+        assert np.isfinite(jr["epsilon"])
+
+
+def test_runner_predictions():
+    spec = SweepSpec(
+        name="tiny_pred", ms=(1, 2), iters=40, eval_every=20,
+        datasets={"d0": DatasetSpec("realsim_like",
+                                    {"n": 100, "d": 40, "density": 0.1})},
+        jobs=(JobSpec("hogwild", "d0", predict=True, predict_rows=80),)
+    ).validate()
+    res = run_sweep(spec, use_cache=False)
+    pred = res["jobs"]["hogwild/d0"]["predicted"]
+    assert pred["predicted_m_max"] >= 1
+    assert res["cache"] == {"hit": False, "path": None}
+
+
+def test_cache_hit_miss_and_force(tmp_path):
+    spec = tiny_spec(name="tiny_cache")
+    r1 = run_sweep(spec, cache_dir=str(tmp_path))
+    assert r1["cache"]["hit"] is False
+    r2 = run_sweep(spec, cache_dir=str(tmp_path))
+    assert r2["cache"]["hit"] is True
+    assert r2["jobs"]["minibatch/d0"]["losses"] == \
+        r1["jobs"]["minibatch/d0"]["losses"]
+    # content change -> different artifact -> miss
+    r3 = run_sweep(tiny_spec(name="tiny_cache", iters=80),
+                   cache_dir=str(tmp_path))
+    assert r3["cache"]["hit"] is False
+    # force recomputes even though the artifact exists
+    r4 = run_sweep(spec, cache_dir=str(tmp_path), force=True)
+    assert r4["cache"]["hit"] is False
+
+
+def test_cache_artifact_is_json(tmp_path):
+    spec = tiny_spec(name="tiny_json")
+    r = run_sweep(spec, cache_dir=str(tmp_path))
+    with open(r["cache"]["path"]) as f:
+        payload = json.load(f)
+    assert payload["fingerprint"] == fingerprint(spec)
+    # JSON normalizes tuples to lists; the round-trip must still parse back
+    assert SweepSpec.from_dict(payload["spec"]) == spec
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_list(capsys):
+    assert cli.main(["--list"]) == 0
+    out = capsys.readouterr().out
+    for name in SPEC_IDS:
+        assert name in out
+
+
+def test_cli_smoke_quick(tmp_path, capsys):
+    rc = cli.main(["--spec", "variance_sparsity", "--quick",
+                   "--iters", "40", "--n", "120",
+                   "--cache-dir", str(tmp_path),
+                   "--json", str(tmp_path / "out.json")])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "sweep variance_sparsity" in out
+    assert "final loss" in out
+    payload = json.loads((tmp_path / "out.json").read_text())
+    assert set(payload["jobs"]) == {
+        f"{a}/{d}" for d in ("higgs_like", "realsim_like")
+        for a in ("minibatch", "ecd_psgd", "hogwild")}
