@@ -1,0 +1,228 @@
+#!/usr/bin/env python
+"""Engine wall-clock benchmark — emits BENCH_2.json (perf-trajectory anchor).
+
+Three measurements, chosen to isolate what the ENGINE_VERSION-2 rewrite
+changed relative to PR 1:
+
+1. **main** — the full 4-algorithm sweep over a *fine* worker grid
+   (m = 1..32, the paper's m_max-detection regime) on the dense
+   higgs-like dataset, in four engine configurations:
+
+     pr1             the PR-1 engine: flat vmapped grids for the
+                     synchronous algorithms + *sequential* legacy
+                     Hogwild! — one jit compile per m, because m was a
+                     `static_argname` there (S compiles total)
+     sequential      the masked kernels run once per m in a Python loop
+                     (the equivalence-test reference path)
+     vmap_flat       everything vmapped (Hogwild! included, one compile
+                     for the whole grid), flat padding to max(ms)
+     engine_default  the shipped ENGINE_VERSION-2 defaults: vmapped
+                     everything, bucketed padding for mini-batch and
+                     ECD-PSGD, flat for DADM/Hogwild!
+
+   The headline `speedup_vs_pr1` compares engine_default against pr1;
+   the dominant term is Hogwild!'s compile count dropping from S to 1.
+
+2. **characters** — the §IV dataset-characters pipeline: PR-1's
+   Python-unrolled `csim_ref` + per-batch `ls_sync_ref` vs the fused
+   `lax.scan` pipeline.
+
+3. **bucketing_regime** — ECD-PSGD (the most m-scaled sweeper: its
+   quantization work grows with the padded worker axis) on a *wide*
+   sparse grid at runtime-dominated scale, flat vs bucketed padding —
+   the regime bucketing exists for.  On compile-dominated toy runs
+   bucketing loses (extra compiles per bucket); this entry tracks the
+   crossover honestly.
+
+jit caches are cleared between configurations so every timing includes
+its own compiles, as a cold run would.  Results land in BENCH_2.json at
+the repo root so the perf trajectory is tracked from this PR onward.
+
+Usage:  PYTHONPATH=src python scripts/bench_engine.py [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import jax
+
+from repro.core import metrics as MX
+from repro.data import synth
+from repro.experiments import engine
+from repro.experiments import run_sweep
+from repro.experiments.spec import (DatasetSpec, JobSpec, SweepSpec,
+                                    ENGINE_VERSION)
+
+ALGOS = ("minibatch", "ecd_psgd", "dadm", "hogwild")
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def time_configuration(tr, te, ms, iters, eval_every, *, use_vmap, bucketed,
+                       hogwild_legacy):
+    """Wall-clock one full 4-algorithm sweep, cold (fresh jit caches)."""
+    jax.clear_caches()
+    t0 = time.perf_counter()
+    for algo in ALGOS:
+        uv = False if (algo == "hogwild" and hogwild_legacy) else use_vmap
+        engine.run_algorithm_sweep(algo, tr, te, ms, iters=iters,
+                                   eval_every=eval_every, use_vmap=uv,
+                                   bucketed=bucketed)
+    return time.perf_counter() - t0
+
+
+def time_characters(X, rng, batch_size):
+    """PR-1 characters implementations vs the fused pipeline."""
+    jax.clear_caches()
+    t0 = time.perf_counter()
+    MX.csim_ref(X, rng)
+    MX.ls_sync_ref(X, batch_size)
+    ref = time.perf_counter() - t0
+    jax.clear_caches()
+    t0 = time.perf_counter()
+    MX.csim(X, rng)
+    MX.ls_sync(X, batch_size)
+    fused = time.perf_counter() - t0
+    return ref, fused
+
+
+def time_bucketing_regime(ms, iters, eval_every, n, d):
+    """ECD-PSGD flat vs bucketed on a wide sparse grid (runtime regime)."""
+    ds = synth.make_realsim_like(jax.random.PRNGKey(1), n=n, d=d,
+                                 density=0.05)
+    tr, te = ds.split(key=jax.random.PRNGKey(1))
+    out = {}
+    for label, bucketed in (("flat", False), ("bucketed", True)):
+        jax.clear_caches()
+        t0 = time.perf_counter()
+        engine.run_algorithm_sweep("ecd_psgd", tr, te, ms, iters=iters,
+                                   eval_every=eval_every, bucketed=bucketed)
+        out[label] = time.perf_counter() - t0
+    return out
+
+
+def time_cache_roundtrip(ms, iters, eval_every, n, d):
+    """Fresh vs cached `run_sweep` through the artifact cache."""
+    spec = SweepSpec(
+        name="bench_engine", description="BENCH_2 cache round-trip",
+        ms=tuple(ms), iters=iters, eval_every=eval_every,
+        datasets={"d0": DatasetSpec("higgs_like", {"n": n, "d": d})},
+        jobs=tuple(JobSpec(a, "d0") for a in ALGOS)).validate()
+    with tempfile.TemporaryDirectory() as cache_dir:
+        t0 = time.perf_counter()
+        r1 = run_sweep(spec, cache_dir=cache_dir)
+        fresh = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        r2 = run_sweep(spec, cache_dir=cache_dir)
+        cached = time.perf_counter() - t0
+    assert r1["cache"]["hit"] is False and r2["cache"]["hit"] is True
+    return fresh, cached
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--n", type=int, default=1500)
+    p.add_argument("--d", type=int, default=28)
+    p.add_argument("--iters", type=int, default=4000)
+    p.add_argument("--eval-every", type=int, default=400)
+    p.add_argument("--m-max", type=int, default=32,
+                   help="main grid is every integer 1..m_max")
+    p.add_argument("--quick", action="store_true",
+                   help="small sizes for a fast smoke of the bench itself")
+    p.add_argument("--out", default=None,
+                   help="output path (default: BENCH_2.json at the repo "
+                        "root; quick mode defaults elsewhere so a smoke "
+                        "never overwrites the committed perf anchor)")
+    args = p.parse_args(argv)
+    if args.quick:
+        args.n, args.d, args.iters, args.eval_every = 300, 12, 400, 100
+        args.m_max = 8
+    if args.out is None:
+        args.out = (os.path.join(tempfile.gettempdir(), "BENCH_2.quick.json")
+                    if args.quick else os.path.join(ROOT, "BENCH_2.json"))
+    ms = list(range(1, args.m_max + 1))
+
+    ds = synth.make_higgs_like(jax.random.PRNGKey(0), n=args.n, d=args.d)
+    tr, te = ds.split(key=jax.random.PRNGKey(0))
+    kw = dict(ms=ms, iters=args.iters, eval_every=args.eval_every)
+
+    configs = {
+        "pr1": dict(use_vmap=True, bucketed=False, hogwild_legacy=True),
+        "sequential": dict(use_vmap=False, bucketed=False,
+                           hogwild_legacy=True),
+        "vmap_flat": dict(use_vmap=True, bucketed=False,
+                          hogwild_legacy=False),
+        # bucketed=None -> per-sweeper defaults (the shipped config)
+        "engine_default": dict(use_vmap=True, bucketed=None,
+                               hogwild_legacy=False),
+    }
+    timings = {}
+    for name, cfg in configs.items():
+        timings[name] = time_configuration(tr, te, **kw, **cfg)
+        print(f"{name:>15}: {timings[name]:7.2f} s")
+
+    chars_ref, chars_fused = time_characters(
+        ds.X[:min(400, args.n)], rng=args.m_max, batch_size=args.m_max)
+    print(f"{'chars ref':>15}: {chars_ref:7.2f} s")
+    print(f"{'chars fused':>15}: {chars_fused:7.2f} s")
+
+    if args.quick:
+        bucket_cfg = dict(ms=[1, 2, 4, 8], iters=300, eval_every=100,
+                          n=200, d=40)
+    else:
+        bucket_cfg = dict(ms=[1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 48, 64],
+                          iters=5000, eval_every=500, n=800, d=400)
+    regime = time_bucketing_regime(**bucket_cfg)
+    print(f"{'ecd flat':>15}: {regime['flat']:7.2f} s")
+    print(f"{'ecd bucketed':>15}: {regime['bucketed']:7.2f} s")
+
+    fresh, cached = time_cache_roundtrip(ms, args.iters, args.eval_every,
+                                         args.n, args.d)
+    print(f"{'cache fresh':>15}: {fresh:7.2f} s")
+    print(f"{'cache hit':>15}: {cached:7.2f} s")
+
+    speedup = (timings["pr1"] + chars_ref) / (timings["engine_default"]
+                                              + chars_fused)
+    payload = {
+        "bench": "engine_sweep",
+        "engine_version": ENGINE_VERSION,
+        "backend": jax.default_backend(),
+        "quick": args.quick,
+        "speedup_vs_pr1": speedup,
+        "main": {
+            "config": {"dataset": "higgs_like", "n": args.n, "d": args.d,
+                       "iters": args.iters, "eval_every": args.eval_every,
+                       "ms": f"1..{args.m_max}"},
+            "wall_clock_s": timings,
+            "hogwild_compiles": {"pr1": len(ms), "vmap": 1},
+        },
+        "characters": {
+            "config": {"rows": min(400, args.n), "rng": args.m_max,
+                       "batch_size": args.m_max},
+            "ref_s": chars_ref, "fused_s": chars_fused,
+            "speedup": chars_ref / max(chars_fused, 1e-9),
+        },
+        "bucketing_regime": {
+            "config": bucket_cfg,
+            "wall_clock_s": regime,
+            "speedup": regime["flat"] / max(regime["bucketed"], 1e-9),
+            "buckets": [{"ms": [bucket_cfg["ms"][i] for i in pos],
+                         "m_pad": m_pad}
+                        for pos, m_pad in engine._buckets(bucket_cfg["ms"])],
+        },
+        "cache_roundtrip_s": {"fresh": fresh, "cached": cached,
+                              "speedup": fresh / max(cached, 1e-9)},
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"speedup vs PR-1 engine: {speedup:.2f}x -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -8,8 +8,16 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== [1/5] tier-1 test suite =="
-python -m pytest -x -q
+echo "== [1/5] test suite (quick loop: -m 'not slow') =="
+# The full tier-1 suite (ROADMAP.md) is `python -m pytest -x -q` with no
+# marker filter; the smoke loop skips @pytest.mark.slow sweep/subprocess
+# tests to stay under ~2 minutes on this CPU container.  SMOKE_FULL=1
+# runs everything.
+if [ "${SMOKE_FULL:-0}" = "1" ]; then
+    python -m pytest -x -q
+else
+    python -m pytest -x -q -m "not slow"
+fi
 
 echo "== [2/5] sweep engine: registered specs =="
 python -m repro.experiments.run --list

@@ -7,6 +7,14 @@ was computed against the model at iteration j - tau, with tau cycling over
 Convergence behaviour depends only on tau_max (Thm 2), so the insight
 survives the mechanism swap.
 
+The staleness recurrence is *padding-safe*: :func:`masked_sim` allocates the
+model history at a static pad width ``m_pad`` and takes every history index
+modulo a **traced** worker count m, so shapes never depend on m — only
+indices do, and those stay in ``[0, m)``.  Rows ``>= m`` of the history are
+never read or written, which makes the padded run numerically the m-worker
+run.  That is what lets `repro.experiments.engine` sweep the whole m-grid
+as one ``jax.vmap`` (one trace, one compile) instead of re-jitting per m.
+
 Under the PCA, wall-time for m workers = t_single / m * n_iterations, so the
 figures report iterations (server) and iterations-per-worker (= cost).
 """
@@ -21,41 +29,65 @@ import jax.numpy as jnp
 from repro.core.algorithms.lr import lr_grad, test_logloss, LAMBDA
 
 
-@functools.partial(jax.jit, static_argnames=("m", "iters", "eval_every"))
-def _run(X, y, Xte, yte, key, m, iters, gamma, lam, eval_every):
-    n, d = X.shape
+def masked_sim(X, y, Xte, yte, order, *, m_pad, gamma, lam, eval_every,
+               n_evals):
+    """Build ``sim(m) -> (x, losses)`` with the worker count m as traced data.
+
+    ``m_pad`` is the only shape parameter (history rows); any ``m <= m_pad``
+    runs bit-identically to a ``m_pad == m`` allocation because the
+    recurrence indexes ``hist`` modulo m.  ``order`` is the shared
+    ``(iters,)`` server sample sequence — it is m-independent, so every
+    sweep member consumes the same draws.
+    """
+    d = X.shape[1]
+
+    def sim(m):
+        m = jnp.asarray(m, jnp.int32)
+
+        def step(carry, j):
+            x, hist = carry                   # hist: (m_pad, d) past models
+            # stale model: the one from j - tau, tau = (j % m) + 1
+            tau = (j % m) + 1
+            x_stale = hist[(j - tau) % m]
+            i = order[j]
+            g = lr_grad(x_stale, X[i], y[i], lam)
+            x_new = x - gamma * g
+            hist = hist.at[j % m].set(x_new)
+            return (x_new, hist), None
+
+        def outer(carry, e):
+            carry, _ = jax.lax.scan(
+                step, carry, e * eval_every + jnp.arange(eval_every))
+            return carry, test_logloss(carry[0], Xte, yte)
+
+        carry0 = (jnp.zeros((d,)), jnp.zeros((m_pad, d)))
+        (x, _), losses = jax.lax.scan(outer, carry0, jnp.arange(n_evals))
+        return x, losses
+
+    return sim
+
+
+@functools.partial(jax.jit, static_argnames=("m_pad", "iters", "eval_every"))
+def _run(X, y, Xte, yte, key, m, gamma, lam, *, m_pad, iters, eval_every):
+    n = X.shape[0]
     order = jax.random.randint(key, (iters,), 0, n)
-
-    def step(carry, j):
-        x, hist = carry                       # hist: (m, d) past models
-        # stale model: the one from j - tau, tau = (j % m) + 1
-        tau = (j % m) + 1
-        x_stale = hist[(j - tau) % m]
-        i = order[j]
-        g = lr_grad(x_stale, X[i], y[i], lam)
-        x_new = x - gamma * g
-        hist = hist.at[j % m].set(x_new)
-        return (x_new, hist), None
-
-    x0 = jnp.zeros((d,))
-    hist0 = jnp.zeros((m, d))
-    n_evals = iters // eval_every
-
-    def outer(carry, e):
-        carry, _ = jax.lax.scan(
-            step, carry, e * eval_every + jnp.arange(eval_every))
-        return carry, test_logloss(carry[0], Xte, yte)
-
-    (x, _), losses = jax.lax.scan(outer, (x0, hist0), jnp.arange(n_evals))
-    return x, losses
+    sim = masked_sim(X, y, Xte, yte, order, m_pad=m_pad, gamma=gamma,
+                     lam=lam, eval_every=eval_every,
+                     n_evals=iters // eval_every)
+    return sim(m)
 
 
 def run_hogwild(train, test, *, m=4, iters=4000, gamma=0.1, lam=LAMBDA,
                 eval_every=100, key=None):
-    """Returns dict with the convergence curve (server-iteration indexed)."""
+    """Returns dict with the convergence curve (server-iteration indexed).
+
+    Thin single-m wrapper over :func:`masked_sim` (padded exactly to m);
+    sweeps over many m should go through `engine.sweep_hogwild`, which
+    vmaps the same recurrence over the whole grid in one compile.
+    """
     key = key if key is not None else jax.random.PRNGKey(0)
-    x, losses = _run(train.X, train.y, test.X, test.y, key,
-                     m, iters, gamma, lam, eval_every)
+    x, losses = _run(train.X, train.y, test.X, test.y, key, m, gamma, lam,
+                     m_pad=m, iters=iters, eval_every=eval_every)
     return {
         "algorithm": "hogwild",
         "m": m,

@@ -3,9 +3,9 @@
 This package turns the paper's experiments (worker-count m x dataset
 character x algorithm) into declarative, cacheable sweeps: `spec` defines
 the :class:`SweepSpec` language and dataset materialization, `registry`
-names one spec per paper figure/table, `engine` runs the synchronous
-algorithms over the whole worker grid as a single vmapped simulation
-(Hogwild! stays sequential), `runner.run_sweep` orchestrates a spec end to
+names one spec per paper figure/table, `engine` runs all four algorithms
+(Hogwild! included) over the whole worker grid as bucketed vmapped
+simulations, `runner.run_sweep` orchestrates a spec end to
 end with content-hashed artifact caching, and ``python -m
 repro.experiments.run`` is the CLI that reproduces any figure from a spec
 name.  The legacy `benchmarks/paper_*.py` scripts are thin adapters over

@@ -1,45 +1,67 @@
-"""Batched m-sweep kernels: one `jax.vmap` over the whole worker grid.
+"""Batched m-sweep kernels: bucketed `jax.vmap` grids over the worker axis.
 
 The legacy benchmarks re-ran each algorithm once per worker count m in a
 Python loop — S separate traces, S compilations, S dispatch chains.  Here
-each synchronous algorithm (mini-batch SGD, ECD-PSGD, DADM) is re-derived
-as a *masked, padded* simulation over a fixed worker axis of size
-``m_max = max(ms)`` in which the actual worker count m is ordinary traced
-data:
+every algorithm (mini-batch SGD, ECD-PSGD, DADM, *and* Hogwild!) is
+re-derived as a *masked, padded* simulation over a fixed worker axis of
+size ``m_pad`` in which the actual worker count m is ordinary traced data:
 
   * workers with index >= m are masked out of every reduction (gradient
     average, ring average, dual all-gather), so the padded run is
     numerically the m-worker run;
-  * the per-iteration sample draw is a single shared ``(iters, m_max)``
-    index tensor — sweep member m consumes its first m columns, so growing
-    m adds workers without reshuffling the ones already present;
-  * the whole grid then runs as ``jax.vmap(sim)(ms)`` — one trace, one
-    compile, one `lax.scan` pipeline for every m at once.
+  * all random draws (sample indices, quantization keys) are made once at
+    the *global* ``m_top = max(ms)`` and sliced per padding width — sweep
+    member m consumes the first m columns no matter which bucket it lands
+    in, so numerics are identical across flat / bucketed / sequential
+    execution;
+  * each bucket of the grid then runs as ``jax.vmap(sim)(ms_bucket)`` —
+    one trace, one compile, one `lax.scan` pipeline per bucket.
+
+**Hogwild! is vmapped too** (new in ENGINE_VERSION 2).  The PR-1 engine
+kept it sequential on the theory that the staleness recurrence
+``hist[(j - tau) % m]`` changes *shape* with m — but only the history
+*indices* depend on m, not any shape: `hogwild.masked_sim` allocates the
+history at the static pad width and takes every index modulo the traced m,
+so rows >= m are never touched and Thm 1's lag-equals-worker-count
+semantics carry over unchanged.  The sweep therefore compiles **once** for
+the whole grid instead of once per m.  Because the recurrence updates a
+single model regardless of m (work is O(iters * d), not O(iters * m * d)),
+Hogwild! always runs as one flat vmap — bucketing would only add compiles.
+
+**Bucketed padding** (`_buckets`): a flat padded grid does S * work(m_top)
+FLOPs, so wide grids like [1, 2, 4, ..., 64] pay work(64) for the m=1
+member.  `_run_grid` instead partitions the grid greedily into buckets
+whose pad waste is bounded — ``max(bucket) <= MAX_PAD_RATIO * min(bucket)``
+(default 2x) — and vmaps each bucket at its own ``m_pad``.  The trade is
+one extra compile per bucket against the padded FLOPs, so bucketing pays
+exactly when per-step work scales with the worker axis: it is the default
+for mini-batch and ECD-PSGD (m-scaled gathers / quantization), while DADM
+(m-independent (n,)-sized dual state) and Hogwild! default to a single
+flat vmap.  ``bucketed=False`` recovers the PR-1 flat grid everywhere;
+`scripts/bench_engine.py` tracks both regimes in BENCH_2.json.
 
 Every sweep function also takes ``use_vmap=False``, which runs the *same*
-masked kernel once per m in a Python loop — the sequential reference path
-the equivalence tests compare against.
-
-Hogwild! stays on the sequential path on purpose: its staleness recurrence
-indexes history modulo m (`hist[(j - tau) % m]`), i.e. the *shape* of the
-recurrence changes with m, and Thm 1's lag-equals-worker-count semantics
-would not survive a padded rewrite.  It loops over `run_hogwild` per m.
-
-Note the padded grid does S * work(m_max) FLOPs versus the loop's
-sum_m work(m); the win is one fused scan instead of S dispatch chains,
-which dominates at benchmark scale on CPU and accelerators alike.
+masked kernel (padded to m_top) once per m in a Python loop — the
+sequential reference path the equivalence tests compare against.  For
+Hogwild! the sequential path loops the legacy per-m `run_hogwild`, so the
+vmapped grid is checked against the original recurrence, not itself.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Sequence
+from typing import Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.algorithms import hogwild as hogwild_mod
 from repro.core.algorithms import run_hogwild
 from repro.core.algorithms.lr import LAMBDA, test_logloss
 from repro.core.compression import dequantize, quantize_stochastic
+
+#: Pad-waste bound for `_buckets`: within a bucket, the padded worker axis
+#: is at most this multiple of the smallest member.
+MAX_PAD_RATIO = 2.0
 
 
 def _losses_dict(algorithm: str, ms, losses, iters: int, eval_every: int):
@@ -54,12 +76,52 @@ def _losses_dict(algorithm: str, ms, losses, iters: int, eval_every: int):
     }
 
 
-def _run_grid(sim, ms, use_vmap: bool):
-    ms_arr = jnp.asarray(ms, jnp.int32)
-    if use_vmap:
-        return jax.jit(jax.vmap(sim))(ms_arr)
-    jsim = jax.jit(sim)          # one compile serves every m (traced scalar)
-    return jnp.stack([jsim(m) for m in ms_arr])
+def _buckets(ms: Sequence[int],
+             max_pad_ratio: float = MAX_PAD_RATIO
+             ) -> List[Tuple[Tuple[int, ...], int]]:
+    """Greedy waste-bounded partition of the m-grid.
+
+    Returns ``[(positions, m_pad), ...]`` where ``positions`` index into
+    ``ms`` and ``m_pad = max(ms[i] for i in positions)``.  Scanning the
+    grid in ascending order, a member opens a new bucket whenever it would
+    exceed ``max_pad_ratio *`` the bucket's smallest m — so no member is
+    ever padded past that ratio, bounding the wasted FLOPs of the padded
+    vmap at ``max_pad_ratio``x per member.
+    """
+    order = sorted(range(len(ms)), key=lambda i: ms[i])
+    out: List[Tuple[Tuple[int, ...], int]] = []
+    cur: List[int] = []
+    for i in order:
+        if cur and ms[i] > max_pad_ratio * ms[cur[0]]:
+            out.append((tuple(cur), ms[cur[-1]]))
+            cur = []
+        cur.append(i)
+    if cur:
+        out.append((tuple(cur), ms[cur[-1]]))
+    return out
+
+
+def _run_grid(make_sim, ms, use_vmap: bool, bucketed: bool = True):
+    """Run ``sim = make_sim(m_pad)`` over the grid; rows follow ``ms`` order.
+
+    ``make_sim(m_pad)`` must return a closure ``sim(m) -> (n_evals,)`` that
+    is numerically independent of ``m_pad`` for any ``m <= m_pad`` (shared
+    draws sliced, reductions masked) — that contract is what makes the
+    three execution modes here interchangeable.
+    """
+    m_top = max(ms)
+    if not use_vmap:
+        jsim = jax.jit(make_sim(m_top))   # one compile serves every m
+        return jnp.stack([jsim(m) for m in jnp.asarray(ms, jnp.int32)])
+    if not bucketed:
+        return jax.jit(jax.vmap(make_sim(m_top)))(jnp.asarray(ms, jnp.int32))
+    rows = [None] * len(ms)
+    for pos, m_pad in _buckets(ms):
+        sub = jnp.asarray([ms[i] for i in pos], jnp.int32)
+        out = jax.jit(jax.vmap(make_sim(m_pad)))(sub)
+        for k, i in enumerate(pos):
+            rows[i] = out[k]
+    return jnp.stack(rows)
 
 
 # ---------------------------------------------------------------------------
@@ -68,101 +130,119 @@ def _run_grid(sim, ms, use_vmap: bool):
 
 def sweep_minibatch(train, test, ms: Sequence[int], *, iters: int,
                     eval_every: int, gamma=0.1, lam=LAMBDA, key=None,
-                    use_vmap=True) -> Dict:
+                    use_vmap=True, bucketed=True) -> Dict:
     key = key if key is not None else jax.random.PRNGKey(0)
     X, y, Xte, yte = train.X, train.y, test.X, test.y
     n, d = X.shape
-    m_max = max(ms)
-    order = jax.random.randint(key, (iters, m_max), 0, n)
+    m_top = max(ms)
+    order = jax.random.randint(key, (iters, m_top), 0, n)
     n_evals = iters // eval_every
 
-    def sim(m):
-        active = (jnp.arange(m_max) < m).astype(jnp.float32)
-        mf = m.astype(jnp.float32)
+    def make_sim(m_pad):
+        sub_order = order[:, :m_pad]
 
-        def step(x, idx):
-            Xb, yb = X[idx], y[idx]                  # (m_max, d), (m_max,)
-            sig = jax.nn.sigmoid(-(yb * (Xb @ x)))
-            g = -((sig * yb * active) @ Xb) / mf + lam * x
-            return x - gamma * g, None
+        def sim(m):
+            active = (jnp.arange(m_pad) < m).astype(jnp.float32)
+            mf = m.astype(jnp.float32)
 
-        def outer(x, e):
-            idxs = jax.lax.dynamic_slice_in_dim(order, e * eval_every,
-                                                eval_every, axis=0)
-            x, _ = jax.lax.scan(step, x, idxs)
-            return x, test_logloss(x, Xte, yte)
+            def step(x, idx):
+                Xb, yb = X[idx], y[idx]              # (m_pad, d), (m_pad,)
+                sig = jax.nn.sigmoid(-(yb * (Xb @ x)))
+                g = -((sig * yb * active) @ Xb) / mf + lam * x
+                return x - gamma * g, None
 
-        _, losses = jax.lax.scan(outer, jnp.zeros((d,)), jnp.arange(n_evals))
-        return losses
+            def outer(x, e):
+                idxs = jax.lax.dynamic_slice_in_dim(sub_order, e * eval_every,
+                                                    eval_every, axis=0)
+                x, _ = jax.lax.scan(step, x, idxs)
+                return x, test_logloss(x, Xte, yte)
 
-    losses = _run_grid(sim, ms, use_vmap)
+            _, losses = jax.lax.scan(outer, jnp.zeros((d,)),
+                                     jnp.arange(n_evals))
+            return losses
+
+        return sim
+
+    losses = _run_grid(make_sim, ms, use_vmap, bucketed)
     return _losses_dict("minibatch", ms, losses, iters, eval_every)
 
 
 # ---------------------------------------------------------------------------
-# ECD-PSGD (Alg 4): ring of m workers as a masked (m_max, m_max) mixing matrix
+# ECD-PSGD (Alg 4): ring of m workers as a masked (m_pad, m_pad) mixing matrix
 # ---------------------------------------------------------------------------
 
-def _ring_matrix(m, m_max: int):
+def _ring_matrix(m, m_pad: int):
     """W with W[i] = (e_i + e_{i-1 mod m} + e_{i+1 mod m})/3 for i < m and
     identity rows for padded workers — the roll-based ring of ecd_psgd.py
     expressed so that m can be traced data."""
-    ids = jnp.arange(m_max)
-    eye = jnp.eye(m_max)
+    ids = jnp.arange(m_pad)
+    eye = jnp.eye(m_pad)
     W = (eye + eye[(ids - 1) % m] + eye[(ids + 1) % m]) / 3.0
     return jnp.where((ids < m)[:, None], W, eye)
 
 
 def sweep_ecd_psgd(train, test, ms: Sequence[int], *, iters: int,
                    eval_every: int, gamma=0.1, lam=LAMBDA, compress_bits=8,
-                   key=None, use_vmap=True) -> Dict:
+                   key=None, use_vmap=True, bucketed=True) -> Dict:
     key = key if key is not None else jax.random.PRNGKey(0)
     X, y, Xte, yte = train.X, train.y, test.X, test.y
     n, d = X.shape
-    m_max = max(ms)
+    m_top = max(ms)
     k_order, k_q = jax.random.split(key)
-    order = jax.random.randint(k_order, (iters, m_max), 0, n)
+    order = jax.random.randint(k_order, (iters, m_top), 0, n)
+    # Per-(iteration, worker) quantization keys, hoisted out of the scan:
+    # one vectorized fold_in+split here replaces two chained RNG ops per
+    # step, and drawing at m_top keeps worker i's key identical in every
+    # bucket (and to the flat grid).  Same draws as the in-scan version.
+    wkeys = jax.vmap(lambda t: jax.random.split(
+        jax.random.fold_in(k_q, t), m_top))(jnp.arange(iters))
     n_evals = iters // eval_every
 
-    def sim(m):
-        active = (jnp.arange(m_max) < m).astype(jnp.float32)
-        mf = m.astype(jnp.float32)
-        W = _ring_matrix(m, m_max)
+    def make_sim(m_pad):
+        sub_order = order[:, :m_pad]
+        sub_keys = wkeys[:, :m_pad]
 
-        def one_iter(carry, inp):
-            xs, ys = carry                   # (m_max, d) models / y-vars
-            idx, kq, t = inp
-            tf = t.astype(jnp.float32) + 1.0
-            x_half = W @ ys                  # neighbors pull compressed y
+        def sim(m):
+            active = (jnp.arange(m_pad) < m).astype(jnp.float32)
+            mf = m.astype(jnp.float32)
+            W = _ring_matrix(m, m_pad)
 
-            def grad_w(xi, i):
-                sig = jax.nn.sigmoid(-(y[i] * jnp.dot(X[i], xi)))
-                return -sig * y[i] * X[i] + lam * xi
+            def one_iter(carry, inp):
+                xs, ys = carry               # (m_pad, d) models / y-vars
+                idx, kqs, t = inp            # kqs: (m_pad,) worker keys
+                tf = t.astype(jnp.float32) + 1.0
+                x_half = W @ ys              # neighbors pull compressed y
 
-            x_new = x_half - gamma * jax.vmap(grad_w)(xs, idx)
-            # z = (1 - t/2) x_t + (t/2) x_{t+1};  y = (1-2/t) y + (2/t) C(z)
-            z = (1.0 - tf / 2.0) * xs + (tf / 2.0) * x_new
-            kqs = jax.random.split(kq, m_max)
-            cz = jax.vmap(lambda zz, kk: dequantize(
-                *quantize_stochastic(zz, kk, bits=compress_bits)))(z, kqs)
-            y_new = (1.0 - 2.0 / tf) * ys + (2.0 / tf) * cz
-            return (x_new, y_new), None
+                def grad_w(xi, i):
+                    sig = jax.nn.sigmoid(-(y[i] * jnp.dot(X[i], xi)))
+                    return -sig * y[i] * X[i] + lam * xi
 
-        def outer(carry, e):
-            base = e * eval_every
-            ts = base + jnp.arange(eval_every)
-            keys = jax.vmap(lambda t: jax.random.fold_in(k_q, t))(ts)
-            idxs = jax.lax.dynamic_slice_in_dim(order, base, eval_every,
-                                                axis=0)
-            carry, _ = jax.lax.scan(one_iter, carry, (idxs, keys, ts))
-            x_avg = (active @ carry[0]) / mf      # mean over live workers
-            return carry, test_logloss(x_avg, Xte, yte)
+                x_new = x_half - gamma * jax.vmap(grad_w)(xs, idx)
+                # z = (1 - t/2) x_t + (t/2) x_{t+1};  y = (1-2/t) y + (2/t) C(z)
+                z = (1.0 - tf / 2.0) * xs + (tf / 2.0) * x_new
+                cz = jax.vmap(lambda zz, kk: dequantize(
+                    *quantize_stochastic(zz, kk, bits=compress_bits)))(z, kqs)
+                y_new = (1.0 - 2.0 / tf) * ys + (2.0 / tf) * cz
+                return (x_new, y_new), None
 
-        carry0 = (jnp.zeros((m_max, d)), jnp.zeros((m_max, d)))
-        _, losses = jax.lax.scan(outer, carry0, jnp.arange(n_evals))
-        return losses
+            def outer(carry, e):
+                base = e * eval_every
+                ts = base + jnp.arange(eval_every)
+                idxs = jax.lax.dynamic_slice_in_dim(sub_order, base,
+                                                    eval_every, axis=0)
+                keys = jax.lax.dynamic_slice_in_dim(sub_keys, base,
+                                                    eval_every, axis=0)
+                carry, _ = jax.lax.scan(one_iter, carry, (idxs, keys, ts))
+                x_avg = (active @ carry[0]) / mf  # mean over live workers
+                return carry, test_logloss(x_avg, Xte, yte)
 
-    losses = _run_grid(sim, ms, use_vmap)
+            carry0 = (jnp.zeros((m_pad, d)), jnp.zeros((m_pad, d)))
+            _, losses = jax.lax.scan(outer, carry0, jnp.arange(n_evals))
+            return losses
+
+        return sim
+
+    losses = _run_grid(make_sim, ms, use_vmap, bucketed)
     return _losses_dict("ecd_psgd", ms, losses, iters, eval_every)
 
 
@@ -171,67 +251,95 @@ def sweep_ecd_psgd(train, test, ms: Sequence[int], *, iters: int,
 # ---------------------------------------------------------------------------
 
 def sweep_dadm(train, test, ms: Sequence[int], *, iters: int, eval_every: int,
-               local_batch=8, lam=LAMBDA, key=None, use_vmap=True) -> Dict:
+               local_batch=8, lam=LAMBDA, key=None, use_vmap=True,
+               bucketed=False) -> Dict:
+    # bucketed defaults to False here: DADM's dual state is (n,)-sized and
+    # m-independent, so replaying the alpha/v updates once per bucket costs
+    # more than the padded per-worker FLOPs it saves.  The flag is honored
+    # if explicitly requested (the equivalence tests exercise it).
     key = key if key is not None else jax.random.PRNGKey(0)
     X, y, Xte, yte = train.X, train.y, test.X, test.y
     n, d = X.shape
-    m_max = max(ms)
-    order = jax.random.randint(key, (iters, m_max, local_batch), 0, n)
+    m_top = max(ms)
+    order = jax.random.randint(key, (iters, m_top, local_batch), 0, n)
     sq_norms = jnp.sum(X * X, axis=1)
     step_sz = jnp.minimum(1.0, (lam * n) / (sq_norms / 4.0 + lam * n))
     n_evals = iters // eval_every
 
-    def sim(m):
-        active = (jnp.arange(m_max) < m).astype(jnp.float32)
+    def make_sim(m_pad):
+        sub_order = order[:, :m_pad]
 
-        def one_iter(carry, idx):
-            alpha, v = carry                 # (n,), (d,)
-            x = v
+        def sim(m):
+            active = (jnp.arange(m_pad) < m).astype(jnp.float32)
 
-            def worker(idx_w):
-                Xi, yi, ai = X[idx_w], y[idx_w], alpha[idx_w]
-                p = jax.nn.sigmoid(-(yi * (Xi @ x)))
-                da = (p - ai) * step_sz[idx_w]
-                dv = (yi * da) @ Xi / (lam * n)
-                return da, dv
+            def one_iter(carry, idx):
+                alpha, v = carry             # (n,), (d,)
+                x = v
 
-            das, dvs = jax.vmap(worker)(idx)         # (m_max, lb), (m_max, d)
-            das = das * active[:, None]              # padded workers sit out
-            alpha = alpha.at[idx.reshape(-1)].add(das.reshape(-1))
-            v = v + active @ dvs                     # masked all-gather sum
-            return (alpha, v), None
+                def worker(idx_w):
+                    Xi, yi, ai = X[idx_w], y[idx_w], alpha[idx_w]
+                    p = jax.nn.sigmoid(-(yi * (Xi @ x)))
+                    da = (p - ai) * step_sz[idx_w]
+                    dv = (yi * da) @ Xi / (lam * n)
+                    return da, dv
 
-        alpha0 = jnp.full((n,), 0.5)
-        v0 = (y * alpha0) @ X / (lam * n)
+                das, dvs = jax.vmap(worker)(idx)     # (m_pad, lb), (m_pad, d)
+                das = das * active[:, None]          # padded workers sit out
+                alpha = alpha.at[idx.reshape(-1)].add(das.reshape(-1))
+                v = v + active @ dvs                 # masked all-gather sum
+                return (alpha, v), None
 
-        def outer(carry, e):
-            idxs = jax.lax.dynamic_slice_in_dim(order, e * eval_every,
-                                                eval_every, axis=0)
-            carry, _ = jax.lax.scan(one_iter, carry, idxs)
-            return carry, test_logloss(carry[1], Xte, yte)
+            alpha0 = jnp.full((n,), 0.5)
+            v0 = (y * alpha0) @ X / (lam * n)
 
-        _, losses = jax.lax.scan(outer, (alpha0, v0), jnp.arange(n_evals))
-        return losses
+            def outer(carry, e):
+                idxs = jax.lax.dynamic_slice_in_dim(sub_order, e * eval_every,
+                                                    eval_every, axis=0)
+                carry, _ = jax.lax.scan(one_iter, carry, idxs)
+                return carry, test_logloss(carry[1], Xte, yte)
 
-    losses = _run_grid(sim, ms, use_vmap)
+            _, losses = jax.lax.scan(outer, (alpha0, v0), jnp.arange(n_evals))
+            return losses
+
+        return sim
+
+    losses = _run_grid(make_sim, ms, use_vmap, bucketed)
     return _losses_dict("dadm", ms, losses, iters, eval_every)
 
 
 # ---------------------------------------------------------------------------
-# Hogwild! — sequential path (see module docstring)
+# Hogwild! (Alg 1): one flat vmap over the traced-m staleness recurrence
 # ---------------------------------------------------------------------------
 
 def sweep_hogwild(train, test, ms: Sequence[int], *, iters: int,
                   eval_every: int, gamma=0.1, lam=LAMBDA, key=None,
-                  use_vmap=True) -> Dict:
-    del use_vmap                 # accepted for interface symmetry only
-    curves = []
-    for m in ms:
-        r = run_hogwild(train, test, m=int(m), iters=iters, gamma=gamma,
-                        lam=lam, eval_every=eval_every, key=key)
-        curves.append(r["losses"])
-    return _losses_dict("hogwild", ms, jnp.stack(
-        [jnp.asarray(c) for c in curves]), iters, eval_every)
+                  use_vmap=True, bucketed=True) -> Dict:
+    del bucketed   # work is O(iters * d) regardless of m_pad — always flat
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if not use_vmap:
+        # Legacy per-m reference path (re-jits per m): the vmapped grid is
+        # equivalence-tested against this, i.e. against the original
+        # recurrence rather than against another padded kernel.
+        curves = [run_hogwild(train, test, m=int(m), iters=iters, gamma=gamma,
+                              lam=lam, eval_every=eval_every, key=key)["losses"]
+                  for m in ms]
+        return _losses_dict("hogwild", ms,
+                            jnp.stack([jnp.asarray(c) for c in curves]),
+                            iters, eval_every)
+
+    X, y, Xte, yte = train.X, train.y, test.X, test.y
+    n = X.shape[0]
+    # identical draw to run_hogwild's: the sequence is m-independent
+    order = jax.random.randint(key, (iters,), 0, n)
+
+    def make_sim(m_pad):
+        sim = hogwild_mod.masked_sim(
+            X, y, Xte, yte, order, m_pad=m_pad, gamma=gamma, lam=lam,
+            eval_every=eval_every, n_evals=iters // eval_every)
+        return lambda m: sim(m)[1]           # losses only
+
+    losses = _run_grid(make_sim, ms, use_vmap=True, bucketed=False)
+    return _losses_dict("hogwild", ms, losses, iters, eval_every)
 
 
 SWEEPERS = {
@@ -243,12 +351,22 @@ SWEEPERS = {
 
 
 def run_algorithm_sweep(algorithm: str, train, test, ms, *, iters,
-                        eval_every, use_vmap=True, **kwargs) -> Dict:
-    """Dispatch one (algorithm, dataset) job over the worker grid."""
+                        eval_every, use_vmap=True, bucketed=None,
+                        **kwargs) -> Dict:
+    """Dispatch one (algorithm, dataset) job over the worker grid.
+
+    ``bucketed=None`` keeps each sweeper's own default (bucketed for
+    mini-batch/ECD-PSGD, flat for DADM/Hogwild!); True/False forces a
+    policy for the sweepers that honor it.  Hogwild! always runs flat —
+    its work is independent of the pad width, so `sweep_hogwild` ignores
+    the flag rather than add compiles for nothing.
+    """
     try:
         fn = SWEEPERS[algorithm]
     except KeyError:
         raise KeyError(f"unknown algorithm {algorithm!r}; "
                        f"known: {sorted(SWEEPERS)}") from None
+    if bucketed is not None:
+        kwargs["bucketed"] = bucketed
     return fn(train, test, list(ms), iters=iters, eval_every=eval_every,
               use_vmap=use_vmap, **kwargs)

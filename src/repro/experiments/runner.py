@@ -6,7 +6,7 @@ share.  For each job it
   1. materializes the job's dataset (`spec.build_dataset`) and splits it
      70/20 per the spec's shuffle policy,
   2. runs the worker-count grid through `engine.run_algorithm_sweep`
-     (vmapped for the synchronous algorithms, sequential for Hogwild!),
+     (bucketed vmapped grids for all four algorithms, Hogwild! included),
   3. if the spec declares an epsilon readout, derives epsilon from the
      probe-m curve, converts curves to per-worker costs (§V.A.1), and
      computes gain growth + the measured upper bound m_max (§V.B),
@@ -53,7 +53,9 @@ def _epsilon_from_probe(job_result: Dict, eps_spec) -> float:
     reaches after `frac` of its eval budget — reachable by every setting,
     discriminative between them."""
     curve = curves_by_m(job_result)[eps_spec.probe_m]
-    return float(curve[int(len(curve) * eps_spec.frac)])
+    # frac == 1.0 would index one past the end; clamp to the last eval
+    idx = min(int(len(curve) * eps_spec.frac), len(curve) - 1)
+    return float(curve[idx])
 
 
 def _cost_readout(job_result: Dict, epsilon: float, asynchronous: bool):
@@ -98,8 +100,8 @@ def run_sweep(spec: SweepSpec, *, use_cache: bool = True, force: bool = False,
     for name, data in datasets.items():
         info: Dict = {"n": int(data.X.shape[0]), "d": int(data.X.shape[1])}
         if spec.measure_csim > 0:
-            info["csim"] = MX.csim_ref(data.X[:spec.csim_rows],
-                                       spec.measure_csim)
+            info["csim"] = MX.csim(data.X[:spec.csim_rows],
+                                   spec.measure_csim)
         if spec.characters_rows > 0:
             info["characters"] = MX.summarize(data.X[:spec.characters_rows])
         result["datasets"][name] = info

@@ -32,8 +32,17 @@ import jax
 
 from repro.data import synth
 
-# Bump when engine numerics change: invalidates every cached sweep artifact.
-ENGINE_VERSION = 1
+# ENGINE_VERSION is hashed into every spec fingerprint (see `fingerprint`),
+# which keys the on-disk artifact cache: bumping it orphans every cached
+# sweep artifact at once, forcing recomputation under the new engine.  Bump
+# it whenever engine *numerics* change — new kernels, different random-draw
+# layout, changed readouts — never for pure refactors that keep curves
+# bit-compatible.  Stale artifacts are never deleted, just unreachable.
+#
+#   1: PR-1 unified vmapped engine (Hogwild! sequential)
+#   2: PR-2 one-trace grid: vmapped Hogwild!, bucketed m-padding, fused
+#      dataset-characters pipeline (Pallas-routed C_sim / LS_sync)
+ENGINE_VERSION = 2
 
 ALGORITHMS = ("minibatch", "ecd_psgd", "hogwild", "dadm")
 

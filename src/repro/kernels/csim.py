@@ -60,11 +60,20 @@ def l0_rows(x, y, *, tol=0.0, bn=DEFAULT_BN, bd=DEFAULT_BD, interpret=True):
     return out[:n, 0]
 
 
+@functools.partial(jax.jit, static_argnames=("rng", "tol", "interpret"))
 def csim_kernel(X, rng: int, tol=0.0, *, interpret=True):
-    """Eq. 3 via the Pallas L0 kernel; wrapper loops the (small) shift range."""
+    """Eq. 3 via the Pallas L0 kernel, fused as one `lax.scan` over the
+    shift range — one trace and one compiled pipeline regardless of rng
+    (the old wrapper unrolled rng separate pallas calls)."""
     n = X.shape[0]
-    total = jnp.zeros((), jnp.float32)
-    for j in range(1, rng + 1):
+    rows = jnp.arange(n)
+
+    def body(total, j):
+        Xs = X[(rows + j) % n]               # == jnp.roll(X, -j, axis=0)
         total = total + jnp.sum(
-            l0_rows(X, jnp.roll(X, -j, axis=0), tol=tol, interpret=interpret))
+            l0_rows(X, Xs, tol=tol, interpret=interpret))
+        return total, None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                            jnp.arange(1, rng + 1))
     return total / (n * rng)

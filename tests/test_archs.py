@@ -30,6 +30,7 @@ def _batch_for(cfg, B=2, S=32, with_labels=True):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_id", ARCH_IDS)
 def test_reduced_forward_shapes_no_nan(arch_id):
     cfg = get_arch(arch_id).reduced()
@@ -43,6 +44,7 @@ def test_reduced_forward_shapes_no_nan(arch_id):
     assert not bool(jnp.isnan(logits).any())
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_id", ARCH_IDS)
 def test_reduced_train_step(arch_id):
     cfg = get_arch(arch_id).reduced()
@@ -66,6 +68,7 @@ def test_reduced_train_step(arch_id):
     assert np.isfinite(l1) and l1 < float(l0) + 0.1
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch_id", ARCH_IDS)
 def test_prefill_decode_consistency(arch_id):
     cfg = get_arch(arch_id).reduced()

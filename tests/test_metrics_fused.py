@@ -1,0 +1,93 @@
+"""Fused dataset-characters pipeline vs the retained pure-jnp oracles.
+
+The §IV hot paths (`csim`, `ls_sync`, `batch_internal_similarity`) were
+rewritten as single jitted `lax.scan` pipelines that can route the per-row
+L0 count through the Pallas kernels (interpret mode off-TPU) or plain jnp.
+Every fused route must agree with its Python-loop/broadcast oracle on
+dense, sparse, and duplicate-row datasets — L0 counts are integers, so
+agreement is essentially exact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import metrics as MX
+from repro.data import synth
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _datasets():
+    dense = jax.random.normal(KEY, (64, 33))
+    sparse = synth.make_realsim_like(KEY, n=80, d=50, density=0.05).X
+    dup = jnp.tile(dense[:4], (16, 1))      # 16 copies of 4 distinct rows
+    return {"dense": dense, "sparse": sparse, "duplicates": dup}
+
+
+DATASETS = _datasets()
+
+
+@pytest.mark.parametrize("use_kernel", [True, False],
+                         ids=["pallas", "jnp"])
+@pytest.mark.parametrize("name", sorted(DATASETS))
+def test_csim_fused_matches_ref(name, use_kernel):
+    X = DATASETS[name]
+    for rng in (1, 4, 9):
+        got = MX.csim(X, rng, use_kernel=use_kernel)
+        want = MX.csim_ref(X, rng)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("use_kernel", [True, False],
+                         ids=["pallas", "jnp"])
+@pytest.mark.parametrize("name", sorted(DATASETS))
+def test_batch_internal_similarity_fused_matches_ref(name, use_kernel):
+    X = DATASETS[name]
+    for b in (2, 7, 16):
+        got = MX.batch_internal_similarity(X[:b], use_kernel=use_kernel)
+        want = MX.batch_internal_similarity_ref(X[:b])
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("use_kernel", [True, False],
+                         ids=["pallas", "jnp"])
+@pytest.mark.parametrize("name", sorted(DATASETS))
+def test_ls_sync_fused_matches_ref(name, use_kernel):
+    X = DATASETS[name]
+    for batch_size in (4, 8, 11):           # 11: trailing rows dropped
+        got = MX.ls_sync(X, batch_size, use_kernel=use_kernel)
+        want = MX.ls_sync_ref(X, batch_size)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_singleton_batch_is_zero():
+    """b == 1 has no pairs; both paths define the similarity as 0."""
+    X = DATASETS["dense"]
+    assert MX.batch_internal_similarity(X[:1]) == 0.0
+    assert MX.batch_internal_similarity_ref(X[:1]) == 0.0
+
+
+def test_tolerance_threads_through():
+    """Coordinates differing by <= tol are not counted on any route."""
+    Xb = jnp.array([[0.0, 0.0, 0.0], [0.05, 0.5, 0.0]], jnp.float32)
+    for use_kernel in (True, False):
+        assert MX.batch_internal_similarity(
+            Xb, tol=0.1, use_kernel=use_kernel) == pytest.approx(1.0)
+        assert MX.csim(Xb, 1, tol=0.1,
+                       use_kernel=use_kernel) == pytest.approx(1.0)
+
+
+def test_ls_async_routes_through_fused_csim():
+    X = DATASETS["sparse"]
+    assert MX.ls_async(X, 4) == pytest.approx(MX.csim_ref(X, 4), rel=1e-6)
+
+
+def test_summarize_uses_fused_paths():
+    """summarize must stay consistent with the oracle definitions."""
+    X = DATASETS["duplicates"]
+    s = MX.summarize(X, tau_max=3, batch_size=8)
+    assert s["csim_async"] == pytest.approx(MX.csim_ref(X, 3), rel=1e-6)
+    assert s["csim_sync"] == pytest.approx(MX.ls_sync_ref(X, 8), rel=1e-6)
+    assert s["diversity"] == 4

@@ -13,6 +13,7 @@ from repro.serve.engine import greedy_generate, init_serve_state, make_serve_ste
 KEY = jax.random.PRNGKey(0)
 
 
+@pytest.mark.slow
 def test_greedy_generate_deterministic():
     cfg = get_arch("qwen2.5-3b").reduced()
     params = M.init_params(KEY, cfg)
@@ -63,6 +64,7 @@ def test_decode_state_constant_size_for_ssm():
     assert n1 == n2
 
 
+@pytest.mark.slow
 def test_whisper_serve_uses_encoder():
     cfg = get_arch("whisper-small").reduced()
     params = M.init_params(KEY, cfg)

@@ -53,6 +53,7 @@ def test_adamw_state_dtype_and_count():
     assert p2["w"].dtype == jnp.bfloat16
 
 
+@pytest.mark.slow
 def test_train_loop_reduces_loss():
     """End-to-end: reduced arch + HMM stream, loss must drop measurably."""
     from repro.launch.train import train_loop
@@ -62,6 +63,7 @@ def test_train_loop_reduces_loss():
     assert hist[-1] < hist[0] - 0.4, (hist[0], hist[-1])
 
 
+@pytest.mark.slow
 def test_stale_strategy_trains():
     from repro.launch.train import train_loop
     cfg = get_arch("gemma3-1b").reduced()
@@ -92,6 +94,7 @@ def test_quantize_compression_error_shrinks_with_bits():
     assert errs[0] > errs[1] > errs[2]
 
 
+@pytest.mark.slow
 def test_microbatch_split_matches_full_grad():
     """Gradient accumulated over microbatches == full-batch gradient."""
     from repro.train.steps import _split_microbatches
