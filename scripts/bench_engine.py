@@ -1,8 +1,16 @@
 #!/usr/bin/env python
-"""Engine wall-clock benchmark — emits BENCH_2.json (perf-trajectory anchor).
+"""Engine wall-clock benchmark — emits BENCH_3.json (perf-trajectory anchor).
+
+ENGINE_VERSION 3 replaced the four hand-written sweepers with one generic
+Algorithm x Problem dispatch path; the claim to verify is that the
+protocol indirection costs nothing — same compile counts, wall-clock
+within noise of BENCH_2.  The configurations therefore mirror BENCH_2
+exactly (the sweep signatures are unchanged), plus each timing now
+records the *measured* number of jit compilations (`engine.JIT_CALLS`)
+and the payload embeds the BENCH_2 numbers for direct comparison.
 
 Three measurements, chosen to isolate what the ENGINE_VERSION-2 rewrite
-changed relative to PR 1:
+changed relative to PR 1 (all still tracked):
 
 1. **main** — the full 4-algorithm sweep over a *fine* worker grid
    (m = 1..32, the paper's m_max-detection regime) on the dense
@@ -64,15 +72,18 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 def time_configuration(tr, te, ms, iters, eval_every, *, use_vmap, bucketed,
                        hogwild_legacy):
-    """Wall-clock one full 4-algorithm sweep, cold (fresh jit caches)."""
+    """Wall-clock one full 4-algorithm sweep, cold (fresh jit caches).
+    Returns (seconds, jit compile count) — every jit the engine dispatches
+    here is compiled exactly once, so JIT_CALLS is the compile count."""
     jax.clear_caches()
+    jits0 = engine.JIT_CALLS
     t0 = time.perf_counter()
     for algo in ALGOS:
         uv = False if (algo == "hogwild" and hogwild_legacy) else use_vmap
         engine.run_algorithm_sweep(algo, tr, te, ms, iters=iters,
                                    eval_every=eval_every, use_vmap=uv,
                                    bucketed=bucketed)
-    return time.perf_counter() - t0
+    return time.perf_counter() - t0, engine.JIT_CALLS - jits0
 
 
 def time_characters(X, rng, batch_size):
@@ -134,7 +145,7 @@ def main(argv=None):
     p.add_argument("--quick", action="store_true",
                    help="small sizes for a fast smoke of the bench itself")
     p.add_argument("--out", default=None,
-                   help="output path (default: BENCH_2.json at the repo "
+                   help="output path (default: BENCH_3.json at the repo "
                         "root; quick mode defaults elsewhere so a smoke "
                         "never overwrites the committed perf anchor)")
     args = p.parse_args(argv)
@@ -142,8 +153,8 @@ def main(argv=None):
         args.n, args.d, args.iters, args.eval_every = 300, 12, 400, 100
         args.m_max = 8
     if args.out is None:
-        args.out = (os.path.join(tempfile.gettempdir(), "BENCH_2.quick.json")
-                    if args.quick else os.path.join(ROOT, "BENCH_2.json"))
+        args.out = (os.path.join(tempfile.gettempdir(), "BENCH_3.quick.json")
+                    if args.quick else os.path.join(ROOT, "BENCH_3.json"))
     ms = list(range(1, args.m_max + 1))
 
     ds = synth.make_higgs_like(jax.random.PRNGKey(0), n=args.n, d=args.d)
@@ -160,10 +171,12 @@ def main(argv=None):
         "engine_default": dict(use_vmap=True, bucketed=None,
                                hogwild_legacy=False),
     }
-    timings = {}
+    timings, jit_counts = {}, {}
     for name, cfg in configs.items():
-        timings[name] = time_configuration(tr, te, **kw, **cfg)
-        print(f"{name:>15}: {timings[name]:7.2f} s")
+        timings[name], jit_counts[name] = time_configuration(
+            tr, te, **kw, **cfg)
+        print(f"{name:>15}: {timings[name]:7.2f} s "
+              f"({jit_counts[name]} compiles)")
 
     chars_ref, chars_fused = time_characters(
         ds.X[:min(400, args.n)], rng=args.m_max, batch_size=args.m_max)
@@ -187,6 +200,18 @@ def main(argv=None):
 
     speedup = (timings["pr1"] + chars_ref) / (timings["engine_default"]
                                               + chars_fused)
+    # embed the PR-2 anchor for the within-noise comparison, if present
+    vs_bench2 = None
+    b2_path = os.path.join(ROOT, "BENCH_2.json")
+    if not args.quick and os.path.exists(b2_path):
+        with open(b2_path) as f:
+            b2 = json.load(f)["main"]["wall_clock_s"]
+        vs_bench2 = {
+            "bench2_wall_clock_s": b2,
+            "ratio_engine_default": timings["engine_default"]
+            / max(b2["engine_default"], 1e-9),
+        }
+
     payload = {
         "bench": "engine_sweep",
         "engine_version": ENGINE_VERSION,
@@ -198,6 +223,7 @@ def main(argv=None):
                        "iters": args.iters, "eval_every": args.eval_every,
                        "ms": f"1..{args.m_max}"},
             "wall_clock_s": timings,
+            "jit_compiles": jit_counts,
             "hogwild_compiles": {"pr1": len(ms), "vmap": 1},
         },
         "characters": {
@@ -216,6 +242,7 @@ def main(argv=None):
         },
         "cache_roundtrip_s": {"fresh": fresh, "cached": cached,
                               "speedup": fresh / max(cached, 1e-9)},
+        "vs_bench2": vs_bench2,
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)

@@ -1,15 +1,27 @@
-"""The paper's four parallel training algorithms on its Eq. 4 model
-(L2-regularized logistic regression, `lr.py`): Hogwild! (Alg 1, async,
+"""The paper's four parallel training algorithms, ported onto the
+registered `Algorithm` protocol (`base.py`): Hogwild! (Alg 1, async,
 deterministic staleness simulation), mini-batch SGD (Alg 2, batch size =
 degree of parallelism), DADM (Alg 3, distributed dual coordinate ascent)
-and ECD-PSGD (Alg 4, decentralized ring gossip with compression).  Each
-`run_*` returns the shared result contract ({"losses", "m", "iters",
-"eval_every", ...}) the scalability machinery consumes; the m-grid batched
-versions live in `repro.experiments.engine`.
+and ECD-PSGD (Alg 4, decentralized ring gossip with compression).
+
+Each module carries two faces:
+
+  * a registered protocol dataclass (`Minibatch`, `Hogwild`, `EcdPsgd`,
+    `Dadm`) — what `repro.experiments.engine` dispatches through, generic
+    over the `repro.core.problems` objective;
+  * the legacy per-m ``run_*`` runner — a thin deprecated adapter with the
+    original `{"losses", "m", "iters", "eval_every", ...}` contract, kept
+    as the independent oracle the engine equivalence tests pin against.
+
+Importing this package populates the registry; resolve entries with
+`base.get_algorithm` / enumerate with `base.registered_algorithms`.
 """
 
+from repro.core.algorithms.base import (ALGORITHMS, Algorithm, SimContext,
+                                        get_algorithm, register_algorithm,
+                                        registered_algorithms)
 from repro.core.algorithms.lr import logloss, lr_grad, test_logloss
-from repro.core.algorithms.hogwild import run_hogwild
-from repro.core.algorithms.minibatch import run_minibatch
-from repro.core.algorithms.ecd_psgd import run_ecd_psgd
-from repro.core.algorithms.dadm import run_dadm
+from repro.core.algorithms.hogwild import Hogwild, run_hogwild
+from repro.core.algorithms.minibatch import Minibatch, run_minibatch
+from repro.core.algorithms.ecd_psgd import EcdPsgd, run_ecd_psgd
+from repro.core.algorithms.dadm import Dadm, run_dadm

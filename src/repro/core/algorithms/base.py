@@ -1,0 +1,127 @@
+"""The `Algorithm` protocol — the engine-facing shape of a parallel trainer.
+
+`repro.experiments.engine` runs every algorithm the same way (one masked,
+padded simulation vmapped over the worker grid, see docs/architecture.md);
+what varies per algorithm is captured by this protocol:
+
+  ``make_draws(key, n, iters, m_top)``   every random draw of the whole run,
+        made once at the *global* top of the worker grid so that sweep
+        member m consumes identical randomness in any bucket / mode
+  ``slice_draws(draws, m_pad)``          restrict those draws to a bucket's
+        pad width (default: first ``m_pad`` columns of any worker axis)
+  ``init_state(problem, data, ctx)``     the per-run state pytree; derived
+        constants (ring matrices, SDCA step tables) are attached to ``ctx``
+        so they are traced once per sim, not once per step
+  ``step(problem, data, ctx, state, batch, t)``  one server iteration;
+        ``batch`` is the per-iteration slice of the draws, ``t`` the traced
+        global iteration index
+  ``readout(ctx, state)``                the model the loss curve evaluates
+
+Hyperparameters are dataclass fields (``Minibatch(gamma=0.05)``); loss,
+gradient, and the DADM dual update come from the `Problem` argument
+(`repro.core.problems`), never from the algorithm itself — that is what
+makes the sweep generic over objectives.
+
+Class-level policy flags steer the engine without special cases:
+
+  ``asynchronous``     cost readout divides server iterations by m (§V.A.1)
+  ``bucketed_default`` whether bucketed m-padding pays for this algorithm
+  ``force_flat``       always one flat vmap (work independent of pad width)
+  ``predictor``        which theory-side m_max predictor applies
+        ("sync" | "hogwild" | "dadm" — see `experiments.runner`)
+
+Register with :func:`register_algorithm`; the registry is *live* (latest
+registration wins) and spec fingerprints hash the registered source, so
+editing an Algorithm invalidates exactly the cached sweeps that used it.
+
+The masked-simulation contract every implementation must keep: for any
+``m <= m_pad``, padded workers (index >= m) are excluded from every
+reduction and every stateful write, so the padded run is numerically the
+m-worker run — `tests/test_protocols.py` enforces this for every
+registered Algorithm x Problem pair.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar, Dict, Type
+
+import jax
+import jax.numpy as jnp
+
+#: name -> Algorithm subclass.  Live view; latest registration wins.
+ALGORITHMS: Dict[str, Type["Algorithm"]] = {}
+
+#: predictor kinds an Algorithm may declare (resolved in experiments.runner)
+PREDICTOR_KINDS = ("sync", "hogwild", "dadm")
+
+
+def register_algorithm(cls: Type["Algorithm"]) -> Type["Algorithm"]:
+    """Class decorator: make an Algorithm resolvable by its ``name``."""
+    if not (isinstance(getattr(cls, "name", None), str) and cls.name):
+        raise TypeError(f"{cls!r} needs a non-empty ClassVar 'name'")
+    if cls.predictor not in PREDICTOR_KINDS:
+        raise ValueError(f"{cls.name}: predictor {cls.predictor!r} "
+                         f"not in {PREDICTOR_KINDS}")
+    ALGORITHMS[cls.name] = cls
+    return cls
+
+
+def get_algorithm(name: str) -> Type["Algorithm"]:
+    try:
+        return ALGORITHMS[name]
+    except KeyError:
+        raise KeyError(f"unknown algorithm {name!r}; "
+                       f"known: {sorted(ALGORITHMS)}") from None
+
+
+def registered_algorithms():
+    return tuple(sorted(ALGORITHMS))
+
+
+class SimContext:
+    """Per-``sim(m)`` context: the static pad width and the *traced* live
+    worker count, plus the derived views every masked kernel needs.
+    ``init_state`` may attach algorithm-specific constants (e.g. ``ctx.W``);
+    they are closure-captured by ``step``, i.e. traced once per sim and
+    hoisted out of the iteration scan."""
+
+    def __init__(self, m, m_pad: int):
+        self.m = jnp.asarray(m, jnp.int32)      # traced live worker count
+        self.m_pad = int(m_pad)                 # static worker-axis width
+        self.mf = self.m.astype(jnp.float32)
+        #: (m_pad,) float mask — 1 for live workers, 0 for padding
+        self.active = (jnp.arange(m_pad) < self.m).astype(jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Algorithm:
+    """Base protocol.  Subclass, set ``name``, implement the five hooks."""
+
+    name: ClassVar[str] = ""
+    asynchronous: ClassVar[bool] = False
+    bucketed_default: ClassVar[bool] = True
+    force_flat: ClassVar[bool] = False
+    predictor: ClassVar[str] = "sync"
+
+    # -- randomness ---------------------------------------------------------
+    def make_draws(self, key, n: int, iters: int, m_top: int):
+        """All random draws for ``iters`` steps at the global grid top
+        ``m_top`` — a pytree of arrays with leading dim ``iters``."""
+        raise NotImplementedError
+
+    def slice_draws(self, draws, m_pad: int):
+        """Default: worker axes are axis 1 — take their first ``m_pad``
+        columns; per-iteration scalars pass through."""
+        return jax.tree.map(
+            lambda a: a[:, :m_pad] if a.ndim >= 2 else a, draws)
+
+    # -- simulation ---------------------------------------------------------
+    def init_state(self, problem, data, ctx: SimContext):
+        raise NotImplementedError
+
+    def step(self, problem, data, ctx: SimContext, state, batch, t):
+        raise NotImplementedError
+
+    def readout(self, ctx: SimContext, state):
+        raise NotImplementedError

@@ -8,13 +8,78 @@ Vectorized over workers with vmap; iteration-indexed per the PCA.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
+from typing import ClassVar
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.algorithms.base import (Algorithm, SimContext,
+                                        register_algorithm)
 from repro.core.algorithms.lr import lr_grad, test_logloss, LAMBDA
 from repro.core.compression import dequantize, quantize_stochastic
+
+
+def ring_matrix(m, m_pad: int):
+    """W with W[i] = (e_i + e_{i-1 mod m} + e_{i+1 mod m})/3 for i < m and
+    identity rows for padded workers — the roll-based ring below expressed
+    so that the live worker count m can be traced data."""
+    ids = jnp.arange(m_pad)
+    eye = jnp.eye(m_pad)
+    W = (eye + eye[(ids - 1) % m] + eye[(ids + 1) % m]) / 3.0
+    return jnp.where((ids < m)[:, None], W, eye)
+
+
+@register_algorithm
+@dataclasses.dataclass(frozen=True)
+class EcdPsgd(Algorithm):
+    """Protocol port: the ring of m workers becomes a masked
+    ``(m_pad, m_pad)`` mixing matrix (identity rows for padding), built once
+    per sim in ``init_state`` and closure-captured by ``step``.
+    Quantization keys are drawn per (iteration, worker) at the global grid
+    top and sliced per bucket, so worker i's key is identical in every
+    bucket and execution mode."""
+
+    name: ClassVar[str] = "ecd_psgd"
+    bucketed_default: ClassVar[bool] = True  # quantization work is O(m_pad)
+
+    gamma: float = 0.1
+    compress_bits: int = 8
+
+    def make_draws(self, key, n, iters, m_top):
+        k_order, k_q = jax.random.split(key)
+        order = jax.random.randint(k_order, (iters, m_top), 0, n)
+        # per-(iteration, worker) quantization keys, hoisted out of the
+        # scan: one vectorized fold_in+split replaces two chained RNG ops
+        # per step, with the same draws as the in-scan version
+        wkeys = jax.vmap(lambda t: jax.random.split(
+            jax.random.fold_in(k_q, t), m_top))(jnp.arange(iters))
+        return {"order": order, "keys": wkeys}
+
+    def init_state(self, problem, data, ctx: SimContext):
+        ctx.W = ring_matrix(ctx.m, ctx.m_pad)
+        d = data.X.shape[1]
+        return (jnp.zeros((ctx.m_pad, d)), jnp.zeros((ctx.m_pad, d)))
+
+    def step(self, problem, data, ctx: SimContext, state, batch, t):
+        xs, ys = state                       # (m_pad, d) models / y-vars
+        idx, kqs = batch["order"], batch["keys"]
+        tf = t.astype(jnp.float32) + 1.0
+        x_half = ctx.W @ ys                  # neighbors pull compressed y
+
+        grads = jax.vmap(lambda xi, i: problem.point_grad(
+            xi, data.X[i], data.y[i]))(xs, idx)
+        x_new = x_half - self.gamma * grads
+        # z = (1 - t/2) x_t + (t/2) x_{t+1};  y = (1-2/t) y + (2/t) C(z)
+        z = (1.0 - tf / 2.0) * xs + (tf / 2.0) * x_new
+        cz = jax.vmap(lambda zz, kk: dequantize(*quantize_stochastic(
+            zz, kk, bits=self.compress_bits)))(z, kqs)
+        y_new = (1.0 - 2.0 / tf) * ys + (2.0 / tf) * cz
+        return (x_new, y_new)
+
+    def readout(self, ctx: SimContext, state):
+        return (ctx.active @ state[0]) / ctx.mf   # mean over live workers
 
 
 @functools.partial(jax.jit, static_argnames=("m", "iters", "eval_every",
@@ -65,6 +130,9 @@ def _run(X, y, Xte, yte, key, m, iters, gamma, lam, eval_every,
 
 def run_ecd_psgd(train, test, *, m=4, iters=4000, gamma=0.1, lam=LAMBDA,
                  eval_every=100, compress_bits=8, key=None):
+    """Legacy per-m logistic runner (deprecated: sweeps should go through
+    `repro.experiments.engine`; kept as the independent equivalence
+    oracle)."""
     key = key if key is not None else jax.random.PRNGKey(0)
     x, losses = _run(train.X, train.y, test.X, test.y, key, m, iters,
                      gamma, lam, eval_every, compress_bits)

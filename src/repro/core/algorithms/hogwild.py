@@ -21,12 +21,55 @@ figures report iterations (server) and iterations-per-worker (= cost).
 
 from __future__ import annotations
 
+import dataclasses
 import functools
+from typing import ClassVar
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.algorithms.base import (Algorithm, SimContext,
+                                        register_algorithm)
 from repro.core.algorithms.lr import lr_grad, test_logloss, LAMBDA
+
+
+@register_algorithm
+@dataclasses.dataclass(frozen=True)
+class Hogwild(Algorithm):
+    """Protocol port of the traced-m staleness recurrence below: the model
+    history lives at the static pad width, every history index is taken
+    modulo the traced m, and the sample sequence is m-independent — so the
+    engine sweeps the whole grid as ONE flat vmap (``force_flat``: the
+    recurrence updates a single model, work is O(iters * d) regardless of
+    the pad width, so bucketing would only add compiles)."""
+
+    name: ClassVar[str] = "hogwild"
+    asynchronous: ClassVar[bool] = True      # cost divides iters by m
+    bucketed_default: ClassVar[bool] = False
+    force_flat: ClassVar[bool] = True
+    predictor: ClassVar[str] = "hogwild"
+
+    gamma: float = 0.1
+
+    def make_draws(self, key, n, iters, m_top):
+        # identical draw to run_hogwild's: the sequence is m-independent
+        return jax.random.randint(key, (iters,), 0, n)
+
+    def init_state(self, problem, data, ctx: SimContext):
+        d = data.X.shape[1]
+        return (jnp.zeros((d,)), jnp.zeros((ctx.m_pad, d)))
+
+    def step(self, problem, data, ctx: SimContext, state, i, j):
+        x, hist = state
+        # stale model: the one from j - tau, tau = (j % m) + 1 (Thm 1)
+        tau = (j % ctx.m) + 1
+        x_stale = hist[(j - tau) % ctx.m]
+        g = problem.point_grad(x_stale, data.X[i], data.y[i])
+        x_new = x - self.gamma * g
+        return (x_new, hist.at[j % ctx.m].set(x_new))
+
+    def readout(self, ctx: SimContext, state):
+        return state[0]
 
 
 def masked_sim(X, y, Xte, yte, order, *, m_pad, gamma, lam, eval_every,

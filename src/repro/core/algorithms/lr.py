@@ -2,6 +2,13 @@
 
   argmin_x (1/n) sum_i Phi(label_i * xi_i . x) + (lambda/2) ||x||^2,
   Phi(t) = log(1 + exp(-t)),  lambda = 0.01.
+
+These are the raw numeric kernels; the engine-facing abstraction is
+`repro.core.problems.LogisticRegression`, which delegates here (so the
+sweep engine stays bit-identical to the paper's curves) and registers
+Eq. 4 alongside the other objectives (ridge, hinge).  New code should go
+through the `Problem` protocol; these functions remain for the legacy
+per-m runners and as the test oracles.
 """
 
 from __future__ import annotations

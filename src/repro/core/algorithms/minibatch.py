@@ -1,19 +1,54 @@
 """Mini-batch SGD (Alg 2) under the PCA.
 
 One worker computes one sample's gradient per server iteration; the server
-averages batch_size of them (all-gather in Alg 2 => the degree of parallelism
-IS the batch size, Fact 1).  Iteration count on the x-axis is *server*
-iterations, so larger batch = more parallel workers at the same x.
+averages m of them (all-gather in Alg 2 => the degree of parallelism IS the
+batch size, Fact 1).  Iteration count on the x-axis is *server* iterations,
+so larger batch = more parallel workers at the same x.
+
+:class:`Minibatch` is the engine-facing protocol implementation
+(`base.Algorithm`); :func:`run_minibatch` is the legacy per-m runner, kept
+as a thin deprecated adapter and as the independent oracle the engine
+equivalence tests compare against.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import functools
+import warnings
+from typing import ClassVar
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.algorithms.base import (Algorithm, SimContext,
+                                        register_algorithm)
 from repro.core.algorithms.lr import lr_grad_batch, test_logloss, LAMBDA
+
+
+@register_algorithm
+@dataclasses.dataclass(frozen=True)
+class Minibatch(Algorithm):
+    """m parallel one-sample gradients averaged by the server each step."""
+
+    name: ClassVar[str] = "minibatch"
+    bucketed_default: ClassVar[bool] = True      # work is O(m_pad * d)/step
+
+    gamma: float = 0.1
+
+    def make_draws(self, key, n, iters, m_top):
+        return jax.random.randint(key, (iters, m_top), 0, n)
+
+    def init_state(self, problem, data, ctx: SimContext):
+        return jnp.zeros((data.X.shape[1],))
+
+    def step(self, problem, data, ctx: SimContext, x, idx, t):
+        g = problem.masked_batch_grad(x, data.X[idx], data.y[idx],
+                                      ctx.active, ctx.mf)
+        return x - self.gamma * g
+
+    def readout(self, ctx: SimContext, x):
+        return x
 
 
 @functools.partial(jax.jit,
@@ -29,23 +64,37 @@ def _run(X, y, Xte, yte, key, batch_size, iters, gamma, lam, eval_every):
     n_evals = iters // eval_every
 
     def outer(x, e):
-        x, _ = jax.lax.scan(step, x, order[e * eval_every:(e + 1) * eval_every]
-                            if False else jax.lax.dynamic_slice_in_dim(
-                                order, e * eval_every, eval_every, axis=0))
+        x, _ = jax.lax.scan(step, x, jax.lax.dynamic_slice_in_dim(
+            order, e * eval_every, eval_every, axis=0))
         return x, test_logloss(x, Xte, yte)
 
     x, losses = jax.lax.scan(outer, jnp.zeros((d,)), jnp.arange(n_evals))
     return x, losses
 
 
-def run_minibatch(train, test, *, batch_size=4, iters=4000, gamma=0.1,
-                  lam=LAMBDA, eval_every=100, key=None):
+def run_minibatch(train, test, *, m=None, iters=4000, gamma=0.1,
+                  lam=LAMBDA, eval_every=100, key=None, batch_size=None):
+    """Legacy per-m logistic runner (deprecated: sweeps should go through
+    `repro.experiments.engine`).  The worker count is ``m`` like every other
+    entry point; ``batch_size`` is the old name for the same quantity
+    (Fact 1) and is kept as a warning shim."""
+    if batch_size is not None:
+        warnings.warn(
+            "run_minibatch(batch_size=...) is deprecated; the degree of "
+            "parallelism is named m=... like the other algorithms (Fact 1: "
+            "batch size IS the worker count)", DeprecationWarning,
+            stacklevel=2)
+        if m is not None and m != batch_size:
+            raise TypeError(f"conflicting worker counts: m={m} "
+                            f"batch_size={batch_size}")
+        m = batch_size
+    m = 4 if m is None else m
     key = key if key is not None else jax.random.PRNGKey(0)
     x, losses = _run(train.X, train.y, test.X, test.y, key,
-                     batch_size, iters, gamma, lam, eval_every)
+                     m, iters, gamma, lam, eval_every)
     return {
         "algorithm": "minibatch",
-        "m": batch_size,
+        "m": m,
         "iters": iters,
         "eval_every": eval_every,
         "losses": jax.device_get(losses),

@@ -185,6 +185,18 @@ def ls_sync_ref(X, batch_size: int, tol=0.0):
     return float(max(vals))
 
 
+def ls_auto(X, algorithm: str, window: int = 8, tol=0.0, use_kernel=None):
+    """LS_A resolved through the Algorithm registry: asynchronous
+    algorithms (Hogwild!) read C_sim over the sampling sequence with the
+    window as tau_max, synchronous ones the max batch-internal similarity
+    with the window as the batch size (§IV.A).  Works for any registered
+    algorithm — the async/sync split is the class's `asynchronous` flag."""
+    from repro.core.algorithms import base as alg_base
+    if alg_base.get_algorithm(algorithm).asynchronous:
+        return ls_async(X, window, tol, use_kernel=use_kernel)
+    return ls_sync(X, window, tol, use_kernel=use_kernel)
+
+
 def ls_sync(X, batch_size: int, tol=0.0, use_kernel=None):
     """LS_A for synchronous algorithms: max over batches of the batch's
     internal similarity.  Fused: every batch goes through one jitted

@@ -1,0 +1,232 @@
+"""Registered training objectives (the `Problem` protocol).
+
+The paper hardwires one model — L2-regularized logistic regression (Eq. 4,
+`core/algorithms/lr.py`) — but its thesis is about *dataset characters*,
+not about the log loss: variance, sparsity, diversity and sampling-sequence
+similarity should decide parallel scalability for any smooth-ish linear
+objective (Stich et al. 2021 make the same critical-parameter claim across
+losses).  This module lifts the loss/grad/regularizer into a registered
+abstraction so the sweep engine can test that claim beyond Eq. 4 with zero
+engine edits.
+
+A :class:`Problem` is a frozen dataclass describing a *linear-model*
+objective
+
+    argmin_x (1/n) sum_i phi(x . xi_i, label_i) + (lam/2) ||x||^2
+
+through four primal hooks (``dloss`` — the derivative of phi in its first
+argument, which is all a linear model's gradient needs — plus the batch /
+point gradient assemblies and the unregularized ``test_loss`` the paper's
+figures plot) and three dual hooks (``sdca_stepfactor`` / ``sdca_delta`` /
+``dual_init``) that give DADM its per-sample coordinate-ascent update.
+
+Problems register by name via :func:`register_problem`; the engine resolves
+``problem="ridge"`` through :func:`get_problem`.  Registered here:
+
+  ``logistic``  the paper's Eq. 4 (delegates to `lr.py`, so every legacy
+                curve is bit-identical)
+  ``ridge``     L2-regularized least squares on the +-1 labels
+  ``hinge``     soft-margin SVM (subgradient primal, exact SDCA dual)
+
+Hyperparameters (``lam``) live on the instance: ``get_problem("ridge")
+(lam=0.1)``.  The registry is *live* — a class registered after import is
+immediately usable by specs, and the spec fingerprint hashes the registered
+source (`experiments.spec.registry_signature`), so editing a Problem
+invalidates exactly the cached sweeps that used it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, ClassVar, Dict, Type
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.algorithms import lr
+
+LAMBDA = lr.LAMBDA
+
+#: name -> Problem subclass.  Live view; latest registration wins (tests
+#: re-register on purpose to prove fingerprints track the registry).
+PROBLEMS: Dict[str, Type["Problem"]] = {}
+
+
+def register_problem(cls: Type["Problem"]) -> Type["Problem"]:
+    """Class decorator: make a Problem resolvable by its ``name``."""
+    if not (isinstance(getattr(cls, "name", None), str) and cls.name):
+        raise TypeError(f"{cls!r} needs a non-empty ClassVar 'name'")
+    PROBLEMS[cls.name] = cls
+    return cls
+
+
+def get_problem(name: str) -> Type["Problem"]:
+    try:
+        return PROBLEMS[name]
+    except KeyError:
+        raise KeyError(f"unknown problem {name!r}; "
+                       f"known: {sorted(PROBLEMS)}") from None
+
+
+def resolve_problem(problem, lam=None) -> "Problem":
+    """Coerce a name / class / instance (+ optional lam override) to an
+    instance — the engine-facing constructor."""
+    if isinstance(problem, str):
+        problem = get_problem(problem)
+    if isinstance(problem, type):
+        problem = problem() if lam is None else problem(lam=lam)
+    elif lam is not None and lam != problem.lam:
+        problem = dataclasses.replace(problem, lam=lam)
+    return problem
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """Base protocol.  Subclass, set ``name``, implement the hooks."""
+
+    name: ClassVar[str] = ""
+    lam: float = LAMBDA
+
+    # -- primal -------------------------------------------------------------
+    def dloss(self, z, y):
+        """d phi(z, y) / dz at prediction z = x . xi — the only loss-specific
+        piece of a linear model's gradient (grad_i = dloss * xi + lam x)."""
+        raise NotImplementedError
+
+    def test_loss(self, x, X, y):
+        """Mean *unregularized* loss — what the paper's figures plot."""
+        raise NotImplementedError
+
+    def train_loss(self, x, X, y):
+        return self.test_loss(x, X, y) + 0.5 * self.lam * jnp.sum(x * x)
+
+    def point_grad(self, x, xi, yi):
+        """Per-sample regularized (sub)gradient G_xi(x)."""
+        return self.dloss(jnp.dot(xi, x), yi) * xi + self.lam * x
+
+    def batch_grad(self, x, Xb, yb):
+        """Mean regularized gradient over a batch."""
+        c = self.dloss(Xb @ x, yb)
+        return (c @ Xb) / Xb.shape[0] + self.lam * x
+
+    def masked_batch_grad(self, x, Xb, yb, active, mf):
+        """Batch gradient with padded rows masked out (engine hot path):
+        rows where ``active == 0`` contribute nothing, the mean divides by
+        the traced live count ``mf``."""
+        c = self.dloss(Xb @ x, yb) * active
+        return (c @ Xb) / mf + self.lam * x
+
+    # -- dual (DADM / SDCA) -------------------------------------------------
+    def dual_init(self) -> float:
+        """Initial value for every normalized dual coordinate alpha_i
+        (v = (1/(lam n)) sum_i alpha_i y_i xi_i)."""
+        return 0.0
+
+    def sdca_stepfactor(self, sq_norms, n):
+        """Per-sample step factor, precomputed once from ||xi||^2."""
+        raise NotImplementedError
+
+    def sdca_delta(self, z, y, alpha, step):
+        """Closed-form(ish) SDCA coordinate update Delta alpha_i given the
+        current prediction z = x . xi and the precomputed step factor."""
+        raise NotImplementedError
+
+    def sdca_damping(self, k):
+        """Scale applied to the k dual increments DADM computes concurrently
+        per server iteration (k = m * local_batch, traced).  1.0 keeps the
+        paper's additive all-gather — safe for duals whose target is
+        bounded (logistic's sigmoid, hinge's box).  Unbounded duals (ridge)
+        must *average* concurrent exact-maximizer steps instead (the CoCoA
+        safe-combination rule): return 1/k."""
+        return 1.0
+
+
+@register_problem
+@dataclasses.dataclass(frozen=True)
+class LogisticRegression(Problem):
+    """Paper Eq. 4 — delegates to `lr.py` so legacy curves stay
+    bit-identical."""
+
+    name: ClassVar[str] = "logistic"
+
+    def dloss(self, z, y):
+        return -jax.nn.sigmoid(-(y * z)) * y
+
+    def test_loss(self, x, X, y):
+        return lr.test_logloss(x, X, y)
+
+    def point_grad(self, x, xi, yi):
+        return lr.lr_grad(x, xi, yi, self.lam)
+
+    def dual_init(self) -> float:
+        return 0.5                       # alpha in (0, 1)
+
+    def sdca_stepfactor(self, sq_norms, n):
+        # logistic is 1/4-smooth: min(1, lam n / (||xi||^2/4 + lam n))
+        return jnp.minimum(1.0, (self.lam * n)
+                           / (sq_norms / 4.0 + self.lam * n))
+
+    def sdca_delta(self, z, y, alpha, step):
+        return (jax.nn.sigmoid(-(y * z)) - alpha) * step
+
+
+@register_problem
+@dataclasses.dataclass(frozen=True)
+class RidgeRegression(Problem):
+    """L2-regularized least squares on the +-1 ruler labels:
+    phi(z, y) = (z - y)^2 / 2.  The exact SDCA coordinate step is
+    Delta alpha = (y - z - alpha) / (1 + ||xi||^2 / (lam n))."""
+
+    name: ClassVar[str] = "ridge"
+
+    def dloss(self, z, y):
+        return z - y
+
+    def test_loss(self, x, X, y):
+        r = X @ x - y
+        return 0.5 * jnp.mean(r * r)
+
+    def sdca_stepfactor(self, sq_norms, n):
+        return (self.lam * n) / (self.lam * n + sq_norms)
+
+    def sdca_delta(self, z, y, alpha, step):
+        # alpha is the y-normalized dual (v sums alpha_i y_i xi_i), so the
+        # optimum is alpha* = y (y - z) = 1 - y z for labels in {-1, +1}
+        return (1.0 - y * z - alpha) * step
+
+    def sdca_damping(self, k):
+        # the squared-loss dual is unconstrained: adding k concurrent
+        # exact-maximizer steps overshoots and diverges; averaging them is
+        # always safe (convex combination of safe points)
+        return 1.0 / k
+
+
+@register_problem
+@dataclasses.dataclass(frozen=True)
+class HingeSVM(Problem):
+    """Soft-margin SVM: phi(z, y) = max(0, 1 - y z).  Primal uses the
+    subgradient; the dual is the classic box-constrained SDCA update with
+    the normalized coordinate alpha_i in [0, 1]."""
+
+    name: ClassVar[str] = "hinge"
+
+    def dloss(self, z, y):
+        return -y * (y * z < 1.0).astype(jnp.float32)
+
+    def test_loss(self, x, X, y):
+        return jnp.mean(jnp.maximum(0.0, 1.0 - y * (X @ x)))
+
+    def sdca_stepfactor(self, sq_norms, n):
+        # exact line search scale 1/q with q = ||xi||^2 / (lam n); the box
+        # clip in sdca_delta bounds the update for near-zero rows
+        return (self.lam * n) / jnp.maximum(sq_norms, 1e-12)
+
+    def sdca_delta(self, z, y, alpha, step):
+        return jnp.clip(alpha + (1.0 - y * z) * step, 0.0, 1.0) - alpha
+
+    def sdca_damping(self, k):
+        # the exact hinge step jumps between the box corners, so k additive
+        # concurrent updates oscillate (and the jumps amplify 1-ulp
+        # execution-order differences into macroscopic divergence);
+        # averaging restores monotone-ish progress and determinism
+        return 1.0 / k

@@ -2,6 +2,12 @@
 container: the real real-sim / HIGGS downloads are reproduced as scaled
 generators with the same *characters* — sparsity, feature range, density).
 
+Generators register declaratively via :func:`register_generator` — the
+registry (:data:`GENERATORS`) is what `repro.experiments` specs reference
+by name, and registered source is hashed into spec fingerprints, so
+editing a generator invalidates exactly the cached sweeps that used it.
+A new dataset scenario is one decorated function; no engine edits.
+
 Labels everywhere follow the paper: label_i = sign(xi_i . ruler),
 ruler = (-1, 2, -3, 4, ..., (-1)^d * d).
 """
@@ -9,9 +15,30 @@ ruler = (-1, 2, -3, 4, ..., (-1)^d * d).
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp
+
+#: name -> generator ``fn(key, **kwargs) -> Dataset``.  Live registry;
+#: latest registration wins.
+GENERATORS: Dict[str, Callable] = {}
+
+
+def register_generator(name: str):
+    """Decorator: register a dataset generator under a spec-facing name."""
+    def deco(fn):
+        GENERATORS[name] = fn
+        return fn
+    return deco
+
+
+def get_generator(name: str) -> Callable:
+    try:
+        return GENERATORS[name]
+    except KeyError:
+        raise KeyError(f"unknown generator {name!r}; "
+                       f"known: {sorted(GENERATORS)}") from None
 
 
 def ruler(d):
@@ -30,8 +57,24 @@ class Dataset:
     y: jax.Array                 # (n,) in {-1, +1}
     name: str = ""
 
-    def split(self, train_frac=0.7, valid_frac=0.2, key=None):
-        """Paper §VII.A: 70% train / 20% valid split."""
+    def split(self, train_frac=0.7, valid_frac=0.2, key=None,
+              with_test=False):
+        """Paper §VII.A fractions: 70% train / 20% valid / 10% held-out
+        test.
+
+        ``key=None`` deliberately keeps the row order (NO shuffle) — the
+        LS-sequence experiments depend on it, because the sampling order
+        *is* the dataset character under study.  Pass a PRNGKey to
+        shuffle.  The remaining ``1 - train_frac - valid_frac`` tail is
+        the held-out test slice: returned as a third dataset when
+        ``with_test=True`` (it may be empty if the fractions sum to 1),
+        never silently re-used for training.
+        """
+        if not (0.0 < train_frac <= 1.0 and 0.0 <= valid_frac <= 1.0
+                and train_frac + valid_frac <= 1.0 + 1e-9):
+            raise ValueError(
+                f"bad split fractions: train={train_frac} valid={valid_frac}"
+                f" (need 0 < train, 0 <= valid, train + valid <= 1)")
         n = self.X.shape[0]
         idx = (jax.random.permutation(key, n) if key is not None
                else jnp.arange(n))
@@ -40,9 +83,14 @@ class Dataset:
         tr = Dataset(self.X[idx[:ntr]], self.y[idx[:ntr]], self.name + ":train")
         va = Dataset(self.X[idx[ntr:ntr + nva]], self.y[idx[ntr:ntr + nva]],
                      self.name + ":valid")
-        return tr, va
+        if not with_test:
+            return tr, va
+        te = Dataset(self.X[idx[ntr + nva:]], self.y[idx[ntr + nva:]],
+                     self.name + ":test")
+        return tr, va, te
 
 
+@register_generator("realsim_like")
 def make_realsim_like(key, n=8000, d=2000, density=0.03, lo=0.0, hi=1.0):
     """Sparse, small-feature-variance dataset (real-sim analogue, scaled to
     the container: 20958 features / 72309 rows in the paper)."""
@@ -53,12 +101,14 @@ def make_realsim_like(key, n=8000, d=2000, density=0.03, lo=0.0, hi=1.0):
     return Dataset(X, label_with_ruler(X), "realsim_like")
 
 
+@register_generator("higgs_like")
 def make_higgs_like(key, n=8000, d=28, lo=-4.0, hi=3.0):
     """Dense, large-feature-variance dataset (HIGGS analogue)."""
     X = jax.random.uniform(key, (n, d), minval=lo, maxval=hi)
     return Dataset(X, label_with_ruler(X), "higgs_like")
 
 
+@register_generator("ls_sequence")
 def make_ls_sequence(key, n=8000, d=28, mutate_frac=0.1, density=1.0,
                      lo=-4.0, hi=3.0, first_sample=None):
     """LS-controlled sampling sequence (§VII.A): sample t is sample t-1 with
@@ -108,6 +158,7 @@ def make_diversity_variants(base: Dataset):
     return high, mid, low
 
 
+@register_generator("upper_bound")
 def make_upper_bound_dataset(key, n=6000, d=400, density=0.7, lo=0.0, hi=1.0):
     """§VII.E: 70%-density simulated dataset whose Hogwild! upper bound is
     reachable with few workers."""
@@ -118,8 +169,34 @@ def make_upper_bound_dataset(key, n=6000, d=400, density=0.7, lo=0.0, hi=1.0):
     return Dataset(X, label_with_ruler(X), "upper_bound_sim")
 
 
+@register_generator("one_sample")
 def make_one_sample_dataset(key, n=1024, d=64):
     """Example 12: dataset = one sample duplicated n times (diversity 1)."""
     x = jax.random.uniform(key, (d,))
     X = jnp.tile(x[None], (n, 1))
     return Dataset(X, label_with_ruler(X), "one_sample")
+
+
+@register_generator("label_noise")
+def make_label_noise(key, base="higgs_like", flip_frac=0.2, **base_kwargs):
+    """Label-noise variant of any registered base generator: ruler labels
+    with a ``flip_frac`` fraction flipped uniformly at random.  The feature
+    characters (variance, sparsity, diversity, LS) are untouched — only the
+    gradient *variance* at the optimum grows, isolating the paper's
+    variance-drives-parallel-gain claim from the feature geometry."""
+    kb, kf = jax.random.split(key)
+    ds = get_generator(base)(kb, **base_kwargs)
+    flip = jax.random.bernoulli(kf, flip_frac, ds.y.shape)
+    return Dataset(ds.X, jnp.where(flip, -ds.y, ds.y),
+                   f"{ds.name}:noise{flip_frac}")
+
+
+@register_generator("heavy_tailed")
+def make_heavy_tailed(key, n=8000, d=28, df=3.0, scale=1.0):
+    """Heavy-tailed feature-variance dataset: Student-t features with ``df``
+    degrees of freedom (df <= 4 has infinite kurtosis, df <= 2 infinite
+    variance), dense like higgs_like but with rare huge-magnitude samples —
+    the adversarial regime for the variance-based sync predictors, where
+    the *mean* feature variance under-states per-sample gradient spread."""
+    X = jax.random.t(key, df, (n, d)) * scale
+    return Dataset(X, label_with_ruler(X), f"heavy_tailed_t{df}")

@@ -1,22 +1,30 @@
 """repro.experiments — the unified scalability-sweep engine.
 
 This package turns the paper's experiments (worker-count m x dataset
-character x algorithm) into declarative, cacheable sweeps: `spec` defines
-the :class:`SweepSpec` language and dataset materialization, `registry`
-names one spec per paper figure/table, `engine` runs all four algorithms
-(Hogwild! included) over the whole worker grid as bucketed vmapped
-simulations, `runner.run_sweep` orchestrates a spec end to
-end with content-hashed artifact caching, and ``python -m
-repro.experiments.run`` is the CLI that reproduces any figure from a spec
-name.  The legacy `benchmarks/paper_*.py` scripts are thin adapters over
-this package.  See docs/architecture.md.
+character x algorithm x objective) into declarative, cacheable sweeps:
+`spec` defines the :class:`SweepSpec` language and dataset materialization,
+`registry` names one spec per paper figure/table, `engine` runs any
+registered `Algorithm` on any registered `Problem` over the whole worker
+grid as bucketed vmapped simulations (`engine.sweep` is the generic entry
+point), `runner.run_sweep` orchestrates a spec end to end with
+content-hashed artifact caching, and ``python -m repro.experiments.run``
+is the CLI that reproduces any figure from a spec name.  The legacy
+`benchmarks/paper_*.py` scripts are thin adapters over this package.
+
+Extending it is registration, not engine surgery: a new optimizer is an
+`Algorithm` dataclass (`repro.core.algorithms.base.register_algorithm`), a
+new objective a `Problem` dataclass (`repro.core.problems.
+register_problem`), a new dataset scenario a decorated generator
+(`repro.data.synth.register_generator`).  See docs/architecture.md for
+the <=30-line recipes.
 """
 
 from repro.experiments.registry import SPEC_IDS, get_spec
 from repro.experiments.runner import curves_by_m, run_sweep
-from repro.experiments.spec import (ALGORITHMS, DatasetSpec, EpsilonSpec,
-                                    JobSpec, SweepSpec, fingerprint)
+from repro.experiments.spec import (ALGORITHMS, PROBLEMS, DatasetSpec,
+                                    EpsilonSpec, JobSpec, SweepSpec,
+                                    fingerprint, registry_signature)
 
 __all__ = ["SPEC_IDS", "get_spec", "run_sweep", "curves_by_m", "ALGORITHMS",
-           "DatasetSpec", "EpsilonSpec", "JobSpec", "SweepSpec",
-           "fingerprint"]
+           "PROBLEMS", "DatasetSpec", "EpsilonSpec", "JobSpec", "SweepSpec",
+           "fingerprint", "registry_signature"]

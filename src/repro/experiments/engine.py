@@ -1,32 +1,29 @@
-"""Batched m-sweep kernels: bucketed `jax.vmap` grids over the worker axis.
+"""Generic batched m-sweep engine: one vmapped path over the worker axis,
+dispatching through the `Algorithm` x `Problem` registries.
 
 The legacy benchmarks re-ran each algorithm once per worker count m in a
-Python loop — S separate traces, S compilations, S dispatch chains.  Here
-every algorithm (mini-batch SGD, ECD-PSGD, DADM, *and* Hogwild!) is
-re-derived as a *masked, padded* simulation over a fixed worker axis of
-size ``m_pad`` in which the actual worker count m is ordinary traced data:
+Python loop — S separate traces, S compilations, S dispatch chains.
+ENGINE_VERSION 2 re-derived each of the paper's four algorithms as a
+*masked, padded* simulation over a fixed worker axis of size ``m_pad`` in
+which the actual worker count m is ordinary traced data — but as four
+hand-written sweepers with a hardcoded logistic loss.  ENGINE_VERSION 3
+keeps that one-trace machinery and makes it *generic*: :func:`sweep` builds
+the masked simulation for ANY registered `repro.core.algorithms.base.
+Algorithm` on ANY registered `repro.core.problems.Problem`, so new
+optimizers and objectives run through the full grid, cache, and CLI with
+zero edits here.
+
+The masked-simulation contract (unchanged from ENGINE_VERSION 2):
 
   * workers with index >= m are masked out of every reduction (gradient
     average, ring average, dual all-gather), so the padded run is
     numerically the m-worker run;
-  * all random draws (sample indices, quantization keys) are made once at
-    the *global* ``m_top = max(ms)`` and sliced per padding width — sweep
-    member m consumes the first m columns no matter which bucket it lands
-    in, so numerics are identical across flat / bucketed / sequential
-    execution;
+  * all random draws (`Algorithm.make_draws`) are made once at the *global*
+    ``m_top = max(ms)`` and sliced per padding width — sweep member m
+    consumes the first m columns no matter which bucket it lands in, so
+    numerics are identical across flat / bucketed / sequential execution;
   * each bucket of the grid then runs as ``jax.vmap(sim)(ms_bucket)`` —
     one trace, one compile, one `lax.scan` pipeline per bucket.
-
-**Hogwild! is vmapped too** (new in ENGINE_VERSION 2).  The PR-1 engine
-kept it sequential on the theory that the staleness recurrence
-``hist[(j - tau) % m]`` changes *shape* with m — but only the history
-*indices* depend on m, not any shape: `hogwild.masked_sim` allocates the
-history at the static pad width and takes every index modulo the traced m,
-so rows >= m are never touched and Thm 1's lag-equals-worker-count
-semantics carry over unchanged.  The sweep therefore compiles **once** for
-the whole grid instead of once per m.  Because the recurrence updates a
-single model regardless of m (work is O(iters * d), not O(iters * m * d)),
-Hogwild! always runs as one flat vmap — bucketing would only add compiles.
 
 **Bucketed padding** (`_buckets`): a flat padded grid does S * work(m_top)
 FLOPs, so wide grids like [1, 2, 4, ..., 64] pay work(64) for the m=1
@@ -34,40 +31,56 @@ member.  `_run_grid` instead partitions the grid greedily into buckets
 whose pad waste is bounded — ``max(bucket) <= MAX_PAD_RATIO * min(bucket)``
 (default 2x) — and vmaps each bucket at its own ``m_pad``.  The trade is
 one extra compile per bucket against the padded FLOPs, so bucketing pays
-exactly when per-step work scales with the worker axis: it is the default
-for mini-batch and ECD-PSGD (m-scaled gathers / quantization), while DADM
-(m-independent (n,)-sized dual state) and Hogwild! default to a single
-flat vmap.  ``bucketed=False`` recovers the PR-1 flat grid everywhere;
-`scripts/bench_engine.py` tracks both regimes in BENCH_2.json.
+exactly when per-step work scales with the worker axis; each Algorithm
+declares its own policy (``bucketed_default``: on for mini-batch and
+ECD-PSGD, off for DADM) and ``force_flat`` algorithms (Hogwild!, whose
+work is O(iters * d) regardless of the pad width) always run as one flat
+vmap.  ``bucketed=False`` recovers the flat grid everywhere.
 
-Every sweep function also takes ``use_vmap=False``, which runs the *same*
-masked kernel (padded to m_top) once per m in a Python loop — the
-sequential reference path the equivalence tests compare against.  For
-Hogwild! the sequential path loops the legacy per-m `run_hogwild`, so the
-vmapped grid is checked against the original recurrence, not itself.
+``use_vmap=False`` runs the *same* masked kernel (padded to m_top) once
+per m in a Python loop — the sequential reference path the equivalence
+tests compare against.  The per-algorithm ``sweep_*`` wrappers keep the
+ENGINE_VERSION-2 signatures; for Hogwild! the sequential path still loops
+the legacy per-m `run_hogwild`, so the vmapped grid is checked against the
+original staleness recurrence, not against another padded kernel.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.algorithms import hogwild as hogwild_mod
+from repro.core import problems as problems_mod
+from repro.core.algorithms import base as alg_base
 from repro.core.algorithms import run_hogwild
-from repro.core.algorithms.lr import LAMBDA, test_logloss
-from repro.core.compression import dequantize, quantize_stochastic
+from repro.core.algorithms.lr import LAMBDA
 
 #: Pad-waste bound for `_buckets`: within a bucket, the padded worker axis
 #: is at most this multiple of the smallest member.
 MAX_PAD_RATIO = 2.0
 
+#: Counts `jax.jit` wrappers actually dispatched by `_run_grid` — each one
+#: is traced and compiled exactly once here, so this is the engine's
+#: compile count.  `scripts/bench_engine.py` snapshots it around runs.
+JIT_CALLS = 0
 
-def _losses_dict(algorithm: str, ms, losses, iters: int, eval_every: int):
-    """Engine output contract: curves for every m of the grid."""
+
+def _jit(fn):
+    global JIT_CALLS
+    JIT_CALLS += 1
+    return jax.jit(fn)
+
+
+def _losses_dict(algorithm: str, ms, losses, iters: int, eval_every: int,
+                 problem: str = "logistic"):
+    """Engine output contract: curves for every m of the grid.  The
+    ``problem`` key is new in ENGINE_VERSION 3 (additive — legacy keys are
+    unchanged)."""
     return {
         "algorithm": algorithm,
+        "problem": problem,
         "ms": [int(m) for m in ms],
         "iters": int(iters),
         "eval_every": int(eval_every),
@@ -111,235 +124,159 @@ def _run_grid(make_sim, ms, use_vmap: bool, bucketed: bool = True):
     """
     m_top = max(ms)
     if not use_vmap:
-        jsim = jax.jit(make_sim(m_top))   # one compile serves every m
+        jsim = _jit(make_sim(m_top))      # one compile serves every m
         return jnp.stack([jsim(m) for m in jnp.asarray(ms, jnp.int32)])
     if not bucketed:
-        return jax.jit(jax.vmap(make_sim(m_top)))(jnp.asarray(ms, jnp.int32))
+        return _jit(jax.vmap(make_sim(m_top)))(jnp.asarray(ms, jnp.int32))
     rows = [None] * len(ms)
     for pos, m_pad in _buckets(ms):
         sub = jnp.asarray([ms[i] for i in pos], jnp.int32)
-        out = jax.jit(jax.vmap(make_sim(m_pad)))(sub)
+        out = _jit(jax.vmap(make_sim(m_pad)))(sub)
         for k, i in enumerate(pos):
             rows[i] = out[k]
     return jnp.stack(rows)
 
 
 # ---------------------------------------------------------------------------
-# Mini-batch SGD (Alg 2): batch size IS the worker count (Fact 1)
+# The generic sweep: any registered Algorithm on any registered Problem
+# ---------------------------------------------------------------------------
+
+def sweep(algorithm: Union[str, alg_base.Algorithm], train, test,
+          ms: Sequence[int], *, iters: int, eval_every: int,
+          problem="logistic", lam: Optional[float] = None, key=None,
+          use_vmap: bool = True, bucketed: Optional[bool] = None,
+          **alg_kwargs) -> Dict:
+    """Run ``algorithm`` on ``problem`` over the worker grid ``ms``.
+
+    ``algorithm`` is a registry name (instantiated with ``alg_kwargs``,
+    e.g. ``gamma=0.05``) or a ready `Algorithm` instance; ``problem`` a
+    registry name / class / instance (``lam`` overrides its regularizer,
+    preserving the legacy ``lam=`` kwarg).  ``bucketed=None`` defers to the
+    algorithm's declared padding policy.
+    """
+    if isinstance(algorithm, alg_base.Algorithm):
+        if alg_kwargs:
+            raise TypeError("pass algorithm kwargs either via the instance "
+                            "or via **alg_kwargs, not both")
+        alg = algorithm
+    else:
+        alg = alg_base.get_algorithm(algorithm)(**alg_kwargs)
+    prob = problems_mod.resolve_problem(problem, lam)
+    key = key if key is not None else jax.random.PRNGKey(0)
+
+    ms = list(ms)
+    m_top = max(ms)
+    n = train.X.shape[0]
+    Xte, yte = test.X, test.y
+    n_evals = iters // eval_every
+    draws = alg.make_draws(key, n, iters, m_top)
+
+    def make_sim(m_pad):
+        sub = alg.slice_draws(draws, m_pad)
+
+        def sim(m):
+            ctx = alg_base.SimContext(m, m_pad)
+            state0 = alg.init_state(prob, train, ctx)
+
+            def step(state, inp):
+                batch, t = inp
+                return alg.step(prob, train, ctx, state, batch, t), None
+
+            def outer(state, e):
+                base = e * eval_every
+                ts = base + jnp.arange(eval_every)
+                bsl = jax.tree.map(lambda a: jax.lax.dynamic_slice_in_dim(
+                    a, base, eval_every, axis=0), sub)
+                state, _ = jax.lax.scan(step, state, (bsl, ts))
+                return state, prob.test_loss(alg.readout(ctx, state),
+                                             Xte, yte)
+
+            _, losses = jax.lax.scan(outer, state0, jnp.arange(n_evals))
+            return losses
+
+        return sim
+
+    if bucketed is None:
+        bucketed = alg.bucketed_default
+    if alg.force_flat:
+        bucketed = False
+    losses = _run_grid(make_sim, ms, use_vmap, bucketed)
+    return _losses_dict(alg.name, ms, losses, iters, eval_every,
+                        problem=prob.name)
+
+
+def run_algorithm_sweep(algorithm: str, train, test, ms, *, iters,
+                        eval_every, use_vmap=True, bucketed=None,
+                        **kwargs) -> Dict:
+    """Dispatch one (algorithm, problem, dataset) job over the worker grid.
+
+    Every registered algorithm routes through the generic :func:`sweep`;
+    the four paper algorithms go via their ``sweep_*`` compatibility
+    wrappers (which only add the legacy Hogwild! sequential reference
+    path).  ``bucketed=None`` keeps each algorithm's declared default.
+    """
+    fn = SWEEPERS.get(algorithm)
+    if fn is None:
+        return sweep(algorithm, train, test, ms, iters=iters,
+                     eval_every=eval_every, use_vmap=use_vmap,
+                     bucketed=bucketed, **kwargs)
+    if bucketed is not None:
+        kwargs["bucketed"] = bucketed
+    return fn(train, test, list(ms), iters=iters, eval_every=eval_every,
+              use_vmap=use_vmap, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# ENGINE_VERSION-2 compatibility wrappers (same signatures and defaults)
 # ---------------------------------------------------------------------------
 
 def sweep_minibatch(train, test, ms: Sequence[int], *, iters: int,
                     eval_every: int, gamma=0.1, lam=LAMBDA, key=None,
-                    use_vmap=True, bucketed=True) -> Dict:
-    key = key if key is not None else jax.random.PRNGKey(0)
-    X, y, Xte, yte = train.X, train.y, test.X, test.y
-    n, d = X.shape
-    m_top = max(ms)
-    order = jax.random.randint(key, (iters, m_top), 0, n)
-    n_evals = iters // eval_every
-
-    def make_sim(m_pad):
-        sub_order = order[:, :m_pad]
-
-        def sim(m):
-            active = (jnp.arange(m_pad) < m).astype(jnp.float32)
-            mf = m.astype(jnp.float32)
-
-            def step(x, idx):
-                Xb, yb = X[idx], y[idx]              # (m_pad, d), (m_pad,)
-                sig = jax.nn.sigmoid(-(yb * (Xb @ x)))
-                g = -((sig * yb * active) @ Xb) / mf + lam * x
-                return x - gamma * g, None
-
-            def outer(x, e):
-                idxs = jax.lax.dynamic_slice_in_dim(sub_order, e * eval_every,
-                                                    eval_every, axis=0)
-                x, _ = jax.lax.scan(step, x, idxs)
-                return x, test_logloss(x, Xte, yte)
-
-            _, losses = jax.lax.scan(outer, jnp.zeros((d,)),
-                                     jnp.arange(n_evals))
-            return losses
-
-        return sim
-
-    losses = _run_grid(make_sim, ms, use_vmap, bucketed)
-    return _losses_dict("minibatch", ms, losses, iters, eval_every)
-
-
-# ---------------------------------------------------------------------------
-# ECD-PSGD (Alg 4): ring of m workers as a masked (m_pad, m_pad) mixing matrix
-# ---------------------------------------------------------------------------
-
-def _ring_matrix(m, m_pad: int):
-    """W with W[i] = (e_i + e_{i-1 mod m} + e_{i+1 mod m})/3 for i < m and
-    identity rows for padded workers — the roll-based ring of ecd_psgd.py
-    expressed so that m can be traced data."""
-    ids = jnp.arange(m_pad)
-    eye = jnp.eye(m_pad)
-    W = (eye + eye[(ids - 1) % m] + eye[(ids + 1) % m]) / 3.0
-    return jnp.where((ids < m)[:, None], W, eye)
+                    use_vmap=True, bucketed=True, problem="logistic") -> Dict:
+    return sweep("minibatch", train, test, ms, iters=iters,
+                 eval_every=eval_every, problem=problem, lam=lam, key=key,
+                 use_vmap=use_vmap, bucketed=bucketed, gamma=gamma)
 
 
 def sweep_ecd_psgd(train, test, ms: Sequence[int], *, iters: int,
                    eval_every: int, gamma=0.1, lam=LAMBDA, compress_bits=8,
-                   key=None, use_vmap=True, bucketed=True) -> Dict:
-    key = key if key is not None else jax.random.PRNGKey(0)
-    X, y, Xte, yte = train.X, train.y, test.X, test.y
-    n, d = X.shape
-    m_top = max(ms)
-    k_order, k_q = jax.random.split(key)
-    order = jax.random.randint(k_order, (iters, m_top), 0, n)
-    # Per-(iteration, worker) quantization keys, hoisted out of the scan:
-    # one vectorized fold_in+split here replaces two chained RNG ops per
-    # step, and drawing at m_top keeps worker i's key identical in every
-    # bucket (and to the flat grid).  Same draws as the in-scan version.
-    wkeys = jax.vmap(lambda t: jax.random.split(
-        jax.random.fold_in(k_q, t), m_top))(jnp.arange(iters))
-    n_evals = iters // eval_every
+                   key=None, use_vmap=True, bucketed=True,
+                   problem="logistic") -> Dict:
+    return sweep("ecd_psgd", train, test, ms, iters=iters,
+                 eval_every=eval_every, problem=problem, lam=lam, key=key,
+                 use_vmap=use_vmap, bucketed=bucketed, gamma=gamma,
+                 compress_bits=compress_bits)
 
-    def make_sim(m_pad):
-        sub_order = order[:, :m_pad]
-        sub_keys = wkeys[:, :m_pad]
-
-        def sim(m):
-            active = (jnp.arange(m_pad) < m).astype(jnp.float32)
-            mf = m.astype(jnp.float32)
-            W = _ring_matrix(m, m_pad)
-
-            def one_iter(carry, inp):
-                xs, ys = carry               # (m_pad, d) models / y-vars
-                idx, kqs, t = inp            # kqs: (m_pad,) worker keys
-                tf = t.astype(jnp.float32) + 1.0
-                x_half = W @ ys              # neighbors pull compressed y
-
-                def grad_w(xi, i):
-                    sig = jax.nn.sigmoid(-(y[i] * jnp.dot(X[i], xi)))
-                    return -sig * y[i] * X[i] + lam * xi
-
-                x_new = x_half - gamma * jax.vmap(grad_w)(xs, idx)
-                # z = (1 - t/2) x_t + (t/2) x_{t+1};  y = (1-2/t) y + (2/t) C(z)
-                z = (1.0 - tf / 2.0) * xs + (tf / 2.0) * x_new
-                cz = jax.vmap(lambda zz, kk: dequantize(
-                    *quantize_stochastic(zz, kk, bits=compress_bits)))(z, kqs)
-                y_new = (1.0 - 2.0 / tf) * ys + (2.0 / tf) * cz
-                return (x_new, y_new), None
-
-            def outer(carry, e):
-                base = e * eval_every
-                ts = base + jnp.arange(eval_every)
-                idxs = jax.lax.dynamic_slice_in_dim(sub_order, base,
-                                                    eval_every, axis=0)
-                keys = jax.lax.dynamic_slice_in_dim(sub_keys, base,
-                                                    eval_every, axis=0)
-                carry, _ = jax.lax.scan(one_iter, carry, (idxs, keys, ts))
-                x_avg = (active @ carry[0]) / mf  # mean over live workers
-                return carry, test_logloss(x_avg, Xte, yte)
-
-            carry0 = (jnp.zeros((m_pad, d)), jnp.zeros((m_pad, d)))
-            _, losses = jax.lax.scan(outer, carry0, jnp.arange(n_evals))
-            return losses
-
-        return sim
-
-    losses = _run_grid(make_sim, ms, use_vmap, bucketed)
-    return _losses_dict("ecd_psgd", ms, losses, iters, eval_every)
-
-
-# ---------------------------------------------------------------------------
-# DADM (Alg 3): masked dual all-gather over the padded worker axis
-# ---------------------------------------------------------------------------
 
 def sweep_dadm(train, test, ms: Sequence[int], *, iters: int, eval_every: int,
                local_batch=8, lam=LAMBDA, key=None, use_vmap=True,
-               bucketed=False) -> Dict:
-    # bucketed defaults to False here: DADM's dual state is (n,)-sized and
-    # m-independent, so replaying the alpha/v updates once per bucket costs
-    # more than the padded per-worker FLOPs it saves.  The flag is honored
-    # if explicitly requested (the equivalence tests exercise it).
-    key = key if key is not None else jax.random.PRNGKey(0)
-    X, y, Xte, yte = train.X, train.y, test.X, test.y
-    n, d = X.shape
-    m_top = max(ms)
-    order = jax.random.randint(key, (iters, m_top, local_batch), 0, n)
-    sq_norms = jnp.sum(X * X, axis=1)
-    step_sz = jnp.minimum(1.0, (lam * n) / (sq_norms / 4.0 + lam * n))
-    n_evals = iters // eval_every
+               bucketed=False, problem="logistic") -> Dict:
+    return sweep("dadm", train, test, ms, iters=iters,
+                 eval_every=eval_every, problem=problem, lam=lam, key=key,
+                 use_vmap=use_vmap, bucketed=bucketed,
+                 local_batch=local_batch)
 
-    def make_sim(m_pad):
-        sub_order = order[:, :m_pad]
-
-        def sim(m):
-            active = (jnp.arange(m_pad) < m).astype(jnp.float32)
-
-            def one_iter(carry, idx):
-                alpha, v = carry             # (n,), (d,)
-                x = v
-
-                def worker(idx_w):
-                    Xi, yi, ai = X[idx_w], y[idx_w], alpha[idx_w]
-                    p = jax.nn.sigmoid(-(yi * (Xi @ x)))
-                    da = (p - ai) * step_sz[idx_w]
-                    dv = (yi * da) @ Xi / (lam * n)
-                    return da, dv
-
-                das, dvs = jax.vmap(worker)(idx)     # (m_pad, lb), (m_pad, d)
-                das = das * active[:, None]          # padded workers sit out
-                alpha = alpha.at[idx.reshape(-1)].add(das.reshape(-1))
-                v = v + active @ dvs                 # masked all-gather sum
-                return (alpha, v), None
-
-            alpha0 = jnp.full((n,), 0.5)
-            v0 = (y * alpha0) @ X / (lam * n)
-
-            def outer(carry, e):
-                idxs = jax.lax.dynamic_slice_in_dim(sub_order, e * eval_every,
-                                                    eval_every, axis=0)
-                carry, _ = jax.lax.scan(one_iter, carry, idxs)
-                return carry, test_logloss(carry[1], Xte, yte)
-
-            _, losses = jax.lax.scan(outer, (alpha0, v0), jnp.arange(n_evals))
-            return losses
-
-        return sim
-
-    losses = _run_grid(make_sim, ms, use_vmap, bucketed)
-    return _losses_dict("dadm", ms, losses, iters, eval_every)
-
-
-# ---------------------------------------------------------------------------
-# Hogwild! (Alg 1): one flat vmap over the traced-m staleness recurrence
-# ---------------------------------------------------------------------------
 
 def sweep_hogwild(train, test, ms: Sequence[int], *, iters: int,
                   eval_every: int, gamma=0.1, lam=LAMBDA, key=None,
-                  use_vmap=True, bucketed=True) -> Dict:
-    del bucketed   # work is O(iters * d) regardless of m_pad — always flat
+                  use_vmap=True, bucketed=True, problem="logistic") -> Dict:
     key = key if key is not None else jax.random.PRNGKey(0)
-    if not use_vmap:
+    if not use_vmap and problem == "logistic":
         # Legacy per-m reference path (re-jits per m): the vmapped grid is
         # equivalence-tested against this, i.e. against the original
         # recurrence rather than against another padded kernel.
+        global JIT_CALLS
+        JIT_CALLS += len(ms)
         curves = [run_hogwild(train, test, m=int(m), iters=iters, gamma=gamma,
                               lam=lam, eval_every=eval_every, key=key)["losses"]
                   for m in ms]
         return _losses_dict("hogwild", ms,
                             jnp.stack([jnp.asarray(c) for c in curves]),
                             iters, eval_every)
-
-    X, y, Xte, yte = train.X, train.y, test.X, test.y
-    n = X.shape[0]
-    # identical draw to run_hogwild's: the sequence is m-independent
-    order = jax.random.randint(key, (iters,), 0, n)
-
-    def make_sim(m_pad):
-        sim = hogwild_mod.masked_sim(
-            X, y, Xte, yte, order, m_pad=m_pad, gamma=gamma, lam=lam,
-            eval_every=eval_every, n_evals=iters // eval_every)
-        return lambda m: sim(m)[1]           # losses only
-
-    losses = _run_grid(make_sim, ms, use_vmap=True, bucketed=False)
-    return _losses_dict("hogwild", ms, losses, iters, eval_every)
+    del bucketed   # force_flat: work is O(iters * d) regardless of m_pad
+    return sweep("hogwild", train, test, ms, iters=iters,
+                 eval_every=eval_every, problem=problem, lam=lam, key=key,
+                 use_vmap=use_vmap, gamma=gamma)
 
 
 SWEEPERS = {
@@ -348,25 +285,3 @@ SWEEPERS = {
     "dadm": sweep_dadm,
     "hogwild": sweep_hogwild,
 }
-
-
-def run_algorithm_sweep(algorithm: str, train, test, ms, *, iters,
-                        eval_every, use_vmap=True, bucketed=None,
-                        **kwargs) -> Dict:
-    """Dispatch one (algorithm, dataset) job over the worker grid.
-
-    ``bucketed=None`` keeps each sweeper's own default (bucketed for
-    mini-batch/ECD-PSGD, flat for DADM/Hogwild!); True/False forces a
-    policy for the sweepers that honor it.  Hogwild! always runs flat —
-    its work is independent of the pad width, so `sweep_hogwild` ignores
-    the flag rather than add compiles for nothing.
-    """
-    try:
-        fn = SWEEPERS[algorithm]
-    except KeyError:
-        raise KeyError(f"unknown algorithm {algorithm!r}; "
-                       f"known: {sorted(SWEEPERS)}") from None
-    if bucketed is not None:
-        kwargs["bucketed"] = bucketed
-    return fn(train, test, list(ms), iters=iters, eval_every=eval_every,
-              use_vmap=use_vmap, **kwargs)

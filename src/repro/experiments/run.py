@@ -4,6 +4,17 @@
   PYTHONPATH=src python -m repro.experiments.run --spec upper_bound --quick
   PYTHONPATH=src python -m repro.experiments.run --spec variance_sparsity \\
       --quick --iters 100 --n 300          # smoke-scale override
+  PYTHONPATH=src python -m repro.experiments.run --spec diversity \\
+      --quick --problem hinge              # same grid, hinge objective
+
+``--list`` enumerates the registered specs AND the live Algorithm /
+Problem / dataset-generator registries — anything listed is addressable
+from a spec with no engine edits.  ``--problem`` re-points every job of
+the chosen spec at another registered objective — but keeps each job's
+kwargs, so a step size tuned for the spec's original objective may not
+suit the new one's curvature (ridge on wide-range features wants a much
+smaller gamma than Eq. 4 — see the ``problem_generality`` spec); the
+runner warns if a curve goes non-finite.
 
 Repeated runs of an unchanged spec are served from the artifact cache
 (--force recomputes, --no-cache bypasses it).  --json writes the full
@@ -14,9 +25,13 @@ m_max comparison whenever the spec produces both sides.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import sys
 
+from repro.core import problems as problems_mod
+from repro.core.algorithms import base as alg_base
+from repro.data import synth
 from repro.experiments import registry, runner
 
 
@@ -69,13 +84,44 @@ def _print_report(result: dict) -> None:
     print(f"\n[{src}] artifact: {cache.get('path')}")
 
 
+def _print_registries() -> None:
+    print("registered sweep specs:")
+    for name in registry.SPEC_IDS:
+        spec = registry.get_spec(name, quick=True)
+        print(f"  {name:20s} {spec.description}")
+    print("\nregistered algorithms (core.algorithms):")
+    for name in sorted(alg_base.ALGORITHMS):
+        cls = alg_base.ALGORITHMS[name]
+        flags = []
+        if cls.asynchronous:
+            flags.append("async")
+        flags.append("flat" if cls.force_flat
+                     else ("bucketed" if cls.bucketed_default else "flat-default"))
+        print(f"  {name:20s} predictor={cls.predictor:8s} "
+              f"[{', '.join(flags)}]")
+    print("\nregistered problems (core.problems):")
+    for name in sorted(problems_mod.PROBLEMS):
+        doc = (problems_mod.PROBLEMS[name].__doc__ or "").split("\n")[0]
+        print(f"  {name:20s} {doc}")
+    print("\nregistered dataset generators (data.synth):")
+    for name in sorted(synth.GENERATORS):
+        doc = (synth.GENERATORS[name].__doc__ or "").split("\n")[0]
+        print(f"  {name:20s} {doc}")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.experiments.run",
         description="run a registered scalability sweep")
     ap.add_argument("--spec", help=f"spec name; one of {registry.SPEC_IDS}")
     ap.add_argument("--list", action="store_true",
-                    help="list registered specs and exit")
+                    help="list registered specs, algorithms, problems, and "
+                         "dataset generators, then exit")
+    ap.add_argument("--problem",
+                    help="re-point every job of the spec at this registered "
+                         "problem (e.g. ridge, hinge); job kwargs are kept, "
+                         "so curvature-mismatched step sizes may need "
+                         "retuning (the runner warns on non-finite curves)")
     ap.add_argument("--quick", action="store_true",
                     help="CI-scale iteration counts")
     ap.add_argument("--iters", type=int, help="override iteration budget")
@@ -92,15 +138,18 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     if args.list:
-        for name in registry.SPEC_IDS:
-            spec = registry.get_spec(name, quick=True)
-            print(f"{name:20s} {spec.description}")
+        _print_registries()
         return 0
     if not args.spec:
         ap.error("--spec is required (or --list)")
 
     spec = registry.get_spec(args.spec, quick=args.quick,
                              iters=args.iters, n=args.n)
+    if args.problem:
+        problems_mod.get_problem(args.problem)    # fail fast if unknown
+        spec = dataclasses.replace(spec, jobs=tuple(
+            dataclasses.replace(j, problem=args.problem)
+            for j in spec.jobs)).validate()
     result = runner.run_sweep(spec, use_cache=not args.no_cache,
                               force=args.force, cache_dir=args.cache_dir,
                               use_vmap=not args.seq, verbose=args.verbose)

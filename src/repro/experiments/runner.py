@@ -1,18 +1,26 @@
-"""Sweep runner: SweepSpec -> datasets -> batched engine -> scalability.
+"""Sweep runner: SweepSpec -> datasets -> generic engine -> scalability.
 
 `run_sweep` is the one entry point every benchmark, example, and the CLI
 share.  For each job it
 
   1. materializes the job's dataset (`spec.build_dataset`) and splits it
      70/20 per the spec's shuffle policy,
-  2. runs the worker-count grid through `engine.run_algorithm_sweep`
-     (bucketed vmapped grids for all four algorithms, Hogwild! included),
+  2. runs the worker-count grid through `engine.run_algorithm_sweep`,
+     which dispatches through the Algorithm x Problem registries (any
+     registered pair runs with zero edits here),
   3. if the spec declares an epsilon readout, derives epsilon from the
-     probe-m curve, converts curves to per-worker costs (§V.A.1), and
+     probe-m curve, converts curves to per-worker costs (§V.A.1; whether
+     costs divide by m is the Algorithm class's `asynchronous` flag), and
      computes gain growth + the measured upper bound m_max (§V.B),
-  4. if the job requests it, runs the theory-side predictor from
-     `core.scalability` on the raw dataset characters, yielding the
-     measured-vs-predicted m_max comparison the paper is about.
+  4. if the job requests it, runs the theory-side predictor selected by
+     the Algorithm class's `predictor` kind on the raw dataset characters,
+     yielding the measured-vs-predicted m_max comparison the paper is
+     about.
+
+Every dataset self-reports its measured §IV characters (variance,
+sparsity, diversity, LS) into ``result["datasets"][name]["characters"]``
+— capped at `DEFAULT_CHARACTERS_ROWS` rows unless the spec asks for more
+via ``characters_rows``.
 
 Results are plain JSON-serializable dicts (curves as a row-per-m list of
 lists; use `curves_by_m` for {m: curve} access) and are stored in the
@@ -25,21 +33,29 @@ from __future__ import annotations
 
 import math
 import time
+import warnings
 from typing import Dict, List, Optional
+
+import numpy as np
 
 from repro.core import metrics as MX
 from repro.core import scalability as SC
+from repro.core.algorithms import base as alg_base
 from repro.experiments import cache as artifact_cache
 from repro.experiments import engine
 from repro.experiments import spec as spec_mod
 from repro.experiments.spec import SweepSpec
 
+#: theory-side m_max predictor per Algorithm.predictor kind
 _PREDICTORS = {
     "hogwild": SC.predict_hogwild_mmax,
-    "minibatch": SC.predict_sync_mmax,
-    "ecd_psgd": SC.predict_sync_mmax,
+    "sync": SC.predict_sync_mmax,
     "dadm": SC.predict_dadm_mmax,
 }
+
+#: row cap for the always-on dataset-characters report (the §IV indices are
+#: O(rows^2)-ish through the LS scans; specs override via characters_rows)
+DEFAULT_CHARACTERS_ROWS = 512
 
 
 def curves_by_m(job_result: Dict) -> Dict[int, List[float]]:
@@ -102,24 +118,36 @@ def run_sweep(spec: SweepSpec, *, use_cache: bool = True, force: bool = False,
         if spec.measure_csim > 0:
             info["csim"] = MX.csim(data.X[:spec.csim_rows],
                                    spec.measure_csim)
-        if spec.characters_rows > 0:
-            info["characters"] = MX.summarize(data.X[:spec.characters_rows])
+        # every dataset self-reports its §IV characters into the result
+        rows = spec.characters_rows or DEFAULT_CHARACTERS_ROWS
+        info["characters"] = MX.summarize(data.X[:rows])
         result["datasets"][name] = info
 
     for job in spec.jobs:
         if verbose:
             print(f"[{spec.name}] sweep {job.key} over m={list(spec.ms)}")
+        alg_cls = alg_base.get_algorithm(job.algorithm)
         tr, te = splits[job.dataset]
         jr = engine.run_algorithm_sweep(
             job.algorithm, tr, te, spec.ms, iters=spec.iters,
-            eval_every=spec.eval_every, use_vmap=use_vmap, **job.kwargs)
+            eval_every=spec.eval_every, use_vmap=use_vmap,
+            problem=job.problem, **job.kwargs)
         jr["dataset"] = job.dataset
+        if not np.isfinite(jr["losses"]).all():
+            # diverged — usually a step size tuned for another objective's
+            # curvature (e.g. logistic gamma on ridge); surface it loudly
+            # instead of caching NaN readouts silently
+            warnings.warn(
+                f"job {job.key!r}: non-finite loss curve — the step size "
+                f"is likely unstable for problem {job.problem!r} on this "
+                f"dataset; tune the job kwargs (see the problem_generality "
+                f"spec for per-problem gammas)", RuntimeWarning,
+                stacklevel=2)
 
         if spec.epsilon is not None:
             eps = _epsilon_from_probe(jr, spec.epsilon)
             costs, gg, bound = _cost_readout(
-                jr, eps, asynchronous=job.algorithm
-                in spec_mod.ASYNC_ALGORITHMS)
+                jr, eps, asynchronous=alg_cls.asynchronous)
             jr.update(epsilon=eps, costs=costs, gain_growth=gg,
                       measured_m_max=int(bound))
 
@@ -127,7 +155,7 @@ def run_sweep(spec: SweepSpec, *, use_cache: bool = True, force: bool = False,
             X = datasets[job.dataset].X
             if job.predict_rows > 0:
                 X = X[:job.predict_rows]
-            jr["predicted"] = _PREDICTORS[job.algorithm](X)
+            jr["predicted"] = _PREDICTORS[alg_cls.predictor](X)
 
         result["jobs"][job.key] = jr
 

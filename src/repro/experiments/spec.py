@@ -1,15 +1,19 @@
 """Declarative sweep specifications (the `repro.experiments` input language).
 
-A paper experiment is "run algorithm A on dataset D for every worker count
-m in a grid, then read scalability off the convergence curves".  A
-:class:`SweepSpec` captures that declaratively:
+A paper experiment is "run algorithm A on problem P over dataset D for
+every worker count m in a grid, then read scalability off the convergence
+curves".  A :class:`SweepSpec` captures that declaratively:
 
-  * ``datasets``  — named :class:`DatasetSpec` entries, each a reference to a
-    generator in :data:`GENERATORS` (the `repro.data.synth` constructors)
-    plus its kwargs, an optional diversity ``variant``, and the train/valid
-    split policy (LS-sequence specs keep sampling order, so no shuffle).
-  * ``jobs``      — (algorithm, dataset) pairs with per-job algorithm kwargs
-    and an optional theory-side prediction request.
+  * ``datasets``  — named :class:`DatasetSpec` entries, each a reference to
+    a generator registered in `repro.data.synth.GENERATORS` plus its
+    kwargs, an optional diversity ``variant``, and the train/valid split
+    policy (LS-sequence specs keep sampling order, so no shuffle).
+  * ``jobs``      — (algorithm, problem, dataset) cells with per-job
+    algorithm kwargs and an optional theory-side prediction request.
+    ``algorithm`` and ``problem`` name entries in the live registries
+    (`repro.core.algorithms.base.ALGORITHMS` / `repro.core.problems.
+    PROBLEMS`) — registering a new entry makes it spec-addressable with no
+    engine edits.
   * ``ms``        — the worker-count grid shared by every job.
   * ``epsilon``   — optional cost readout: epsilon is the loss the
     ``probe_m``-worker run reaches after ``frac`` of its budget, and cost is
@@ -17,19 +21,25 @@ m in a grid, then read scalability off the convergence curves".  A
 
 Specs are frozen, JSON-round-trippable (``to_dict`` / ``from_dict``) and
 content-hashable (:func:`fingerprint`) — the fingerprint keys the on-disk
-artifact cache, so editing any field of a spec invalidates exactly that
-sweep.  Named paper specs live in `repro.experiments.registry`.
+artifact cache and covers, besides the spec dict and ``ENGINE_VERSION``,
+the *source* of every registry entry the spec references
+(:func:`registry_signature`): editing a registered Algorithm, Problem, or
+generator invalidates exactly the cached sweeps that used it.  Named paper
+specs live in `repro.experiments.registry`.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import inspect
 import json
 from typing import Dict, Optional, Tuple
 
 import jax
 
+from repro.core import problems as problems_mod
+from repro.core.algorithms import base as alg_base
 from repro.data import synth
 
 # ENGINE_VERSION is hashed into every spec fingerprint (see `fingerprint`),
@@ -42,57 +52,63 @@ from repro.data import synth
 #   1: PR-1 unified vmapped engine (Hogwild! sequential)
 #   2: PR-2 one-trace grid: vmapped Hogwild!, bucketed m-padding, fused
 #      dataset-characters pipeline (Pallas-routed C_sim / LS_sync)
-ENGINE_VERSION = 2
+#   3: PR-3 protocol engine: generic Algorithm x Problem dispatch, jobs
+#      carry a `problem`, dataset characters always reported, registry
+#      sources folded into the fingerprint
+ENGINE_VERSION = 3
 
-ALGORITHMS = ("minibatch", "ecd_psgd", "hogwild", "dadm")
+#: Import-time snapshots for display / back-compat; validation always goes
+#: through the live registries, so late registrations are fully usable.
+ALGORITHMS = alg_base.registered_algorithms()
+PROBLEMS = tuple(sorted(problems_mod.PROBLEMS))
 
 #: Async algorithms divide server iterations among workers when costing
-#: (paper §V.A.1 — the Perfect Computer Assumption).
-ASYNC_ALGORITHMS = frozenset({"hogwild"})
+#: (paper §V.A.1 — the Perfect Computer Assumption).  Kept as a back-compat
+#: view; the runner reads the Algorithm class's `asynchronous` flag.
+ASYNC_ALGORITHMS = frozenset(
+    name for name, cls in alg_base.ALGORITHMS.items() if cls.asynchronous)
 
-GENERATORS = {
-    "higgs_like": synth.make_higgs_like,
-    "realsim_like": synth.make_realsim_like,
-    "ls_sequence": synth.make_ls_sequence,
-    "upper_bound": synth.make_upper_bound_dataset,
-    "one_sample": synth.make_one_sample_dataset,
-}
+#: Back-compat alias — the registry itself lives in `repro.data.synth`.
+GENERATORS = synth.GENERATORS
 
 
 @dataclasses.dataclass(frozen=True)
 class DatasetSpec:
     """One named dataset of a sweep: generator + kwargs + split policy."""
-    generator: str                       # key in GENERATORS
+    generator: str                       # key in synth.GENERATORS
     kwargs: Dict = dataclasses.field(default_factory=dict)
     seed: int = 0                        # PRNGKey for the generator
     shuffle_split: bool = True           # False: keep sampling-sequence order
     variant: Optional[str] = None        # diversity: "high" | "mid" | "low"
 
     def validate(self):
-        if self.generator not in GENERATORS:
-            raise KeyError(f"unknown generator {self.generator!r}; "
-                           f"known: {sorted(GENERATORS)}")
+        synth.get_generator(self.generator)   # raises KeyError if unknown
         if self.variant not in (None, "high", "mid", "low"):
             raise ValueError(f"bad diversity variant {self.variant!r}")
 
 
 @dataclasses.dataclass(frozen=True)
 class JobSpec:
-    """One (algorithm, dataset) cell of the sweep grid."""
-    algorithm: str                       # one of ALGORITHMS
+    """One (algorithm, problem, dataset) cell of the sweep grid."""
+    algorithm: str                       # key in the Algorithm registry
     dataset: str                         # key into SweepSpec.datasets
     kwargs: Dict = dataclasses.field(default_factory=dict)  # e.g. gamma
     predict: bool = False                # run the theory-side m_max predictor
     predict_rows: int = 0                # rows of X fed to it (0 = all)
+    problem: str = "logistic"            # key in the Problem registry
 
     @property
     def key(self) -> str:
-        return f"{self.algorithm}/{self.dataset}"
+        # legacy "<algorithm>/<dataset>" for the paper's logistic jobs, so
+        # every existing JSON/CSV consumer keeps its keys; non-default
+        # problems are spelled out
+        if self.problem == "logistic":
+            return f"{self.algorithm}/{self.dataset}"
+        return f"{self.algorithm}+{self.problem}/{self.dataset}"
 
     def validate(self):
-        if self.algorithm not in ALGORITHMS:
-            raise KeyError(f"unknown algorithm {self.algorithm!r}; "
-                           f"known: {ALGORITHMS}")
+        alg_base.get_algorithm(self.algorithm)     # raises KeyError
+        problems_mod.get_problem(self.problem)     # raises KeyError
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,7 +130,7 @@ class SweepSpec:
     epsilon: Optional[EpsilonSpec] = None
     measure_csim: int = 0                # Eq. 3 range; 0 = skip
     csim_rows: int = 400                 # rows used for the C_sim estimate
-    characters_rows: int = 0             # §IV summary rows; 0 = skip
+    characters_rows: int = 0             # §IV summary rows; 0 = default cap
     split_seed: int = 0                  # key for shuffled splits
 
     # -- validation ---------------------------------------------------------
@@ -157,9 +173,48 @@ class SweepSpec:
         return cls(**d).validate()
 
 
+def _source_token(obj) -> str:
+    """Stable-ish content token for a registered callable/class: a hash of
+    its source (falls back to the qualified name for sourceless objects,
+    e.g. classes defined in a REPL)."""
+    try:
+        src = inspect.getsource(obj)
+    except (OSError, TypeError):
+        src = getattr(obj, "__qualname__", repr(obj))
+    return hashlib.sha256(src.encode()).hexdigest()[:16]
+
+
+def registry_signature(spec: SweepSpec) -> Dict[str, str]:
+    """Source tokens for every registry entry the spec references — part of
+    the cache fingerprint, so editing (or re-registering) an Algorithm,
+    Problem, or generator invalidates exactly the sweeps that used it.
+
+    Wrapper generators that delegate to another registered generator name
+    it via a ``base`` kwarg (e.g. ``label_noise``); the base's source is
+    folded in too, so editing the base orphans the wrapper's sweeps."""
+    sig = {}
+    for job in spec.jobs:
+        sig[f"algorithm:{job.algorithm}"] = _source_token(
+            alg_base.get_algorithm(job.algorithm))
+        sig[f"problem:{job.problem}"] = _source_token(
+            problems_mod.get_problem(job.problem))
+    for ds in spec.datasets.values():
+        name, kwargs = ds.generator, ds.kwargs
+        while f"generator:{name}" not in sig:
+            sig[f"generator:{name}"] = _source_token(
+                synth.get_generator(name))
+            base = kwargs.get("base") if isinstance(kwargs, dict) else None
+            if not (isinstance(base, str) and base in synth.GENERATORS):
+                break
+            name, kwargs = base, {}
+    return sig
+
+
 def fingerprint(spec: SweepSpec) -> str:
-    """Content hash of a spec (plus the engine version) — the cache key."""
+    """Content hash of a spec (plus the engine version and the sources of
+    the registry entries it references) — the cache key."""
     payload = json.dumps({"engine_version": ENGINE_VERSION,
+                          "registries": registry_signature(spec),
                           "spec": spec.to_dict()},
                          sort_keys=True, default=str)
     return hashlib.sha256(payload.encode()).hexdigest()
@@ -169,7 +224,7 @@ def build_dataset(ds: DatasetSpec) -> synth.Dataset:
     """Materialize a DatasetSpec into a concrete `synth.Dataset`."""
     ds.validate()
     key = jax.random.PRNGKey(ds.seed)
-    base = GENERATORS[ds.generator](key, **ds.kwargs)
+    base = synth.get_generator(ds.generator)(key, **ds.kwargs)
     if ds.variant is not None:
         high, mid, low = synth.make_diversity_variants(base)
         base = {"high": high, "mid": mid, "low": low}[ds.variant]
@@ -177,7 +232,8 @@ def build_dataset(ds: DatasetSpec) -> synth.Dataset:
 
 
 def split_dataset(ds_spec: DatasetSpec, data: synth.Dataset, split_seed: int):
-    """70/20 split per the spec's policy (shuffled unless sequence-ordered)."""
+    """70/20 split per the spec's policy (shuffled unless sequence-ordered;
+    the 10% held-out test tail stays untouched, see `Dataset.split`)."""
     if ds_spec.shuffle_split:
         return data.split(key=jax.random.PRNGKey(split_seed))
     return data.split()

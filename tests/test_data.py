@@ -71,3 +71,78 @@ def test_hmm_stream_learnable_and_shaped():
                                   np.asarray(b["labels"][:, :-1]))
     ch = token_characters(b["tokens"])
     assert 0 < ch["sequence_diversity"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Dataset.split v2: documented fractions + exposed held-out test slice
+# ---------------------------------------------------------------------------
+
+def test_split_exposes_test_slice():
+    """The 10% tail is a real held-out test set, not silently discarded."""
+    ds = synth.make_higgs_like(KEY, n=1000)
+    tr, va, te = ds.split(key=KEY, with_test=True)
+    assert tr.X.shape[0] == 700 and va.X.shape[0] == 200
+    assert te.X.shape[0] == 100 and te.name.endswith(":test")
+    # the three slices partition the dataset: no row lost, no row reused
+    stacked = np.concatenate([np.asarray(s.X) for s in (tr, va, te)])
+    assert stacked.shape[0] == 1000
+    assert np.unique(stacked, axis=0).shape[0] == \
+        np.unique(np.asarray(ds.X), axis=0).shape[0]
+
+
+def test_split_without_key_keeps_row_order():
+    """key=None is the documented no-shuffle mode (sampling-sequence
+    datasets depend on row order) — slices must be contiguous prefixes."""
+    ds = synth.make_higgs_like(KEY, n=200, d=6)
+    tr, va, te = ds.split(with_test=True)
+    np.testing.assert_array_equal(np.asarray(tr.X), np.asarray(ds.X[:140]))
+    np.testing.assert_array_equal(np.asarray(va.X),
+                                  np.asarray(ds.X[140:180]))
+    np.testing.assert_array_equal(np.asarray(te.X), np.asarray(ds.X[180:]))
+
+
+def test_split_rejects_bad_fractions():
+    ds = synth.make_higgs_like(KEY, n=100, d=4)
+    with pytest.raises(ValueError):
+        ds.split(train_frac=0.8, valid_frac=0.3)   # sums past 1
+    with pytest.raises(ValueError):
+        ds.split(train_frac=0.0)
+    with pytest.raises(ValueError):
+        ds.split(train_frac=0.7, valid_frac=-0.1)
+
+
+# ---------------------------------------------------------------------------
+# new registered dataset-character generators
+# ---------------------------------------------------------------------------
+
+def test_label_noise_flips_only_labels():
+    ds = synth.make_label_noise(KEY, base="higgs_like", flip_frac=0.25,
+                                n=2000, d=8)
+    kb, _ = jax.random.split(KEY)
+    base = synth.make_higgs_like(kb, n=2000, d=8)
+    np.testing.assert_array_equal(np.asarray(ds.X), np.asarray(base.X))
+    flipped = float(np.mean(np.asarray(ds.y) != np.asarray(base.y)))
+    assert abs(flipped - 0.25) < 0.05
+    assert set(np.unique(np.asarray(ds.y))) <= {-1.0, 1.0}
+
+
+def test_label_noise_rejects_unknown_base():
+    with pytest.raises(KeyError):
+        synth.make_label_noise(KEY, base="mnist")
+
+
+def test_heavy_tailed_has_heavier_tails_than_uniform():
+    ds = synth.make_heavy_tailed(KEY, n=2000, d=10, df=3.0)
+    X = np.asarray(ds.X)
+    assert np.isfinite(X).all()
+    # excess kurtosis blows past any bounded-support distribution's
+    z = (X - X.mean()) / X.std()
+    assert float((z ** 4).mean()) > 5.0
+    assert MX.mean_feature_variance(ds.X) > 0.0
+
+
+def test_generator_registry_is_the_spec_surface():
+    for name in ("higgs_like", "realsim_like", "ls_sequence", "upper_bound",
+                 "one_sample", "label_noise", "heavy_tailed"):
+        assert name in synth.GENERATORS
+    assert synth.get_generator("higgs_like") is synth.make_higgs_like

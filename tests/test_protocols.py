@@ -1,0 +1,294 @@
+"""Protocol-conformance suite (ENGINE_VERSION 3).
+
+Parametrized over every registered `Algorithm` x `Problem` pair: the
+generic engine must produce identical curves across its execution modes
+(vmapped grid == sequential single-m), states must keep their tree
+structure through `step`, spec fingerprints must track the *registries*
+(re-registering an entry with different source invalidates the cache), and
+a brand-new problem/dataset must reach the full sweep + cache + CLI purely
+via registration — zero engine edits.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import problems as problems_mod
+from repro.core.algorithms import base as alg_base
+from repro.core.algorithms import run_minibatch
+from repro.data import synth
+from repro.experiments import (DatasetSpec, JobSpec, SweepSpec, fingerprint,
+                               run_sweep)
+from repro.experiments import engine
+from repro.experiments import run as cli
+
+KEY = jax.random.PRNGKey(0)
+
+ALGOS = sorted(alg_base.ALGORITHMS)
+PROBS = sorted(problems_mod.PROBLEMS)
+
+#: step sizes that keep every objective stable on the higgs-like features
+#: (ridge curvature ~ mean ||xi||^2 needs a much smaller gamma than Eq. 4)
+GAMMAS = {"logistic": 0.1, "ridge": 0.01, "hinge": 0.05}
+
+
+def _alg_kwargs(algo, prob):
+    return {} if algo == "dadm" else {"gamma": GAMMAS[prob]}
+
+
+@pytest.fixture(scope="module")
+def split():
+    ds = synth.make_higgs_like(KEY, n=160, d=10)
+    return ds.split(key=KEY)
+
+
+# ---------------------------------------------------------------------------
+# every Algorithm x Problem: one-trace grid == sequential reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("prob", PROBS)
+@pytest.mark.parametrize("algo", ALGOS)
+def test_vmapped_grid_equals_sequential(split, algo, prob):
+    tr, te = split
+    kw = _alg_kwargs(algo, prob)
+    args = dict(iters=60, eval_every=20, problem=prob)
+    v = engine.sweep(algo, tr, te, [1, 2, 4], use_vmap=True, **args, **kw)
+    s = engine.sweep(algo, tr, te, [1, 2, 4], use_vmap=False, **args, **kw)
+    assert v["ms"] == s["ms"] == [1, 2, 4]
+    assert v["algorithm"] == algo and v["problem"] == prob
+    np.testing.assert_allclose(v["losses"], s["losses"],
+                               rtol=1e-5, atol=1e-5)
+    assert np.isfinite(v["losses"]).all()
+
+
+@pytest.mark.parametrize("prob", PROBS)
+@pytest.mark.parametrize("algo", [a for a in ALGOS
+                                  if not alg_base.ALGORITHMS[a].force_flat])
+def test_bucketed_equals_flat(split, algo, prob):
+    tr, te = split
+    kw = _alg_kwargs(algo, prob)
+    args = dict(iters=60, eval_every=20, problem=prob)
+    ms = [1, 2, 4, 8]                 # two buckets under MAX_PAD_RATIO=2
+    b = engine.sweep(algo, tr, te, ms, bucketed=True, **args, **kw)
+    f = engine.sweep(algo, tr, te, ms, bucketed=False, **args, **kw)
+    np.testing.assert_allclose(b["losses"], f["losses"],
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_state_contract(split, algo):
+    """init_state/step keep the state's tree structure and shapes; draws
+    carry the iteration axis; readout yields the (d,) model."""
+    tr, _ = split
+    n, d = tr.X.shape
+    alg = alg_base.get_algorithm(algo)()
+    prob = problems_mod.get_problem("logistic")()
+    iters, m_pad = 8, 4
+
+    draws = alg.make_draws(KEY, n, iters, m_pad)
+    for leaf in jax.tree.leaves(draws):
+        assert leaf.shape[0] == iters
+    sliced = alg.slice_draws(draws, 2)
+    for a, b in zip(jax.tree.leaves(sliced), jax.tree.leaves(draws)):
+        assert a.ndim == b.ndim
+
+    ctx = alg_base.SimContext(2, m_pad)
+    assert ctx.active.shape == (m_pad,)
+    assert float(ctx.active.sum()) == 2.0
+    state = alg.init_state(prob, tr, ctx)
+    batch = jax.tree.map(lambda a: a[0], alg.slice_draws(draws, m_pad))
+    new = alg.step(prob, tr, ctx, state, batch, jnp.asarray(0, jnp.int32))
+    assert (jax.tree.structure(new) == jax.tree.structure(state))
+    for a, b in zip(jax.tree.leaves(new), jax.tree.leaves(state)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+    assert alg.readout(ctx, new).shape == (d,)
+
+
+def test_registry_rejects_malformed_entries():
+    with pytest.raises(TypeError):
+        alg_base.register_algorithm(type("NoName", (alg_base.Algorithm,), {}))
+    with pytest.raises(ValueError):
+        alg_base.register_algorithm(
+            type("BadPred", (alg_base.Algorithm,),
+                 {"name": "badpred", "predictor": "astrology"}))
+    with pytest.raises(KeyError):
+        alg_base.get_algorithm("sgd9000")
+    with pytest.raises(KeyError):
+        problems_mod.get_problem("l0")
+    with pytest.raises(KeyError):
+        synth.get_generator("mnist")
+
+
+# ---------------------------------------------------------------------------
+# fingerprints track the registries
+# ---------------------------------------------------------------------------
+
+def _tiny_spec(**job_kw):
+    return SweepSpec(
+        name="proto_fp", ms=(1, 2), iters=40, eval_every=20,
+        datasets={"d0": DatasetSpec("higgs_like", {"n": 120, "d": 8})},
+        jobs=(JobSpec("minibatch", "d0", **job_kw),)).validate()
+
+
+def test_fingerprint_tracks_algorithm_registry():
+    spec = _tiny_spec()
+    fp0 = fingerprint(spec)
+    orig = alg_base.ALGORITHMS["minibatch"]
+
+    class PatchedMinibatch(orig):
+        """Same name, different source — must orphan cached sweeps."""
+
+    try:
+        alg_base.register_algorithm(PatchedMinibatch)
+        assert fingerprint(spec) != fp0
+    finally:
+        alg_base.register_algorithm(orig)
+    assert fingerprint(spec) == fp0
+
+
+def test_fingerprint_tracks_problem_registry():
+    spec = _tiny_spec(problem="ridge")
+    fp0 = fingerprint(spec)
+    orig = problems_mod.PROBLEMS["ridge"]
+
+    class PatchedRidge(orig):
+        """Same name, different source."""
+
+    try:
+        problems_mod.register_problem(PatchedRidge)
+        assert fingerprint(spec) != fp0
+    finally:
+        problems_mod.register_problem(orig)
+    assert fingerprint(spec) == fp0
+    # and the problem field itself is hashed
+    assert fingerprint(_tiny_spec()) != fp0
+
+
+def test_fingerprint_tracks_wrapper_generator_base():
+    """A wrapper generator (label_noise) names its base via the `base`
+    kwarg; editing the *base* must orphan the wrapper's cached sweeps."""
+    spec = SweepSpec(
+        name="proto_fp_base", ms=(1, 2), iters=40, eval_every=20,
+        datasets={"d0": DatasetSpec("label_noise",
+                                    {"base": "higgs_like", "n": 120,
+                                     "d": 8})},
+        jobs=(JobSpec("minibatch", "d0"),)).validate()
+    fp0 = fingerprint(spec)
+    orig = synth.GENERATORS["higgs_like"]
+
+    def patched_higgs(key, n=8000, d=28, lo=-4.0, hi=3.0):
+        return orig(key, n=n, d=d, lo=lo, hi=hi)
+
+    try:
+        synth.register_generator("higgs_like")(patched_higgs)
+        assert fingerprint(spec) != fp0
+    finally:
+        synth.register_generator("higgs_like")(orig)
+    assert fingerprint(spec) == fp0
+
+
+def test_runner_warns_on_divergent_curves(tmp_path):
+    """Re-pointing a job at an objective whose curvature the step size
+    can't handle must warn, not silently cache NaN readouts."""
+    spec = SweepSpec(
+        name="proto_diverge", ms=(1, 2), iters=120, eval_every=20,
+        datasets={"d0": DatasetSpec("higgs_like", {"n": 120, "d": 28})},
+        jobs=(JobSpec("minibatch", "d0", {"gamma": 0.1},
+                      problem="ridge"),)).validate()
+    with pytest.warns(RuntimeWarning, match="non-finite"):
+        run_sweep(spec, cache_dir=str(tmp_path))
+
+
+def test_fingerprint_tracks_generator_registry():
+    spec = _tiny_spec()
+    fp0 = fingerprint(spec)
+    orig = synth.GENERATORS["higgs_like"]
+
+    def patched_higgs(key, n=8000, d=28, lo=-4.0, hi=3.0):
+        return orig(key, n=n, d=d, lo=lo, hi=hi)
+
+    try:
+        synth.register_generator("higgs_like")(patched_higgs)
+        assert fingerprint(spec) != fp0
+    finally:
+        synth.register_generator("higgs_like")(orig)
+    assert fingerprint(spec) == fp0
+
+
+# ---------------------------------------------------------------------------
+# acceptance: new problem + new dataset variant, zero engine edits
+# ---------------------------------------------------------------------------
+
+def test_new_problem_and_dataset_full_pipeline(tmp_path):
+    """Ridge & hinge on the label-noise / heavy-tailed variants run the
+    full m-grid sweep, epsilon/cost readout, predictor, and cache purely
+    via registry names."""
+    spec = SweepSpec(
+        name="proto_accept", ms=(1, 2, 4), iters=60, eval_every=20,
+        datasets={
+            "noisy": DatasetSpec("label_noise",
+                                 {"base": "higgs_like", "flip_frac": 0.1,
+                                  "n": 120, "d": 8}),
+            "heavy": DatasetSpec("heavy_tailed", {"n": 120, "d": 8}),
+        },
+        jobs=(JobSpec("minibatch", "noisy", {"gamma": 0.05},
+                      problem="hinge", predict=True),
+              JobSpec("dadm", "heavy", problem="ridge"),
+              JobSpec("hogwild", "heavy", {"gamma": 0.01},
+                      problem="ridge"))).validate()
+    res = run_sweep(spec, cache_dir=str(tmp_path))
+    assert set(res["jobs"]) == {"minibatch+hinge/noisy", "dadm+ridge/heavy",
+                                "hogwild+ridge/heavy"}
+    for name, jr in res["jobs"].items():
+        assert jr["problem"] in ("hinge", "ridge")
+        assert np.isfinite(jr["losses"]).all()
+        assert len(jr["losses"]) == 3
+    assert res["jobs"]["minibatch+hinge/noisy"]["predicted"][
+        "predicted_m_max"] >= 1
+    # every dataset self-reports its measured characters
+    for info in res["datasets"].values():
+        ch = info["characters"]
+        assert {"mean_feature_variance", "sparsity", "diversity",
+                "csim_async", "csim_sync"} <= set(ch)
+    # second run is a cache hit under the registry-aware fingerprint
+    res2 = run_sweep(spec, cache_dir=str(tmp_path))
+    assert res2["cache"]["hit"] is True
+
+
+def test_cli_lists_registries(capsys):
+    assert cli.main(["--list"]) == 0
+    out = capsys.readouterr().out
+    for name in ("ridge", "hinge", "logistic", "label_noise", "heavy_tailed",
+                 "minibatch", "ecd_psgd", "problem_generality"):
+        assert name in out
+
+
+def test_cli_problem_selection(tmp_path, capsys):
+    rc = cli.main(["--spec", "diversity", "--quick", "--iters", "48",
+                   "--n", "120", "--problem", "hinge",
+                   "--cache-dir", str(tmp_path)])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "+hinge/" in out
+    with pytest.raises(KeyError):
+        cli.main(["--spec", "diversity", "--quick", "--problem", "astrology"])
+
+
+# ---------------------------------------------------------------------------
+# satellite: the m-naming shim on the legacy minibatch entry point
+# ---------------------------------------------------------------------------
+
+def test_run_minibatch_batch_size_shim(split):
+    tr, te = split
+    with pytest.warns(DeprecationWarning, match="batch_size"):
+        old = run_minibatch(tr, te, batch_size=3, iters=40, eval_every=20)
+    new = run_minibatch(tr, te, m=3, iters=40, eval_every=20)
+    np.testing.assert_array_equal(np.asarray(old["losses"]),
+                                  np.asarray(new["losses"]))
+    assert old["m"] == new["m"] == 3
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(TypeError):
+            run_minibatch(tr, te, m=2, batch_size=3, iters=40, eval_every=20)
