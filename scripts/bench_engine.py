@@ -1,13 +1,17 @@
 #!/usr/bin/env python
-"""Engine wall-clock benchmark — emits BENCH_3.json (perf-trajectory anchor).
+"""Engine wall-clock benchmark — emits BENCH_4.json (perf-trajectory anchor).
 
-ENGINE_VERSION 3 replaced the four hand-written sweepers with one generic
-Algorithm x Problem dispatch path; the claim to verify is that the
-protocol indirection costs nothing — same compile counts, wall-clock
-within noise of BENCH_2.  The configurations therefore mirror BENCH_2
-exactly (the sweep signatures are unchanged), plus each timing now
-records the *measured* number of jit compilations (`engine.JIT_CALLS`)
-and the payload embeds the BENCH_2 numbers for direct comparison.
+ENGINE_VERSION 4 adds the seed axis: `sweep(..., n_seeds=k)` replicates
+every grid member over k independent draw sequences vmapped *inside* the
+same single trace.  The claims to verify are (a) the seed batch costs no
+extra compiles — `engine.JIT_CALLS` stays at 1 per algorithm on a flat
+grid whether n_seeds is 1 or 8 — and (b) the vmapped seed batch beats
+re-running the sweep once per seed (which pays the compile + dispatch
+chain k times).  The **seed_axis** section measures exactly that:
+seeds x m grid wall-clock, vmapped vs looped, with measured compile
+counts.  The ENGINE_VERSION-3 sections are retained unchanged (the
+single-seed path is bit-identical, so they double as a no-regression
+check against BENCH_3, embedded for comparison).
 
 Three measurements, chosen to isolate what the ENGINE_VERSION-2 rewrite
 changed relative to PR 1 (all still tracked):
@@ -43,7 +47,7 @@ changed relative to PR 1 (all still tracked):
    crossover honestly.
 
 jit caches are cleared between configurations so every timing includes
-its own compiles, as a cold run would.  Results land in BENCH_2.json at
+its own compiles, as a cold run would.  Results land in BENCH_4.json at
 the repo root so the perf trajectory is tracked from this PR onward.
 
 Usage:  PYTHONPATH=src python scripts/bench_engine.py [--quick]
@@ -116,6 +120,44 @@ def time_bucketing_regime(ms, iters, eval_every, n, d):
     return out
 
 
+def time_seed_axis(tr, te, ms, iters, eval_every, n_seeds):
+    """seeds x m grid: one vmapped trace vs a Python loop over seeds.
+
+    Both paths produce the same replicate curves (looped seed s uses
+    fold_in(key, s), the vmapped batch's exact per-seed keys); the
+    vmapped path pays ONE compile per algorithm (flat grids) regardless
+    of n_seeds, while the loop re-enters the engine per seed — each entry
+    builds a fresh jit wrapper, so it pays the trace + compile + dispatch
+    chain every time, exactly what a pre-seed-axis caller replicating by
+    hand would pay.
+    """
+    out = {}
+    for algo in ("minibatch", "hogwild"):
+        jax.clear_caches()
+        jits0 = engine.JIT_CALLS
+        t0 = time.perf_counter()
+        engine.run_algorithm_sweep(algo, tr, te, ms, iters=iters,
+                                   eval_every=eval_every, bucketed=False,
+                                   n_seeds=n_seeds)
+        vmapped = time.perf_counter() - t0
+        vmapped_jits = engine.JIT_CALLS - jits0
+        jax.clear_caches()
+        jits0 = engine.JIT_CALLS
+        t0 = time.perf_counter()
+        key = jax.random.PRNGKey(0)
+        for s in range(n_seeds):
+            engine.run_algorithm_sweep(
+                algo, tr, te, ms, iters=iters, eval_every=eval_every,
+                bucketed=False,
+                key=key if s == 0 else jax.random.fold_in(key, s))
+        looped = time.perf_counter() - t0
+        out[algo] = {"vmapped_s": vmapped, "looped_s": looped,
+                     "speedup": looped / max(vmapped, 1e-9),
+                     "jit_compiles_vmapped": vmapped_jits,
+                     "jit_compiles_looped": engine.JIT_CALLS - jits0}
+    return out
+
+
 def time_cache_roundtrip(ms, iters, eval_every, n, d):
     """Fresh vs cached `run_sweep` through the artifact cache."""
     spec = SweepSpec(
@@ -144,17 +186,20 @@ def main(argv=None):
                    help="main grid is every integer 1..m_max")
     p.add_argument("--quick", action="store_true",
                    help="small sizes for a fast smoke of the bench itself")
+    p.add_argument("--seeds", type=int, default=8,
+                   help="seed replicates for the seed_axis section")
     p.add_argument("--out", default=None,
-                   help="output path (default: BENCH_3.json at the repo "
+                   help="output path (default: BENCH_4.json at the repo "
                         "root; quick mode defaults elsewhere so a smoke "
                         "never overwrites the committed perf anchor)")
     args = p.parse_args(argv)
     if args.quick:
         args.n, args.d, args.iters, args.eval_every = 300, 12, 400, 100
         args.m_max = 8
+        args.seeds = min(args.seeds, 4)
     if args.out is None:
-        args.out = (os.path.join(tempfile.gettempdir(), "BENCH_3.quick.json")
-                    if args.quick else os.path.join(ROOT, "BENCH_3.json"))
+        args.out = (os.path.join(tempfile.gettempdir(), "BENCH_4.quick.json")
+                    if args.quick else os.path.join(ROOT, "BENCH_4.json"))
     ms = list(range(1, args.m_max + 1))
 
     ds = synth.make_higgs_like(jax.random.PRNGKey(0), n=args.n, d=args.d)
@@ -183,6 +228,14 @@ def main(argv=None):
     print(f"{'chars ref':>15}: {chars_ref:7.2f} s")
     print(f"{'chars fused':>15}: {chars_fused:7.2f} s")
 
+    seed_axis = time_seed_axis(tr, te, ms, args.iters, args.eval_every,
+                               args.seeds)
+    for algo, r in seed_axis.items():
+        print(f"{algo + ' seeds':>15}: vmapped {r['vmapped_s']:6.2f} s "
+              f"({r['jit_compiles_vmapped']} compiles)  looped "
+              f"{r['looped_s']:6.2f} s ({r['jit_compiles_looped']} "
+              f"compiles)  {r['speedup']:.2f}x")
+
     if args.quick:
         bucket_cfg = dict(ms=[1, 2, 4, 8], iters=300, eval_every=100,
                           n=200, d=40)
@@ -200,16 +253,17 @@ def main(argv=None):
 
     speedup = (timings["pr1"] + chars_ref) / (timings["engine_default"]
                                               + chars_fused)
-    # embed the PR-2 anchor for the within-noise comparison, if present
-    vs_bench2 = None
-    b2_path = os.path.join(ROOT, "BENCH_2.json")
-    if not args.quick and os.path.exists(b2_path):
-        with open(b2_path) as f:
-            b2 = json.load(f)["main"]["wall_clock_s"]
-        vs_bench2 = {
-            "bench2_wall_clock_s": b2,
+    # embed the PR-3 anchor for the within-noise comparison, if present
+    # (the single-seed path is bit-identical to ENGINE_VERSION 3)
+    vs_bench3 = None
+    b3_path = os.path.join(ROOT, "BENCH_3.json")
+    if not args.quick and os.path.exists(b3_path):
+        with open(b3_path) as f:
+            b3 = json.load(f)["main"]["wall_clock_s"]
+        vs_bench3 = {
+            "bench3_wall_clock_s": b3,
             "ratio_engine_default": timings["engine_default"]
-            / max(b2["engine_default"], 1e-9),
+            / max(b3["engine_default"], 1e-9),
         }
 
     payload = {
@@ -240,9 +294,14 @@ def main(argv=None):
                          "m_pad": m_pad}
                         for pos, m_pad in engine._buckets(bucket_cfg["ms"])],
         },
+        "seed_axis": {
+            "config": {"ms": f"1..{args.m_max}", "n_seeds": args.seeds,
+                       "iters": args.iters, "bucketed": False},
+            "results": seed_axis,
+        },
         "cache_roundtrip_s": {"fresh": fresh, "cached": cached,
                               "speedup": fresh / max(cached, 1e-9)},
-        "vs_bench2": vs_bench2,
+        "vs_bench3": vs_bench3,
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)

@@ -3,7 +3,9 @@ Training Algorithm: Dataset Matters" (arXiv:1910.11510), grown into a
 JAX/Pallas system.  `core` holds the paper's substance (dataset-character
 metrics, the four parallel training algorithms, scalability theory, the
 advisor); `experiments` is the unified sweep engine that reproduces every
-figure/table; `data` generates the Table-I synthetic datasets; `kernels`
+figure/table; `analysis` turns seed-replicated sweeps into statistics
+(bootstrap CIs, scaling-law fits, the paper report CLI); `data`
+generates the Table-I synthetic datasets; `kernels`
 carries the Pallas hot loops with jnp oracles; `configs`/`models`/`optim`/
 `sharding`/`train`/`serve`/`launch` form the production-flavored model
 stack the scalability analysis plugs into.  Start at README.md.

@@ -1,0 +1,34 @@
+"""repro.analysis — seed-replicated statistics, scaling-law fits, and the
+paper-report subsystem.
+
+The paper's headline claims are statistical — "performance reproducibility
+of parallel ML training is limited", "dataset characters decide
+scalability", "there is an upper bound m_max" — but a single-seed sweep
+reports point estimates, so a measured m_max is one noisy draw.  This
+package turns raw sweep curves (now seed-replicated via
+``SweepSpec.n_seeds``, ENGINE_VERSION 4) into statistically defensible
+artifacts:
+
+  `stats`   per-(job, m) mean/std/bootstrap-CI loss curves, seed-replicated
+            per-worker costs, and a bootstrap distribution over the
+            measured m_max — the vectorized superset of the scalar §V
+            helpers in `repro.core.scalability` (which stay as thin
+            single-curve oracles)
+  `fit`     least-squares fits of the Thm-2/Thm-3 cost laws
+            ``t/m = (1/m + a + b m) c`` with fitted-vs-predicted m_max and
+            bootstrap CIs, the characters -> m_max regression across
+            sweeps, and the vectorized theory-side m_max predictors the
+            advisor and runner consume
+  `report`  ``python -m repro.analysis.report`` — renders a markdown
+            report (bootstrap-CI Table II, fitted-vs-predicted m_max,
+            character-surface regression, ASCII/SVG curves) from the
+            sweep cache or a fresh run
+
+`report` imports `repro.experiments` and is therefore *not* imported
+here — `repro.experiments.runner` and `repro.core.advisor` import
+`stats`/`fit` without a cycle.
+"""
+
+from repro.analysis import fit, stats
+
+__all__ = ["fit", "stats"]

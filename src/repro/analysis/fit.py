@@ -1,0 +1,236 @@
+"""Scaling-law fits: the paper's theorems as fitted, testable models.
+
+Thm 2 gives Hogwild!'s per-worker training cost the shape
+
+    t/m = (1/m + a + b m) * c        i.e.   cost(m) = A/m + B + C m
+
+with A = c, B = a c, C = b c — a 1/m serial term, a constant, and a
+linearly growing coordination term; Thm 3/4 give the synchronous
+algorithms the same qualitative U-shape through the variance-driven
+sqrt(m) gain.  :func:`fit_cost_curve` least-squares fits that law to a
+*measured* cost curve, so the scalability upper bound stops being a
+single crossing read off one noisy curve and becomes a parameter of a
+fitted model with a bootstrap CI (:func:`fit_job`), comparable to the
+theory-side prediction on equal terms.
+
+:func:`characters_regression` is the paper's thesis itself as a model:
+across sweep cells (e.g. the `character_surface` spec's knob grid) it
+regresses log2(m_max) on the measured §IV characters — variance,
+sparsity, diversity — and reports coefficients and R^2: "dataset
+characters decide scalability" as a number, not a slogan.
+
+The module also hosts the **vectorized theory-side m_max predictors**
+(:func:`sync_mmax`, :func:`dadm_mmax`, :func:`hogwild_mmax` and their
+dataset-level `predict_*` wrappers).  They replace the `while m < 4096`
+Python loops in `repro.core.scalability` — which stay as the scalar
+oracles the parity tests in `tests/test_analysis.py` pin against — and
+are what `repro.core.advisor.ScalabilityAdvisor` and
+`repro.experiments.runner` consume.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.analysis import stats
+from repro.core import metrics as MX
+
+#: predictor search cap, matching the scalar oracles in core.scalability
+M_CAP = 4096
+
+
+# ---------------------------------------------------------------------------
+# vectorized theory-side predictors (scalar oracles: core.scalability)
+# ---------------------------------------------------------------------------
+
+def sync_mmax(sigma: float, parallel_cost: float = 1e-3,
+              m_cap: int = M_CAP) -> int:
+    """First m where the Thm-3 gain growth sigma (1/sqrt(m) - 1/sqrt(m+1))
+    can no longer cover the parallel cost — the vectorized form of the
+    `predict_sync_mmax` while-loop (same answer for every input)."""
+    ms = np.arange(1, m_cap, dtype=float)
+    stop = sigma * (1.0 / np.sqrt(ms) - 1.0 / np.sqrt(ms + 1.0)) \
+        <= parallel_cost
+    return int(ms[stop.argmax()]) if stop.any() else m_cap
+
+
+def dadm_mmax(diversity_ratio: float, parallel_cost: float = 1e-3,
+              m_cap: int = M_CAP) -> int:
+    """First m where the diversity-limited 1/m gain growth falls below the
+    parallel cost (vectorized `predict_dadm_mmax` search)."""
+    ms = np.arange(1, m_cap, dtype=float)
+    stop = diversity_ratio * (1.0 / ms - 1.0 / (ms + 1.0)) <= parallel_cost
+    return int(ms[stop.argmax()]) if stop.any() else m_cap
+
+
+def hogwild_mmax(omega_frac: float, delta: float, rho: float,
+                 m_cap: int = M_CAP) -> int:
+    """Largest m whose Thm-2 cost still beats the 1-worker cost, scanning
+    contiguously from m=2 (vectorized form of the `predict_hogwild_mmax`
+    for/break loop: the first non-improving m stops the scan)."""
+    ms = np.arange(2, m_cap + 1, dtype=float)
+    cost = 1.0 / ms + 6.0 * rho + 6.0 * ms * omega_frac * math.sqrt(delta)
+    c1 = 1.0 + 6.0 * rho + 6.0 * omega_frac * math.sqrt(delta)
+    fails = cost >= c1
+    if not fails.any():
+        return m_cap
+    return int(fails.argmax()) + 1          # m before the first failure
+
+
+def predict_sync_mmax(X, *, parallel_cost: float = 1e-3,
+                      m_cap: int = M_CAP) -> Dict:
+    """Dataset-level sync predictor (vectorized `core.scalability` twin —
+    identical payload, no Python m-loop)."""
+    sigma = math.sqrt(max(MX.mean_feature_variance(X), 1e-12))
+    return {"sigma_proxy": sigma, "parallel_cost": parallel_cost,
+            "predicted_m_max": sync_mmax(sigma, parallel_cost, m_cap)}
+
+
+def predict_dadm_mmax(X, *, parallel_cost: float = 1e-3,
+                      m_cap: int = M_CAP) -> Dict:
+    div = MX.diversity_ratio(X)
+    return {"diversity_ratio": div, "parallel_cost": parallel_cost,
+            "predicted_m_max": dadm_mmax(div, parallel_cost, m_cap)}
+
+
+def predict_hogwild_mmax(X, *, m_cap: int = M_CAP) -> Dict:
+    hw = MX.hogwild_params(X)
+    omega_term = hw["omega_frac"] * math.sqrt(hw["delta"])
+    m_star = 1.0 / math.sqrt(6.0 * omega_term) if omega_term > 0 else m_cap
+    return {**hw, "omega_delta_term": omega_term, "m_star": m_star,
+            "predicted_m_max": hogwild_mmax(hw["omega_frac"], hw["delta"],
+                                            hw["rho"], m_cap)}
+
+
+# ---------------------------------------------------------------------------
+# measured-cost-curve fits (Thm 2 / Thm 3 shape)
+# ---------------------------------------------------------------------------
+
+def _law_mmax(A: float, B: float, C: float, m_cap: int = M_CAP) -> int:
+    """Largest m whose fitted cost A/m + B + C m still beats the 1-worker
+    cost, same contiguous-scan semantics as the theory-side predictors.
+    A non-positive coordination term C means the fitted law never turns
+    up within the cap."""
+    ms = np.arange(2, m_cap + 1, dtype=float)
+    fails = A / ms + B + C * ms >= A + B + C
+    if not fails.any():
+        return m_cap
+    return int(fails.argmax()) + 1
+
+
+def fit_cost_curve(ms: Sequence[int], costs: Sequence[float], *,
+                   m_cap: int = M_CAP) -> Dict:
+    """Least-squares fit of cost(m) = A/m + B + C m to a measured curve.
+
+    Returns the raw coefficients, the paper's (a, b, c) parameterization
+    of ``t/m = (1/m + a + b m) c`` (c = A, a = B/A, b = C/A), the analytic
+    interior minimum ``m_star = sqrt(A/C)``, the integer ``fitted_m_max``
+    (largest m still beating the 1-worker fitted cost, scanned like the
+    theory predictors), the fitted curve, and R^2.
+    """
+    ms_arr = np.asarray(ms, dtype=float)
+    y = np.asarray(costs, dtype=float)
+    F = np.stack([1.0 / ms_arr, np.ones_like(ms_arr), ms_arr], axis=1)
+    coef, *_ = np.linalg.lstsq(F, y, rcond=None)
+    A, B, C = (float(v) for v in coef)
+    pred = F @ coef
+    ss_res = float(((y - pred) ** 2).sum())
+    ss_tot = float(((y - y.mean()) ** 2).sum())
+    r2 = 1.0 - ss_res / ss_tot if ss_tot > 0 else 1.0
+    m_star = math.sqrt(A / C) if A > 0 and C > 0 else math.inf
+    return {"A": A, "B": B, "C": C,
+            "c": A, "a": B / A if A else math.nan,
+            "b": C / A if A else math.nan,
+            "m_star": m_star, "fitted_m_max": _law_mmax(A, B, C, m_cap),
+            "r2": r2, "fitted": pred.tolist()}
+
+
+def fit_job(job: Dict, *, probe_m: int, frac: float,
+            asynchronous: Optional[bool] = None, m_cap: int = M_CAP,
+            ci: float = stats.CI, n_boot: int = stats.N_BOOT,
+            rng_seed: int = 0) -> Dict:
+    """Fit the cost law to a job's seed-mean cost curve, with a bootstrap
+    CI over ``fitted_m_max`` (resample seeds, re-average, refit)."""
+    costs = stats.cost_samples(job, asynchronous=asynchronous,
+                               probe_m=probe_m, frac=frac)   # (seeds, S)
+    ms = [int(m) for m in job["ms"]]
+    out = fit_cost_curve(ms, costs.mean(axis=0), m_cap=m_cap)
+    n_seeds = costs.shape[0]
+    if n_seeds > 1:
+        idx = stats._resample(np.random.default_rng(rng_seed), n_seeds,
+                              n_boot)
+        samples = np.array([
+            fit_cost_curve(ms, costs[i].mean(axis=0),
+                           m_cap=m_cap)["fitted_m_max"] for i in idx])
+    else:
+        samples = np.array([out["fitted_m_max"]])
+    lo, hi = stats._ci_bounds(samples, ci)
+    out.update(fitted_m_max_lo=int(lo), fitted_m_max_hi=int(hi),
+               fitted_m_max_median=int(np.median(samples)),
+               ci=ci, n_seeds=n_seeds)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# characters -> m_max regression (the thesis as a fitted model)
+# ---------------------------------------------------------------------------
+
+#: character keys regressed on (order fixes the coefficient layout)
+REGRESSION_FEATURES = ("log10_variance", "sparsity", "diversity_ratio")
+
+
+def collect_character_points(results: Iterable[Dict]) -> List[Dict]:
+    """Harvest (characters, m_max) points from `run_sweep` results — every
+    job with a cost readout contributes one point, using the bootstrap
+    point estimate when the job carries seed replicates and the scalar
+    seed-0 bound otherwise."""
+    points = []
+    for result in results:
+        eps = (result.get("spec") or {}).get("epsilon") or {}
+        for key, jr in result.get("jobs", {}).items():
+            if "measured_m_max" not in jr:
+                continue
+            ch = result["datasets"][jr["dataset"]].get("characters")
+            if not ch:
+                continue
+            m_max = jr["measured_m_max"]
+            if jr.get("n_seeds", 1) > 1:
+                m_max = stats.mmax_bootstrap(
+                    jr, probe_m=eps.get("probe_m", jr["ms"][0]),
+                    frac=eps.get("frac", 0.7))["m_max"]
+            points.append({"sweep": result.get("name", "?"), "job": key,
+                           "characters": ch, "m_max": int(m_max),
+                           "predicted_m_max": (jr.get("predicted") or {})
+                           .get("predicted_m_max")})
+    return points
+
+
+def characters_regression(points: Sequence[Dict]) -> Optional[Dict]:
+    """Linear regression log2(m_max) ~ 1 + log10(variance) + sparsity +
+    diversity_ratio across sweep cells.  Needs more points than
+    coefficients; returns None otherwise.  The paper's claim says variance
+    should push the bound up for the sync algorithms and duplication pull
+    it down — here those are fitted signs with an R^2, testable."""
+    if len(points) < len(REGRESSION_FEATURES) + 2:
+        return None
+    rows, y = [], []
+    for p in points:
+        ch = p["characters"]
+        rows.append([1.0,
+                     math.log10(max(ch["mean_feature_variance"], 1e-12)),
+                     ch["sparsity"], ch["diversity_ratio"]])
+        y.append(math.log2(max(p["m_max"], 1)))
+    X = np.asarray(rows)
+    y = np.asarray(y)
+    coef, *_ = np.linalg.lstsq(X, y, rcond=None)
+    pred = X @ coef
+    ss_res = float(((y - pred) ** 2).sum())
+    ss_tot = float(((y - y.mean()) ** 2).sum())
+    return {"n_points": len(points),
+            "coef": {name: float(c) for name, c in
+                     zip(("intercept",) + REGRESSION_FEATURES, coef)},
+            "r2": 1.0 - ss_res / ss_tot if ss_tot > 0 else 1.0,
+            "predicted_log2_mmax": pred.tolist()}

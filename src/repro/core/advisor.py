@@ -7,6 +7,12 @@ Production usage (any of the 10 archs):
     report = advisor.from_grads(per_shard_grads)    # gradient-level characters
     report = advisor.from_dataset(X, ...)           # raw-dataset characters
 Both return {characters..., predicted m_max per strategy, recommendation}.
+
+The m_max searches go through the vectorized scaling-law predictors in
+`repro.analysis.fit` (one array scan over the m grid) rather than the
+``while m < 4096`` Python loops of `repro.core.scalability` — those stay
+as the scalar oracles, and tests/test_analysis.py pins the two paths to
+identical answers.
 """
 
 from __future__ import annotations
@@ -16,8 +22,8 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import fit as FIT
 from repro.core import metrics as MX
-from repro.core import scalability as SC
 
 
 def _flatten(tree):
@@ -53,12 +59,10 @@ class ScalabilityAdvisor:
 
     def from_grads(self, per_shard_grads: List) -> Dict:
         ch = self.grad_characters(per_shard_grads)
-        # gradient-noise-scale plays sigma's role in the Thm 3 curve
+        # gradient-noise-scale plays sigma's role in the Thm 3 curve;
+        # the m-search is the vectorized grid scan, not a Python loop
         sigma = ch["grad_noise_scale"] ** 0.5
-        m = 1
-        while m < 4096 and SC.predict_sync_gain_growth(m, sigma) > self.parallel_cost:
-            m += 1
-        ch["predicted_m_max_sync"] = m
+        ch["predicted_m_max_sync"] = FIT.sync_mmax(sigma, self.parallel_cost)
         # Hogwild staleness tolerance needs gradient sparsity
         om = (1.0 - ch["grad_sparsity"])
         ch["predicted_m_max_stale"] = max(
@@ -69,9 +73,9 @@ class ScalabilityAdvisor:
     # -- dataset-level characters (faithful tier) ---------------------------
     def from_dataset(self, X, *, tau_max=8, batch_size=8) -> Dict:
         ch = MX.summarize(X, tau_max=tau_max, batch_size=batch_size)
-        ch["hogwild"] = SC.predict_hogwild_mmax(X)
-        ch["sync"] = SC.predict_sync_mmax(X, parallel_cost=self.parallel_cost)
-        ch["dadm"] = SC.predict_dadm_mmax(X, parallel_cost=self.parallel_cost)
+        ch["hogwild"] = FIT.predict_hogwild_mmax(X)
+        ch["sync"] = FIT.predict_sync_mmax(X, parallel_cost=self.parallel_cost)
+        ch["dadm"] = FIT.predict_dadm_mmax(X, parallel_cost=self.parallel_cost)
         ch["recommendation"] = self._recommend_dataset(ch)
         return ch
 

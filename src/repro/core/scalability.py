@@ -15,6 +15,15 @@ Theory-side predictor (Thm 2): for Hogwild! each worker trains
   t/m = (1/m + 6 rho + 6 m Omega delta^{1/2}) * Omega * h(eps)
 so the predicted m_max is argmin_m (1/m + 6 m Omega delta^{1/2}) — computed
 directly from the dataset characters.
+
+These are the *scalar, single-curve oracles*: deliberately simple Python
+loops over one curve, kept verbatim as the reference the vectorized forms
+are parity-tested against.  Production consumers go through
+`repro.analysis` — `analysis.stats` broadcasts the measurement helpers
+over seed/grid axes and adds bootstrap CIs, `analysis.fit` replaces the
+``while m < 4096`` predictor searches with vectorized scans (same answers,
+pinned by tests/test_analysis.py) and fits the Thm-2 cost law to measured
+curves.
 """
 
 from __future__ import annotations
@@ -53,11 +62,16 @@ def gain_growth_from_costs(costs: List[float]) -> List[float]:
 
 
 def gain_growth_from_losses(results: List[Dict], at_iteration: int):
-    """First definition: loss(m) - loss(m+1) at a fixed server iteration."""
+    """First definition: loss(m) - loss(m+1) at a fixed server iteration.
+
+    The eval index clamps to [0, n_evals): iterations below one eval
+    period read the *first* eval (``at_iteration=0`` used to wrap to
+    index -1, silently reading the last one) and iterations beyond the
+    budget read the last."""
     vals = []
     for r in results:
         i = min(at_iteration // r["eval_every"], len(r["losses"])) - 1
-        vals.append(float(r["losses"][i]))
+        vals.append(float(r["losses"][max(i, 0)]))
     return [vals[i] - vals[i + 1] for i in range(len(vals) - 1)]
 
 

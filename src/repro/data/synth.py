@@ -191,6 +191,47 @@ def make_label_noise(key, base="higgs_like", flip_frac=0.2, **base_kwargs):
                    f"{ds.name}:noise{flip_frac}")
 
 
+@register_generator("character_knob")
+def make_character_knob(key, n=1024, d=64, variance=1.0, density=1.0,
+                        duplication=0.0):
+    """Continuous §IV character surface: one generator, three independent
+    knobs, each mapped to one paper character.
+
+      ``variance``     target per-feature variance *as measured* — features
+                       are uniform on a zero-centered interval whose span
+                       compensates the density mask (masking a zero-mean
+                       variable scales its variance by the density, so the
+                       span is sqrt(12 var / density)); the knobs stay
+                       independent instead of variance collapsing onto the
+                       sparsity axis
+      ``density``      nonzero fraction (sparsity = 1 - density)
+      ``duplication``  fraction of rows replaced by copies of the retained
+                       head (diversity_ratio ~ 1 - duplication); sweeps
+                       measuring characters must look at ALL rows
+                       (``characters_rows=n``), as the unique head alone
+                       reads as full diversity
+
+    The `character_surface` spec sweeps these knobs over a grid and maps
+    the measured/fitted m_max surface — the paper's "dataset characters
+    decide scalability" thesis as a fitted, testable model
+    (`repro.analysis.fit.characters_regression`).
+    """
+    if not (0.0 <= duplication < 1.0):
+        raise ValueError(f"duplication={duplication} must be in [0, 1)")
+    if not 0.0 < density <= 1.0:
+        raise ValueError(f"density={density} must be in (0, 1]")
+    k1, k2 = jax.random.split(key)
+    half_span = 0.5 * (12.0 * variance / density) ** 0.5
+    X = jax.random.uniform(k1, (n, d), minval=-half_span, maxval=half_span)
+    if density < 1.0:
+        X = jnp.where(jax.random.bernoulli(k2, density, (n, d)), X, 0.0)
+    n_unique = max(1, int(round(n * (1.0 - duplication))))
+    if n_unique < n:
+        X = X[jnp.arange(n) % n_unique]       # tile the retained head
+    return Dataset(X, label_with_ruler(X),
+                   f"character_knob_v{variance}_p{density}_dup{duplication}")
+
+
 @register_generator("heavy_tailed")
 def make_heavy_tailed(key, n=8000, d=28, df=3.0, scale=1.0):
     """Heavy-tailed feature-variance dataset: Student-t features with ``df``

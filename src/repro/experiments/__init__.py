@@ -10,6 +10,9 @@ point), `runner.run_sweep` orchestrates a spec end to end with
 content-hashed artifact caching, and ``python -m repro.experiments.run``
 is the CLI that reproduces any figure from a spec name.  The legacy
 `benchmarks/paper_*.py` scripts are thin adapters over this package.
+Specs with ``n_seeds > 1`` replicate every curve over a vmapped seed
+batch; `repro.analysis` consumes the replicate blocks (bootstrap CIs,
+scaling-law fits, ``python -m repro.analysis.report``).
 
 Extending it is registration, not engine surgery: a new optimizer is an
 `Algorithm` dataclass (`repro.core.algorithms.base.register_algorithm`), a

@@ -43,6 +43,19 @@ tests compare against.  The per-algorithm ``sweep_*`` wrappers keep the
 ENGINE_VERSION-2 signatures; for Hogwild! the sequential path still loops
 the legacy per-m `run_hogwild`, so the vmapped grid is checked against the
 original staleness recurrence, not against another padded kernel.
+
+**Seed axis** (ENGINE_VERSION 4): ``n_seeds > 1`` replicates every job
+over independent draw sequences — `Algorithm.make_draws` is called once
+per seed (seed 0 with the caller's key, bit-identical to the
+ENGINE_VERSION-3 single-seed run; seed s with ``fold_in(key, s)``), the
+per-seed draws are stacked, and the per-m simulation is ``jax.vmap``-ed
+over that stacked axis *inside* ``sim(m)``.  The m-grid vmap then wraps
+the seed vmap, so the whole (seeds x m) grid is still ONE trace and ONE
+compile per bucket — no per-seed recompiles (`scripts/bench_engine.py`
+measures this via `JIT_CALLS` in BENCH_4.json).  Results keep ``losses``
+as the seed-0 rows (every legacy consumer unchanged) and add
+``losses_seeds`` — the full (S, n_seeds, n_evals) block `repro.analysis.
+stats` turns into mean/CI curves and bootstrap m_max distributions.
 """
 
 from __future__ import annotations
@@ -74,19 +87,29 @@ def _jit(fn):
 
 
 def _losses_dict(algorithm: str, ms, losses, iters: int, eval_every: int,
-                 problem: str = "logistic"):
+                 problem: str = "logistic", n_seeds: int = 1):
     """Engine output contract: curves for every m of the grid.  The
-    ``problem`` key is new in ENGINE_VERSION 3 (additive — legacy keys are
-    unchanged)."""
-    return {
+    ``problem`` key is new in ENGINE_VERSION 3, ``n_seeds``/``losses_seeds``
+    in ENGINE_VERSION 4 (both additive — legacy keys are unchanged;
+    ``losses`` is always the seed-0 rows)."""
+    losses = jax.device_get(losses)
+    out = {
         "algorithm": algorithm,
         "problem": problem,
         "ms": [int(m) for m in ms],
         "iters": int(iters),
         "eval_every": int(eval_every),
-        # (S, n_evals) float list-of-lists, row i <-> ms[i]
-        "losses": [[float(v) for v in row] for row in jax.device_get(losses)],
+        "n_seeds": int(n_seeds),
     }
+    if n_seeds == 1:
+        # (S, n_evals) float list-of-lists, row i <-> ms[i]
+        out["losses"] = [[float(v) for v in row] for row in losses]
+    else:
+        # losses: (S, n_seeds, n_evals); seed 0 is the legacy sequence
+        out["losses"] = [[float(v) for v in row[0]] for row in losses]
+        out["losses_seeds"] = [[[float(v) for v in curve] for curve in row]
+                               for row in losses]
+    return out
 
 
 def _buckets(ms: Sequence[int],
@@ -145,14 +168,16 @@ def sweep(algorithm: Union[str, alg_base.Algorithm], train, test,
           ms: Sequence[int], *, iters: int, eval_every: int,
           problem="logistic", lam: Optional[float] = None, key=None,
           use_vmap: bool = True, bucketed: Optional[bool] = None,
-          **alg_kwargs) -> Dict:
+          n_seeds: int = 1, **alg_kwargs) -> Dict:
     """Run ``algorithm`` on ``problem`` over the worker grid ``ms``.
 
     ``algorithm`` is a registry name (instantiated with ``alg_kwargs``,
     e.g. ``gamma=0.05``) or a ready `Algorithm` instance; ``problem`` a
     registry name / class / instance (``lam`` overrides its regularizer,
     preserving the legacy ``lam=`` kwarg).  ``bucketed=None`` defers to the
-    algorithm's declared padding policy.
+    algorithm's declared padding policy.  ``n_seeds > 1`` replicates every
+    grid member over that many independent draw sequences, vmapped inside
+    the same trace (seed 0 == the single-seed run bit-exactly).
     """
     if isinstance(algorithm, alg_base.Algorithm):
         if alg_kwargs:
@@ -163,38 +188,59 @@ def sweep(algorithm: Union[str, alg_base.Algorithm], train, test,
         alg = alg_base.get_algorithm(algorithm)(**alg_kwargs)
     prob = problems_mod.resolve_problem(problem, lam)
     key = key if key is not None else jax.random.PRNGKey(0)
+    if n_seeds < 1:
+        raise ValueError(f"n_seeds={n_seeds} must be >= 1")
 
     ms = list(ms)
     m_top = max(ms)
     n = train.X.shape[0]
     Xte, yte = test.X, test.y
     n_evals = iters // eval_every
-    draws = alg.make_draws(key, n, iters, m_top)
+    # seed 0 uses the caller's key unchanged — the ENGINE_VERSION-3 draws
+    # bit-exactly — and seed s folds s into it, so growing n_seeds only
+    # appends replicates, never perturbs existing ones
+    seed_keys = [key] + [jax.random.fold_in(key, s)
+                         for s in range(1, n_seeds)]
+    draws_by_seed = [alg.make_draws(k, n, iters, m_top) for k in seed_keys]
 
     def make_sim(m_pad):
-        sub = alg.slice_draws(draws, m_pad)
+        subs = [alg.slice_draws(d, m_pad) for d in draws_by_seed]
 
-        def sim(m):
-            ctx = alg_base.SimContext(m, m_pad)
-            state0 = alg.init_state(prob, train, ctx)
+        def sim_with(sub):
+            def sim(m):
+                ctx = alg_base.SimContext(m, m_pad)
+                state0 = alg.init_state(prob, train, ctx)
 
-            def step(state, inp):
-                batch, t = inp
-                return alg.step(prob, train, ctx, state, batch, t), None
+                def step(state, inp):
+                    batch, t = inp
+                    return alg.step(prob, train, ctx, state, batch, t), None
 
-            def outer(state, e):
-                base = e * eval_every
-                ts = base + jnp.arange(eval_every)
-                bsl = jax.tree.map(lambda a: jax.lax.dynamic_slice_in_dim(
-                    a, base, eval_every, axis=0), sub)
-                state, _ = jax.lax.scan(step, state, (bsl, ts))
-                return state, prob.test_loss(alg.readout(ctx, state),
-                                             Xte, yte)
+                def outer(state, e):
+                    base = e * eval_every
+                    ts = base + jnp.arange(eval_every)
+                    bsl = jax.tree.map(lambda a: jax.lax.dynamic_slice_in_dim(
+                        a, base, eval_every, axis=0), sub)
+                    state, _ = jax.lax.scan(step, state, (bsl, ts))
+                    return state, prob.test_loss(alg.readout(ctx, state),
+                                                 Xte, yte)
 
-            _, losses = jax.lax.scan(outer, state0, jnp.arange(n_evals))
-            return losses
+                _, losses = jax.lax.scan(outer, state0, jnp.arange(n_evals))
+                return losses
 
-        return sim
+            return sim
+
+        if n_seeds == 1:
+            return sim_with(subs[0])       # the exact ENGINE_VERSION-3 path
+
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *subs)
+
+        def sim_seeded(m):
+            # vmap the per-seed simulation over the stacked draw axis: the
+            # m-grid vmap in `_run_grid` wraps this, so the whole
+            # (seeds x m) block is one trace / one compile per bucket
+            return jax.vmap(lambda sub: sim_with(sub)(m))(stacked)
+
+        return sim_seeded
 
     if bucketed is None:
         bucketed = alg.bucketed_default
@@ -202,12 +248,12 @@ def sweep(algorithm: Union[str, alg_base.Algorithm], train, test,
         bucketed = False
     losses = _run_grid(make_sim, ms, use_vmap, bucketed)
     return _losses_dict(alg.name, ms, losses, iters, eval_every,
-                        problem=prob.name)
+                        problem=prob.name, n_seeds=n_seeds)
 
 
 def run_algorithm_sweep(algorithm: str, train, test, ms, *, iters,
                         eval_every, use_vmap=True, bucketed=None,
-                        **kwargs) -> Dict:
+                        n_seeds=1, **kwargs) -> Dict:
     """Dispatch one (algorithm, problem, dataset) job over the worker grid.
 
     Every registered algorithm routes through the generic :func:`sweep`;
@@ -219,11 +265,11 @@ def run_algorithm_sweep(algorithm: str, train, test, ms, *, iters,
     if fn is None:
         return sweep(algorithm, train, test, ms, iters=iters,
                      eval_every=eval_every, use_vmap=use_vmap,
-                     bucketed=bucketed, **kwargs)
+                     bucketed=bucketed, n_seeds=n_seeds, **kwargs)
     if bucketed is not None:
         kwargs["bucketed"] = bucketed
     return fn(train, test, list(ms), iters=iters, eval_every=eval_every,
-              use_vmap=use_vmap, **kwargs)
+              use_vmap=use_vmap, n_seeds=n_seeds, **kwargs)
 
 
 # ---------------------------------------------------------------------------
@@ -232,36 +278,39 @@ def run_algorithm_sweep(algorithm: str, train, test, ms, *, iters,
 
 def sweep_minibatch(train, test, ms: Sequence[int], *, iters: int,
                     eval_every: int, gamma=0.1, lam=LAMBDA, key=None,
-                    use_vmap=True, bucketed=True, problem="logistic") -> Dict:
+                    use_vmap=True, bucketed=True, n_seeds=1,
+                    problem="logistic") -> Dict:
     return sweep("minibatch", train, test, ms, iters=iters,
                  eval_every=eval_every, problem=problem, lam=lam, key=key,
-                 use_vmap=use_vmap, bucketed=bucketed, gamma=gamma)
+                 use_vmap=use_vmap, bucketed=bucketed, n_seeds=n_seeds,
+                 gamma=gamma)
 
 
 def sweep_ecd_psgd(train, test, ms: Sequence[int], *, iters: int,
                    eval_every: int, gamma=0.1, lam=LAMBDA, compress_bits=8,
-                   key=None, use_vmap=True, bucketed=True,
+                   key=None, use_vmap=True, bucketed=True, n_seeds=1,
                    problem="logistic") -> Dict:
     return sweep("ecd_psgd", train, test, ms, iters=iters,
                  eval_every=eval_every, problem=problem, lam=lam, key=key,
-                 use_vmap=use_vmap, bucketed=bucketed, gamma=gamma,
-                 compress_bits=compress_bits)
+                 use_vmap=use_vmap, bucketed=bucketed, n_seeds=n_seeds,
+                 gamma=gamma, compress_bits=compress_bits)
 
 
 def sweep_dadm(train, test, ms: Sequence[int], *, iters: int, eval_every: int,
                local_batch=8, lam=LAMBDA, key=None, use_vmap=True,
-               bucketed=False, problem="logistic") -> Dict:
+               bucketed=False, n_seeds=1, problem="logistic") -> Dict:
     return sweep("dadm", train, test, ms, iters=iters,
                  eval_every=eval_every, problem=problem, lam=lam, key=key,
-                 use_vmap=use_vmap, bucketed=bucketed,
+                 use_vmap=use_vmap, bucketed=bucketed, n_seeds=n_seeds,
                  local_batch=local_batch)
 
 
 def sweep_hogwild(train, test, ms: Sequence[int], *, iters: int,
                   eval_every: int, gamma=0.1, lam=LAMBDA, key=None,
-                  use_vmap=True, bucketed=True, problem="logistic") -> Dict:
+                  use_vmap=True, bucketed=True, n_seeds=1,
+                  problem="logistic") -> Dict:
     key = key if key is not None else jax.random.PRNGKey(0)
-    if not use_vmap and problem == "logistic":
+    if not use_vmap and problem == "logistic" and n_seeds == 1:
         # Legacy per-m reference path (re-jits per m): the vmapped grid is
         # equivalence-tested against this, i.e. against the original
         # recurrence rather than against another padded kernel.
@@ -276,7 +325,7 @@ def sweep_hogwild(train, test, ms: Sequence[int], *, iters: int,
     del bucketed   # force_flat: work is O(iters * d) regardless of m_pad
     return sweep("hogwild", train, test, ms, iters=iters,
                  eval_every=eval_every, problem=problem, lam=lam, key=key,
-                 use_vmap=use_vmap, gamma=gamma)
+                 use_vmap=use_vmap, n_seeds=n_seeds, gamma=gamma)
 
 
 SWEEPERS = {

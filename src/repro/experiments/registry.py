@@ -14,13 +14,21 @@ complete, hashable description of a paper experiment:
                           label-noise / heavy-tailed dataset variants —
                           the dataset-characters claims off the logistic
                           loss, purely via registry entries
+  ``character_surface``   the thesis as a surface: one generator
+                          (`character_knob`) swept continuously over
+                          variance x density x duplication, with seed
+                          replicates, cost readouts, and predictions —
+                          the input of `repro.analysis.fit`'s
+                          characters -> m_max regression
 
-Use :func:`get_spec` / :data:`SPEC_IDS`; ``iters`` / ``n`` overrides thread
-through to the builders for fast smoke runs.
+Use :func:`get_spec` / :data:`SPEC_IDS`; ``iters`` / ``n`` / ``seeds``
+overrides thread through for fast smoke runs (``seeds`` replaces the
+spec's ``n_seeds``, e.g. for the `repro.analysis.report` CLI).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import warnings
 from typing import Optional
 
@@ -178,6 +186,46 @@ def _problem_generality(quick=False, iters: Optional[int] = None,
         datasets=datasets, jobs=jobs).validate()
 
 
+def _character_surface(quick=False, iters: Optional[int] = None,
+                       n: Optional[int] = None) -> SweepSpec:
+    """The paper's thesis as a fitted surface: sweep the `character_knob`
+    generator over a (variance, density, duplication) grid, replicate each
+    cell over a vmapped seed batch, and read cost/m_max per cell — the
+    points `repro.analysis.fit.characters_regression` regresses m_max
+    against and `repro.analysis.report` renders as the surface table.
+    Every cell predicts too (`predict=True`), so the report can put the
+    fitted bound next to the theory-side one.
+    """
+    iters = iters if iters is not None else (400 if quick else 1200)
+    n = n if n is not None else (512 if quick else 1536)
+    variances = (0.25, 4.0) if quick else (0.25, 1.0, 4.0)
+    densities = (0.15, 1.0) if quick else (0.1, 0.5, 1.0)
+    dups = (0.0, 0.75) if quick else (0.0, 0.5, 0.75)
+    datasets = {}
+    for v in variances:
+        for p in densities:
+            for dup in dups:
+                datasets[f"v{v}_p{p}_dup{dup}"] = DatasetSpec(
+                    "character_knob",
+                    {"n": n, "d": 48, "variance": v, "density": p,
+                     "duplication": dup})
+    jobs = tuple(JobSpec("minibatch", ds, predict=True) for ds in datasets)
+    return SweepSpec(
+        name="character_surface",
+        description="m_max surface over continuous variance/sparsity/"
+                    "diversity knobs (seed-replicated)",
+        ms=(1, 2, 4, 8) if quick else (1, 2, 4, 8, 16),
+        iters=iters, eval_every=iters // 10,
+        datasets=datasets, jobs=jobs,
+        epsilon=EpsilonSpec(probe_m=2, frac=0.7),
+        # measure characters on EVERY row: character_knob tiles duplicates
+        # after the unique head, so a row-capped summary would report
+        # diversity_ratio 1.0 for every duplication level and corrupt the
+        # characters -> m_max regression
+        characters_rows=n,
+        n_seeds=3 if quick else 8).validate()
+
+
 _BUILDERS = {
     "variance_sparsity": _variance_sparsity,
     "diversity": _diversity,
@@ -185,6 +233,7 @@ _BUILDERS = {
     "upper_bound": _upper_bound,
     "scalability_study": _scalability_study,
     "problem_generality": _problem_generality,
+    "character_surface": _character_surface,
 }
 
 SPEC_IDS = sorted(_BUILDERS)
@@ -192,8 +241,14 @@ SPEC_IDS = sorted(_BUILDERS)
 
 def get_spec(name: str, *, quick: bool = False,
              iters: Optional[int] = None,
-             n: Optional[int] = None) -> SweepSpec:
-    """Resolve a named paper spec (quick mode folds in CI-scale constants)."""
+             n: Optional[int] = None,
+             seeds: Optional[int] = None) -> SweepSpec:
+    """Resolve a named paper spec (quick mode folds in CI-scale constants).
+    ``seeds`` overrides the spec's ``n_seeds`` — e.g. the analysis report
+    replicates the single-seed paper specs without a new builder."""
     if name not in _BUILDERS:
         raise KeyError(f"unknown sweep spec {name!r}; known: {SPEC_IDS}")
-    return _BUILDERS[name](quick=quick, iters=iters, n=n)
+    spec = _BUILDERS[name](quick=quick, iters=iters, n=n)
+    if seeds is not None and seeds != spec.n_seeds:
+        spec = dataclasses.replace(spec, n_seeds=seeds).validate()
+    return spec

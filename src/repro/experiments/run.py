@@ -39,8 +39,12 @@ def _print_report(result: dict) -> None:
     spec = result["spec"]
     print("=" * 72)
     print(f"sweep {result['name']}: {spec['description']}")
-    print(f"  m grid={list(spec['ms'])}  iters={spec['iters']}  "
-          f"eval_every={spec['eval_every']}")
+    line = (f"  m grid={list(spec['ms'])}  iters={spec['iters']}  "
+            f"eval_every={spec['eval_every']}")
+    if spec.get("n_seeds", 1) > 1:
+        line += (f"  seeds={spec['n_seeds']} (stats: "
+                 f"python -m repro.analysis.report)")
+    print(line)
     print("=" * 72)
 
     for name, info in result["datasets"].items():
@@ -126,6 +130,9 @@ def main(argv=None) -> int:
                     help="CI-scale iteration counts")
     ap.add_argument("--iters", type=int, help="override iteration budget")
     ap.add_argument("--n", type=int, help="override dataset size")
+    ap.add_argument("--seeds", type=int,
+                    help="override the spec's n_seeds (seed replicates per "
+                         "job, vmapped in one trace; see repro.analysis)")
     ap.add_argument("--force", action="store_true",
                     help="recompute even on a cache hit")
     ap.add_argument("--no-cache", action="store_true",
@@ -144,7 +151,7 @@ def main(argv=None) -> int:
         ap.error("--spec is required (or --list)")
 
     spec = registry.get_spec(args.spec, quick=args.quick,
-                             iters=args.iters, n=args.n)
+                             iters=args.iters, n=args.n, seeds=args.seeds)
     if args.problem:
         problems_mod.get_problem(args.problem)    # fail fast if unknown
         spec = dataclasses.replace(spec, jobs=tuple(

@@ -22,6 +22,13 @@ sparsity, diversity, LS) into ``result["datasets"][name]["characters"]``
 — capped at `DEFAULT_CHARACTERS_ROWS` rows unless the spec asks for more
 via ``characters_rows``.
 
+Specs with ``n_seeds > 1`` replicate every curve over a vmapped seed
+batch (see `engine.sweep`); the scalar epsilon/cost/m_max readouts here
+stay seed-0 (every legacy key is unchanged) and the full per-seed block
+lands in ``job["losses_seeds"]`` — `repro.analysis.stats` turns it into
+mean/CI curves, seed-replicated costs, and bootstrap m_max
+distributions.
+
 Results are plain JSON-serializable dicts (curves as a row-per-m list of
 lists; use `curves_by_m` for {m: curve} access) and are stored in the
 content-hashed artifact cache — re-running an unchanged spec is a disk
@@ -38,6 +45,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.analysis import fit as fit_mod
 from repro.core import metrics as MX
 from repro.core import scalability as SC
 from repro.core.algorithms import base as alg_base
@@ -46,11 +54,13 @@ from repro.experiments import engine
 from repro.experiments import spec as spec_mod
 from repro.experiments.spec import SweepSpec
 
-#: theory-side m_max predictor per Algorithm.predictor kind
+#: theory-side m_max predictor per Algorithm.predictor kind — the
+#: vectorized `repro.analysis.fit` scans (the scalar while-loops in
+#: `core.scalability` remain the parity oracles)
 _PREDICTORS = {
-    "hogwild": SC.predict_hogwild_mmax,
-    "sync": SC.predict_sync_mmax,
-    "dadm": SC.predict_dadm_mmax,
+    "hogwild": fit_mod.predict_hogwild_mmax,
+    "sync": fit_mod.predict_sync_mmax,
+    "dadm": fit_mod.predict_dadm_mmax,
 }
 
 #: row cap for the always-on dataset-characters report (the §IV indices are
@@ -131,9 +141,9 @@ def run_sweep(spec: SweepSpec, *, use_cache: bool = True, force: bool = False,
         jr = engine.run_algorithm_sweep(
             job.algorithm, tr, te, spec.ms, iters=spec.iters,
             eval_every=spec.eval_every, use_vmap=use_vmap,
-            problem=job.problem, **job.kwargs)
+            problem=job.problem, n_seeds=spec.n_seeds, **job.kwargs)
         jr["dataset"] = job.dataset
-        if not np.isfinite(jr["losses"]).all():
+        if not np.isfinite(jr.get("losses_seeds", jr["losses"])).all():
             # diverged — usually a step size tuned for another objective's
             # curvature (e.g. logistic gamma on ridge); surface it loudly
             # instead of caching NaN readouts silently

@@ -18,6 +18,10 @@ curves".  A :class:`SweepSpec` captures that declaratively:
   * ``epsilon``   — optional cost readout: epsilon is the loss the
     ``probe_m``-worker run reaches after ``frac`` of its budget, and cost is
     iterations-per-worker to reach it (paper §V.B.1, Table II).
+  * ``n_seeds``   — seed replicates per job: every curve is re-run under
+    ``n_seeds`` independent draw sequences, vmapped inside the same single
+    trace (seed 0 is the legacy sequence), feeding the `repro.analysis`
+    statistics (mean/CI curves, bootstrap ``m_max`` distributions).
 
 Specs are frozen, JSON-round-trippable (``to_dict`` / ``from_dict``) and
 content-hashable (:func:`fingerprint`) — the fingerprint keys the on-disk
@@ -55,7 +59,12 @@ from repro.data import synth
 #   3: PR-3 protocol engine: generic Algorithm x Problem dispatch, jobs
 #      carry a `problem`, dataset characters always reported, registry
 #      sources folded into the fingerprint
-ENGINE_VERSION = 3
+#   4: PR-4 seed axis: `SweepSpec.n_seeds` replicates every job over a seed
+#      batch vmapped INSIDE the same single trace (seed 0 reproduces the
+#      ENGINE_VERSION-3 draws bit-exactly; extra seeds fold the seed index
+#      into the sweep key); results gain `n_seeds`/`losses_seeds`, consumed
+#      by the `repro.analysis` statistics subsystem
+ENGINE_VERSION = 4
 
 #: Import-time snapshots for display / back-compat; validation always goes
 #: through the live registries, so late registrations are fully usable.
@@ -132,6 +141,7 @@ class SweepSpec:
     csim_rows: int = 400                 # rows used for the C_sim estimate
     characters_rows: int = 0             # §IV summary rows; 0 = default cap
     split_seed: int = 0                  # key for shuffled splits
+    n_seeds: int = 1                     # seed replicates per job (vmapped)
 
     # -- validation ---------------------------------------------------------
     def validate(self) -> "SweepSpec":
@@ -142,6 +152,9 @@ class SweepSpec:
         if self.iters < self.eval_every or self.eval_every < 1:
             raise ValueError(f"spec {self.name!r}: iters={self.iters} "
                              f"eval_every={self.eval_every}")
+        if self.n_seeds < 1:
+            raise ValueError(f"spec {self.name!r}: n_seeds={self.n_seeds} "
+                             f"must be >= 1")
         if self.epsilon is not None:
             if self.epsilon.probe_m not in self.ms:
                 raise ValueError(

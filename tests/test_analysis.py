@@ -1,0 +1,355 @@
+"""repro.analysis: vectorized-vs-oracle parity (stats + predictors), the
+Thm-2 cost-law fit, bootstrap statistics, the characters -> m_max
+regression, scalar-oracle coverage for core.scalability, and the report
+CLI end to end."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import fit, stats
+from repro.core import scalability as SC
+from repro.core.advisor import ScalabilityAdvisor
+from repro.data import synth
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# core.scalability scalar oracles (direct coverage — previously exercised
+# only through benchmarks)
+# ---------------------------------------------------------------------------
+
+def test_iterations_to_epsilon_never_hits_and_exact_hit():
+    losses = np.array([0.9, 0.5, 0.3])
+    assert SC.iterations_to_epsilon(losses, 50, 0.1) == math.inf
+    # exact hit: the eval equal to epsilon counts as reaching it
+    assert SC.iterations_to_epsilon(losses, 50, 0.5) == 100.0
+    # first eval already below epsilon
+    assert SC.iterations_to_epsilon(losses, 50, 2.0) == 50.0
+
+
+def test_cost_per_worker_async_division():
+    r = {"losses": [0.9, 0.4], "eval_every": 100, "m": 4}
+    assert SC.cost_per_worker(r, 0.5, asynchronous=False) == 200.0
+    assert SC.cost_per_worker(r, 0.5, asynchronous=True) == 50.0
+    assert SC.cost_per_worker(r, 0.1, asynchronous=True) == math.inf
+
+
+def test_gain_growth_from_costs():
+    assert SC.gain_growth_from_costs([100.0, 60.0, 45.0]) == [40.0, 15.0]
+    assert SC.gain_growth_from_costs([10.0]) == []
+
+
+def test_gain_growth_from_losses_clamps_at_iteration_zero():
+    """Regression: at_iteration=0 computed index min(0, len)-1 == -1 and
+    silently read the LAST eval; it must clamp to the first."""
+    results = [{"losses": [0.9, 0.2], "eval_every": 100},
+               {"losses": [0.5, 0.1], "eval_every": 100}]
+    assert SC.gain_growth_from_losses(results, 0) == \
+        pytest.approx([0.9 - 0.5])
+    # interior and beyond-budget reads are unchanged
+    assert SC.gain_growth_from_losses(results, 100) == \
+        pytest.approx([0.9 - 0.5])
+    assert SC.gain_growth_from_losses(results, 200) == \
+        pytest.approx([0.2 - 0.1])
+    assert SC.gain_growth_from_losses(results, 10**6) == \
+        pytest.approx([0.2 - 0.1])
+
+
+# ---------------------------------------------------------------------------
+# stats: vectorized forms pinned to the scalar oracles
+# ---------------------------------------------------------------------------
+
+def test_vectorized_iterations_to_epsilon_parity():
+    rng = np.random.default_rng(0)
+    curves = rng.uniform(0.1, 1.0, size=(3, 5, 8))
+    for eps in (0.15, 0.5, 2.0, 0.05):
+        vec = stats.iterations_to_epsilon(curves, 25, eps)
+        for i in range(3):
+            for j in range(5):
+                assert vec[i, j] == SC.iterations_to_epsilon(
+                    curves[i, j], 25, eps)
+
+
+def test_iterations_to_epsilon_per_seed_broadcast():
+    """A (n_seeds,) epsilon aligns with the SEED axis of (seeds, S, E)
+    curves — one threshold per seed, applied to every grid row — and an
+    over-ranked epsilon is rejected instead of mis-broadcast."""
+    curves = np.array([[[0.9, 0.5], [0.8, 0.4]],      # seed 0
+                       [[0.9, 0.5], [0.8, 0.4]]])     # seed 1 (same)
+    eps = np.array([0.45, 0.85])                       # differs per seed
+    out = stats.iterations_to_epsilon(curves, 10, eps)
+    for j in range(2):                                 # every grid row
+        assert out[0, j] == stats.iterations_to_epsilon(
+            curves[0, j], 10, 0.45)
+        assert out[1, j] == stats.iterations_to_epsilon(
+            curves[1, j], 10, 0.85)
+    with pytest.raises(ValueError):
+        stats.iterations_to_epsilon(curves, 10, np.zeros((2, 2, 2, 2)))
+
+
+def test_vectorized_cost_and_bound_parity():
+    rng = np.random.default_rng(1)
+    ms = [1, 2, 4, 8, 16]
+    costs = rng.uniform(1.0, 100.0, size=(6, len(ms)))
+    np.testing.assert_allclose(
+        stats.cost_per_worker(costs, ms, True), costs / np.asarray(ms))
+    np.testing.assert_allclose(
+        stats.cost_per_worker(costs, ms, False), costs)
+    gg = stats.gain_growth(costs)
+    for row_gg, row_c in zip(gg, costs):
+        assert row_gg.tolist() == SC.gain_growth_from_costs(row_c.tolist())
+        assert stats.measured_upper_bound(ms[:-1], row_gg) == \
+            SC.measured_upper_bound(ms[:-1], row_gg.tolist())
+
+
+def test_seed_curves_single_seed_fallback():
+    job = {"losses": [[0.9, 0.5], [0.8, 0.4]]}
+    arr = stats.seed_curves(job)
+    assert arr.shape == (1, 2, 2)
+    seeded = {"losses": [[0.9, 0.5]],
+              "losses_seeds": [[[0.9, 0.5], [0.7, 0.3]]]}
+    arr = stats.seed_curves(seeded)
+    assert arr.shape == (2, 1, 2)
+    assert arr[1, 0].tolist() == [0.7, 0.3]
+
+
+def _fake_seeded_job(n_seeds=5, ms=(1, 2, 4, 8), n_evals=10, seed=0):
+    """Synthetic job whose per-seed curves decay like a known cost law
+    cost(m) ~ 200/m + 5 + 2 m plus seed noise."""
+    rng = np.random.default_rng(seed)
+    ms = list(ms)
+    curves = np.empty((len(ms), n_seeds, n_evals))
+    for i, m in enumerate(ms):
+        speed = 1.0 / (200.0 / m + 5.0 + 2.0 * m)
+        t = np.arange(1, n_evals + 1)
+        for s in range(n_seeds):
+            curves[i, s] = np.exp(-8.0 * speed * t) \
+                + rng.normal(0, 0.002, n_evals)
+    return {"algorithm": "minibatch", "ms": ms, "iters": n_evals * 10,
+            "eval_every": 10, "n_seeds": n_seeds,
+            "losses": curves[:, 0].tolist(),
+            "losses_seeds": curves.tolist()}
+
+
+def test_epsilon_per_seed_matches_runner_policy():
+    from repro.experiments import runner
+    from repro.experiments.spec import EpsilonSpec
+    job = _fake_seeded_job()
+    eps_spec = EpsilonSpec(probe_m=2, frac=0.7)
+    eps = stats.epsilon_per_seed(job, probe_m=2, frac=0.7)
+    assert eps.shape == (5,)
+    # seed 0 reproduces the runner's scalar probe epsilon
+    assert eps[0] == pytest.approx(
+        runner._epsilon_from_probe(job, eps_spec))
+
+
+def test_curve_stats_and_bootstrap_determinism():
+    job = _fake_seeded_job()
+    cs1 = stats.curve_stats(job, rng_seed=3)
+    cs2 = stats.curve_stats(job, rng_seed=3)
+    assert cs1 == cs2
+    mean = np.asarray(cs1["mean"])
+    lo, hi = np.asarray(cs1["lo"]), np.asarray(cs1["hi"])
+    assert mean.shape == (4, 10)
+    assert (lo <= hi).all()
+    # CI of the mean brackets the mean itself
+    assert (lo <= mean + 1e-12).all() and (mean <= hi + 1e-12).all()
+
+
+def test_mmax_bootstrap_shapes_and_grid_membership():
+    job = _fake_seeded_job()
+    boot = stats.mmax_bootstrap(job, probe_m=2, frac=0.7)
+    assert boot["m_max"] in job["ms"]
+    assert boot["lo"] <= boot["median"] <= boot["hi"]
+    assert len(boot["per_seed"]) == 5
+    assert pytest.approx(sum(boot["distribution"].values())) == 1.0
+    assert boot == stats.mmax_bootstrap(job, probe_m=2, frac=0.7)
+
+
+# ---------------------------------------------------------------------------
+# fit: vectorized predictors pinned to the while-loop oracles
+# ---------------------------------------------------------------------------
+
+def _sync_loop(sigma, cost, m_cap=4096):
+    """The legacy while-loop (verbatim `SC.predict_sync_mmax` semantics)."""
+    m = 1
+    while m < m_cap and SC.predict_sync_gain_growth(m, sigma) > cost:
+        m += 1
+    return m
+
+
+def _dadm_loop(div, cost, m_cap=4096):
+    m = 1
+    while m < m_cap and div * (1.0 / m - 1.0 / (m + 1)) > cost:
+        m += 1
+    return m
+
+
+def test_sync_mmax_matches_loop_oracle():
+    for sigma in (0.0, 0.01, 0.2, 1.0, 5.0, 40.0, 1e4):
+        for cost in (1e-3, 1e-2, 0.5):
+            assert fit.sync_mmax(sigma, cost) == _sync_loop(sigma, cost), \
+                (sigma, cost)
+
+
+def test_dadm_mmax_matches_loop_oracle():
+    for div in (0.0, 0.05, 0.3, 1.0):
+        for cost in (1e-3, 1e-2):
+            assert fit.dadm_mmax(div, cost) == _dadm_loop(div, cost)
+
+
+@pytest.mark.parametrize("maker,kw", [
+    (synth.make_higgs_like, {"n": 300, "d": 28}),
+    (synth.make_realsim_like, {"n": 300, "d": 200, "density": 0.05}),
+    (synth.make_upper_bound_dataset, {"n": 300, "d": 100, "density": 0.7}),
+])
+def test_dataset_predictors_match_scalability_oracles(maker, kw):
+    X = maker(KEY, **kw).X
+    assert fit.predict_hogwild_mmax(X) == SC.predict_hogwild_mmax(X)
+    assert fit.predict_sync_mmax(X) == SC.predict_sync_mmax(X)
+    assert fit.predict_dadm_mmax(X) == SC.predict_dadm_mmax(X)
+
+
+def test_advisor_uses_vectorized_search_same_answers():
+    """The advisor's predicted m_max must equal the legacy while-loop's
+    answer (regression pin for the vectorized argmin)."""
+    adv = ScalabilityAdvisor()
+    g1 = {"w": jnp.array([0.0, 1.0, 0.0, 0.0])}
+    g2 = {"w": jnp.array([0.0, 0.9, 0.0, 0.0])}
+    rep = adv.from_grads([g1, g2])
+    sigma = rep["grad_noise_scale"] ** 0.5
+    m = 1
+    while m < 4096 and SC.predict_sync_gain_growth(m, sigma) > \
+            adv.parallel_cost:
+        m += 1
+    assert rep["predicted_m_max_sync"] == m
+    X = synth.make_higgs_like(KEY, n=200, d=16).X
+    ds_rep = adv.from_dataset(X, tau_max=4, batch_size=4)
+    assert ds_rep["sync"] == SC.predict_sync_mmax(X)
+    assert ds_rep["hogwild"] == SC.predict_hogwild_mmax(X)
+    assert ds_rep["dadm"] == SC.predict_dadm_mmax(X)
+
+
+# ---------------------------------------------------------------------------
+# fit: the Thm-2 cost law
+# ---------------------------------------------------------------------------
+
+def test_fit_cost_curve_recovers_known_law():
+    ms = [1, 2, 4, 8, 16, 32]
+    A, B, C = 200.0, 5.0, 2.0
+    costs = [A / m + B + C * m for m in ms]
+    out = fit.fit_cost_curve(ms, costs)
+    assert out["A"] == pytest.approx(A, rel=1e-6)
+    assert out["B"] == pytest.approx(B, rel=1e-5, abs=1e-5)
+    assert out["C"] == pytest.approx(C, rel=1e-6)
+    assert out["r2"] == pytest.approx(1.0)
+    assert out["m_star"] == pytest.approx(math.sqrt(A / C))
+    # paper parameterization t/m = (1/m + a + b m) c
+    assert out["c"] == pytest.approx(A)
+    assert out["a"] == pytest.approx(B / A)
+    assert out["b"] == pytest.approx(C / A)
+    # fitted_m_max: largest m still beating the fitted 1-worker cost,
+    # same contiguous-scan semantics as the theory-side predictors
+    # (scan with the *fitted* coefficients: the true ones put m=100 on an
+    # exact cost(m) == cost(1) tie, where lstsq epsilon decides the side)
+    fA, fB, fC = out["A"], out["B"], out["C"]
+    c1 = fA + fB + fC
+    m, m_max = 2, 1
+    while m <= fit.M_CAP and fA / m + fB + fC * m < c1:
+        m_max, m = m, m + 1
+    assert out["fitted_m_max"] == m_max
+    assert out["fitted_m_max"] in (99, 100)   # the analytic neighborhood
+
+
+def test_fit_cost_curve_monotone_decreasing_is_uncapped():
+    ms = [1, 2, 4, 8]
+    out = fit.fit_cost_curve(ms, [100.0 / m for m in ms])
+    assert out["fitted_m_max"] == fit.M_CAP
+    assert out["m_star"] == math.inf
+
+
+def test_fit_job_bootstrap_brackets_point_fit():
+    job = _fake_seeded_job()
+    out = fit.fit_job(job, probe_m=2, frac=0.7)
+    assert out["fitted_m_max_lo"] <= out["fitted_m_max_hi"]
+    assert out["n_seeds"] == 5
+    assert out == fit.fit_job(job, probe_m=2, frac=0.7)  # deterministic
+
+
+# ---------------------------------------------------------------------------
+# characters -> m_max regression
+# ---------------------------------------------------------------------------
+
+def test_characters_regression_recovers_planted_signs():
+    rng = np.random.default_rng(0)
+    points = []
+    for _ in range(40):
+        var = 10.0 ** rng.uniform(-1, 1)
+        sp = rng.uniform(0.0, 0.9)
+        div = rng.uniform(0.1, 1.0)
+        log2_m = 1.0 + 0.8 * math.log10(var) - 1.5 * sp + 2.0 * div \
+            + rng.normal(0, 0.05)
+        points.append({"characters": {"mean_feature_variance": var,
+                                      "sparsity": sp,
+                                      "diversity_ratio": div},
+                       "m_max": max(1, round(2.0 ** log2_m))})
+    reg = fit.characters_regression(points)
+    assert reg["r2"] > 0.8
+    assert reg["coef"]["log10_variance"] > 0
+    assert reg["coef"]["sparsity"] < 0
+    assert reg["coef"]["diversity_ratio"] > 0
+    assert fit.characters_regression(points[:3]) is None  # too few
+
+
+def test_collect_character_points_prefers_bootstrap_for_seeded_jobs():
+    job = _fake_seeded_job()
+    job.update(dataset="d0", measured_m_max=job["ms"][0], epsilon=0.5)
+    result = {"name": "t", "spec": {"epsilon": {"probe_m": 2, "frac": 0.7}},
+              "datasets": {"d0": {"characters": {
+                  "mean_feature_variance": 1.0, "sparsity": 0.1,
+                  "diversity_ratio": 1.0}}},
+              "jobs": {"minibatch/d0": job}}
+    pts = fit.collect_character_points([result])
+    assert len(pts) == 1
+    boot = stats.mmax_bootstrap(job, probe_m=2, frac=0.7)
+    assert pts[0]["m_max"] == boot["m_max"]
+
+
+# ---------------------------------------------------------------------------
+# report CLI end to end (tiny scale; the acceptance path)
+# ---------------------------------------------------------------------------
+
+def test_report_cli_quick(tmp_path, capsys):
+    from repro.analysis import report
+    out = tmp_path / "report.md"
+    rc = report.main(["--quick", "--iters", "40", "--n", "120",
+                      "--seeds", "2", "--cache-dir", str(tmp_path / "cache"),
+                      "--out", str(out)])
+    assert rc == 0
+    md = out.read_text()
+    # section 1: bootstrap-CI Table II
+    assert "Table II" in md
+    assert "measured m_max [CI]" in md
+    assert "hogwild/ub" in md and "minibatch/dense" in md
+    # curves with error bars: sparklines + inline SVG band
+    assert "&#177;" in md
+    assert "<svg" in md and "bootstrap CI" in md
+    # section 2: fitted-vs-predicted from the character_surface spec
+    assert "character_surface" in md
+    assert "fitted m_max [CI]" in md and "predicted" in md
+    # section 3: the regression across cached sweeps
+    assert "m_max regression" in md
+    assert "log10_variance" in md
+    stdout = capsys.readouterr().out
+    assert "wrote" in stdout
+    # re-render is pure formatting: both sweeps come from the cache
+    rc = report.main(["--quick", "--iters", "40", "--n", "120",
+                      "--seeds", "2", "--cache-dir", str(tmp_path / "cache"),
+                      "--out", str(out)])
+    assert rc == 0
+    assert "(cache)" in capsys.readouterr().out

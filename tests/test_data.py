@@ -143,6 +143,31 @@ def test_heavy_tailed_has_heavier_tails_than_uniform():
 
 def test_generator_registry_is_the_spec_surface():
     for name in ("higgs_like", "realsim_like", "ls_sequence", "upper_bound",
-                 "one_sample", "label_noise", "heavy_tailed"):
+                 "one_sample", "label_noise", "heavy_tailed",
+                 "character_knob"):
         assert name in synth.GENERATORS
     assert synth.get_generator("higgs_like") is synth.make_higgs_like
+
+
+def test_character_knob_maps_knobs_to_characters():
+    """Each knob hits exactly its §IV character: variance -> measured
+    feature variance, density -> 1 - sparsity, duplication ->
+    diversity_ratio (the character_surface spec depends on this)."""
+    for target in (0.25, 1.0, 4.0):
+        ds = synth.make_character_knob(KEY, n=3000, d=32, variance=target)
+        assert MX.mean_feature_variance(ds.X) == pytest.approx(target,
+                                                               rel=0.1)
+    ds = synth.make_character_knob(KEY, n=2000, d=32, density=0.3)
+    assert MX.sparsity(ds.X) == pytest.approx(0.7, abs=0.03)
+    # the knobs are independent: the density mask must NOT deflate the
+    # measured variance (the span compensates by 1/sqrt(density))
+    assert MX.mean_feature_variance(ds.X) == pytest.approx(1.0, rel=0.1)
+    ds = synth.make_character_knob(KEY, n=1000, d=32, duplication=0.75)
+    assert MX.diversity_ratio(ds.X) == pytest.approx(0.25, abs=0.01)
+    # duplicated rows are literal copies of the retained head
+    X = np.asarray(ds.X)
+    np.testing.assert_array_equal(X[250:500], X[:250])
+    with pytest.raises(ValueError):
+        synth.make_character_knob(KEY, duplication=1.0)
+    with pytest.raises(ValueError):
+        synth.make_character_knob(KEY, density=0.0)

@@ -155,6 +155,116 @@ def test_engine_rejects_unknown_algorithm():
 
 
 # ---------------------------------------------------------------------------
+# engine: the seed axis (ENGINE_VERSION 4)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm", ["minibatch", "ecd_psgd", "dadm",
+                                       "hogwild"])
+def test_seeded_seed0_matches_single_seed_grid(algorithm):
+    """Acceptance: an n_seeds=1 sweep is the ENGINE_VERSION-3 grid, and the
+    seed-0 rows of a replicated sweep reproduce it at 1e-5."""
+    ds = synth.make_higgs_like(KEY, n=160, d=10)
+    tr, te = ds.split(key=KEY)
+    kw = dict(iters=60, eval_every=20)
+    single = engine.run_algorithm_sweep(algorithm, tr, te, [1, 2, 4], **kw)
+    seeded = engine.run_algorithm_sweep(algorithm, tr, te, [1, 2, 4],
+                                        n_seeds=3, **kw)
+    assert single["n_seeds"] == 1 and "losses_seeds" not in single
+    assert seeded["n_seeds"] == 3
+    np.testing.assert_allclose(seeded["losses"], single["losses"],
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(
+        [row[0] for row in seeded["losses_seeds"]], single["losses"],
+        rtol=1e-5, atol=1e-7)
+
+
+def test_seeded_replicates_match_independent_keyed_runs():
+    """Seed s of the vmapped batch must equal a fresh single-seed sweep
+    keyed with fold_in(key, s) — replicates are real independent draws,
+    and growing n_seeds only appends."""
+    ds = synth.make_higgs_like(KEY, n=160, d=10)
+    tr, te = ds.split(key=KEY)
+    kw = dict(iters=60, eval_every=20)
+    seeded = engine.sweep("minibatch", tr, te, [1, 2, 4], n_seeds=3, **kw)
+    for s in (1, 2):
+        solo = engine.sweep("minibatch", tr, te, [1, 2, 4],
+                            key=jax.random.fold_in(KEY, s), **kw)
+        np.testing.assert_allclose(
+            [row[s] for row in seeded["losses_seeds"]], solo["losses"],
+            rtol=2e-4, atol=2e-5)
+
+
+def test_seeded_grid_compiles_once_per_bucket():
+    """Acceptance: n_seeds=8 runs as ONE vmapped trace — the jit count
+    equals the bucket count, exactly as for a single seed."""
+    ds = synth.make_higgs_like(KEY, n=120, d=8)
+    tr, te = ds.split(key=KEY)
+    kw = dict(iters=40, eval_every=20)
+    ms = [1, 2, 4, 8]                     # 2 buckets under MAX_PAD_RATIO=2
+    j0 = engine.JIT_CALLS
+    engine.sweep("minibatch", tr, te, ms, n_seeds=1, **kw)
+    single = engine.JIT_CALLS - j0
+    j0 = engine.JIT_CALLS
+    engine.sweep("minibatch", tr, te, ms, n_seeds=8, **kw)
+    assert engine.JIT_CALLS - j0 == single == 2
+    j0 = engine.JIT_CALLS
+    engine.sweep("hogwild", tr, te, ms, n_seeds=8, **kw)   # force_flat
+    assert engine.JIT_CALLS - j0 == 1
+
+
+def test_seeded_sequential_equals_vmapped():
+    ds = synth.make_higgs_like(KEY, n=120, d=8)
+    tr, te = ds.split(key=KEY)
+    kw = dict(iters=40, eval_every=20, n_seeds=3)
+    v = engine.sweep("minibatch", tr, te, [1, 2, 4], use_vmap=True, **kw)
+    s = engine.sweep("minibatch", tr, te, [1, 2, 4], use_vmap=False, **kw)
+    np.testing.assert_allclose(v["losses_seeds"], s["losses_seeds"],
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_spec_n_seeds_validation_and_fingerprint():
+    base = tiny_spec()
+    import dataclasses
+    seeded = dataclasses.replace(base, n_seeds=4).validate()
+    assert fingerprint(seeded) != fingerprint(base)   # cache key covers it
+    with pytest.raises(ValueError):
+        dataclasses.replace(base, n_seeds=0).validate()
+    with pytest.raises(ValueError):
+        engine.sweep("minibatch", None, None, [1], iters=20, eval_every=20,
+                     n_seeds=0)
+    # registry-level seeds override
+    from repro.experiments import registry
+    assert registry.get_spec("upper_bound", quick=True, seeds=5).n_seeds == 5
+    # character_surface must measure §IV characters on EVERY row —
+    # character_knob tiles duplicates after the unique head, so a capped
+    # summary would misreport diversity to the m_max regression
+    surf = registry.get_spec("character_surface", quick=True)
+    assert surf.characters_rows == \
+        surf.datasets[next(iter(surf.datasets))].kwargs["n"]
+
+
+def test_runner_seeded_result_block(tmp_path):
+    import dataclasses
+    spec = dataclasses.replace(
+        tiny_spec(name="tiny_seeded", algorithms=("minibatch", "hogwild"),
+                  epsilon=EpsilonSpec(probe_m=2, frac=0.5)),
+        n_seeds=3).validate()
+    res = run_sweep(spec, cache_dir=str(tmp_path))
+    for jr in res["jobs"].values():
+        assert jr["n_seeds"] == 3
+        block = np.asarray(jr["losses_seeds"])
+        assert block.shape == (len(spec.ms), 3, 60 // 20)
+        np.testing.assert_array_equal(block[:, 0], jr["losses"])
+        # scalar readouts stay seed-0 / legacy-keyed
+        assert jr["measured_m_max"] in spec.ms
+    # the artifact round-trips the seed block through the cache
+    hit = run_sweep(spec, cache_dir=str(tmp_path))
+    assert hit["cache"]["hit"] is True
+    assert hit["jobs"]["minibatch/d0"]["losses_seeds"] == \
+        res["jobs"]["minibatch/d0"]["losses_seeds"]
+
+
+# ---------------------------------------------------------------------------
 # runner: epsilon/cost readout, predictions, caching
 # ---------------------------------------------------------------------------
 
