@@ -9,7 +9,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys; sys.path.insert(0, "src")
 import jax, jax.numpy as jnp
 from repro.configs.registry import get_arch
-from repro.launch.mesh import make_debug_mesh
+from repro.distributed import make_debug_mesh
 from repro.train.steps import make_gossip_step, init_gossip_state
 
 mesh = make_debug_mesh(data=4, model=2)

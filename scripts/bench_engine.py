@@ -1,17 +1,31 @@
 #!/usr/bin/env python
-"""Engine wall-clock benchmark — emits BENCH_4.json (perf-trajectory anchor).
+"""Engine wall-clock benchmark — emits BENCH_5.json (perf-trajectory anchor).
 
-ENGINE_VERSION 4 adds the seed axis: `sweep(..., n_seeds=k)` replicates
-every grid member over k independent draw sequences vmapped *inside* the
-same single trace.  The claims to verify are (a) the seed batch costs no
-extra compiles — `engine.JIT_CALLS` stays at 1 per algorithm on a flat
-grid whether n_seeds is 1 or 8 — and (b) the vmapped seed batch beats
-re-running the sweep once per seed (which pays the compile + dispatch
-chain k times).  The **seed_axis** section measures exactly that:
-seeds x m grid wall-clock, vmapped vs looped, with measured compile
-counts.  The ENGINE_VERSION-3 sections are retained unchanged (the
-single-seed path is bit-identical, so they double as a no-regression
-check against BENCH_3, embedded for comparison).
+ENGINE_VERSION 5 adds device-mesh sharded execution (`repro.distributed`):
+each bucket's batched (m-grid x seed) simulation can be laid over every
+available XLA device with mesh-invariant results.  The **distributed**
+section measures the claims: the full engine_default sweep on 1 vs N
+forced host devices (each count in its own subprocess — XLA locks the
+device count at first init), the jit compile count per mesh size (must
+stay 1 per bucket: sharding reuses the same jitted vmap, it never
+re-traces per device), and the racing-mode sharded Hogwild!
+(`repro.distributed.hogwild_shards`) against the sequential staleness
+oracle at the same server-iteration budget.  Host-device CPU sharding
+is real parallelism (one XLA executable slice per device) but only up
+to the physical core count, and a single-device run already uses every
+core through intra-op threads — so on this 2-core reference container
+the expected sharded wall-clock is ~parity, and the stable measured
+claims are the structural ones: compile count identical on every mesh
+size, results mesh-invariant (the distributed config note records the
+full reasoning).
+
+ENGINE_VERSION 4's seed axis claims are retained: (a) the seed batch
+costs no extra compiles — `engine.JIT_CALLS` stays at 1 per algorithm on
+a flat grid whether n_seeds is 1 or 8 — and (b) the vmapped seed batch
+beats re-running the sweep once per seed.  The **seed_axis** section
+measures exactly that; the older sections are retained unchanged (the
+single-seed single-device path is bit-identical, so they double as a
+no-regression check against BENCH_4, embedded for comparison).
 
 Three measurements, chosen to isolate what the ENGINE_VERSION-2 rewrite
 changed relative to PR 1 (all still tracked):
@@ -47,10 +61,12 @@ changed relative to PR 1 (all still tracked):
    crossover honestly.
 
 jit caches are cleared between configurations so every timing includes
-its own compiles, as a cold run would.  Results land in BENCH_4.json at
+its own compiles, as a cold run would.  Results land in BENCH_5.json at
 the repo root so the perf trajectory is tracked from this PR onward.
 
 Usage:  PYTHONPATH=src python scripts/bench_engine.py [--quick]
+        (--dist-worker N is internal: re-entered in a subprocess with N
+        forced host devices for the distributed section)
 """
 
 from __future__ import annotations
@@ -58,6 +74,8 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
+import sys
 import tempfile
 import time
 
@@ -158,6 +176,127 @@ def time_seed_axis(tr, te, ms, iters, eval_every, n_seeds):
     return out
 
 
+def dist_worker(args) -> int:
+    """Subprocess body for the distributed section: time the full
+    engine_default sweep and the racing Hogwild! under THIS process's
+    forced device count, print one JSON line.  Runs after the parent set
+    XLA_FLAGS, so jax sees exactly --dist-worker devices."""
+    from repro.core.algorithms import run_hogwild
+    from repro.distributed import (get_mesh, hogwild_shards,
+                                   run_hogwild_sharded)
+
+    dmesh = get_mesh()
+    assert dmesh.n_devices == args.dist_worker, (
+        f"XLA gave {dmesh.n_devices} devices, wanted {args.dist_worker}")
+    ds = synth.make_higgs_like(jax.random.PRNGKey(0), n=args.n, d=args.d)
+    tr, te = ds.split(key=jax.random.PRNGKey(0))
+    ms = list(range(1, args.m_max + 1))
+
+    jax.clear_caches()
+    jits0 = engine.JIT_CALLS
+    t0 = time.perf_counter()
+    for algo in ALGOS:
+        engine.run_algorithm_sweep(algo, tr, te, ms, iters=args.iters,
+                                   eval_every=args.eval_every, mesh=dmesh)
+    sweep_s = time.perf_counter() - t0
+    compiles = engine.JIT_CALLS - jits0
+
+    # the compute-dominated regime: wide features (d=400) make per-step
+    # FLOPs dominate the scan's fixed per-iteration overhead, which is
+    # what sharding can actually divide — the fine d=28 grid above is
+    # overhead-bound (same 4000-step scan on every device) and is
+    # expected NOT to speed up; this one is
+    wide_iters = max(300, args.iters // 2)
+    wide = synth.make_realsim_like(jax.random.PRNGKey(1), n=800, d=400,
+                                   density=0.05)
+    trw, tew = wide.split(key=jax.random.PRNGKey(1))
+    jax.clear_caches()
+    jits0 = engine.JIT_CALLS
+    t0 = time.perf_counter()
+    for algo in ALGOS:
+        engine.run_algorithm_sweep(algo, trw, tew, ms, iters=wide_iters,
+                                   eval_every=wide_iters // 5, mesh=dmesh)
+    wide_s = time.perf_counter() - t0
+    wide_compiles = engine.JIT_CALLS - jits0
+
+    # racing Hogwild! throughput: m workers over the mesh vs the
+    # sequential staleness oracle at the same server-iteration budget
+    m = min(8, args.m_max)
+    ev = m * max(1, args.eval_every // m)
+    race_kw = dict(m=m, iters=args.iters, gamma=0.05, eval_every=ev)
+    jax.clear_caches()
+    race_jits0 = hogwild_shards.JIT_CALLS
+    t0 = time.perf_counter()
+    run_hogwild_sharded(tr, te, mesh=dmesh, **race_kw)
+    race_s = time.perf_counter() - t0
+    race_compiles = hogwild_shards.JIT_CALLS - race_jits0
+    jax.clear_caches()
+    t0 = time.perf_counter()
+    run_hogwild(tr, te, **race_kw)
+    oracle_s = time.perf_counter() - t0
+
+    print(json.dumps({
+        "devices": dmesh.n_devices,
+        "engine_default_s": sweep_s,
+        "jit_compiles": compiles,
+        "wide_compute": {"n": 800, "d": 400, "iters": wide_iters,
+                         "wall_clock_s": wide_s,
+                         "jit_compiles": wide_compiles},
+        "hogwild_race": {"m": m, "iters": args.iters, "race_s": race_s,
+                         "jit_compiles": race_compiles,
+                         "sequential_oracle_s": oracle_s,
+                         "throughput_vs_oracle":
+                             oracle_s / max(race_s, 1e-9)},
+    }))
+    return 0
+
+
+def time_distributed(args, device_counts=(1, 8), repeats=2):
+    """Spawn one subprocess per mesh size (the device count is locked at
+    first jax init, so 1-vs-N cannot share a process).  Each mesh size
+    runs ``repeats`` times and keeps the per-metric minimum — shared
+    containers show large run-to-run noise, and the minimum is the least
+    contaminated estimate of what the configuration can do."""
+    out = {}
+    for ndev in device_counts:
+        env = {**os.environ,
+               "XLA_FLAGS": f"--xla_force_host_platform_device_count={ndev}",
+               "PYTHONPATH": "src" + (
+                   os.pathsep + os.environ["PYTHONPATH"]
+                   if os.environ.get("PYTHONPATH") else "")}
+        cmd = [sys.executable, os.path.abspath(__file__),
+               "--dist-worker", str(ndev),
+               "--n", str(args.n), "--d", str(args.d),
+               "--iters", str(args.iters),
+               "--eval-every", str(args.eval_every),
+               "--m-max", str(args.m_max)]
+        best = None
+        for _ in range(repeats):
+            r = subprocess.run(cmd, cwd=ROOT, env=env, capture_output=True,
+                               text=True, timeout=1800)
+            if r.returncode != 0:
+                raise RuntimeError(f"dist worker ({ndev} devices) failed:\n"
+                                   f"{r.stderr[-2000:]}")
+            j = json.loads(r.stdout.strip().splitlines()[-1])
+            if best is None:
+                best = j
+            else:
+                best["engine_default_s"] = min(best["engine_default_s"],
+                                               j["engine_default_s"])
+                best["wide_compute"]["wall_clock_s"] = min(
+                    best["wide_compute"]["wall_clock_s"],
+                    j["wide_compute"]["wall_clock_s"])
+                hb, hj = best["hogwild_race"], j["hogwild_race"]
+                hb["race_s"] = min(hb["race_s"], hj["race_s"])
+                hb["sequential_oracle_s"] = min(hb["sequential_oracle_s"],
+                                                hj["sequential_oracle_s"])
+                hb["throughput_vs_oracle"] = (
+                    hb["sequential_oracle_s"] / max(hb["race_s"], 1e-9))
+        best["repeats"] = repeats
+        out[f"devices_{ndev}"] = best
+    return out
+
+
 def time_cache_roundtrip(ms, iters, eval_every, n, d):
     """Fresh vs cached `run_sweep` through the artifact cache."""
     spec = SweepSpec(
@@ -188,18 +327,23 @@ def main(argv=None):
                    help="small sizes for a fast smoke of the bench itself")
     p.add_argument("--seeds", type=int, default=8,
                    help="seed replicates for the seed_axis section")
+    p.add_argument("--dist-worker", type=int, default=None,
+                   help="internal: run the distributed-section worker "
+                        "under this forced host device count and exit")
     p.add_argument("--out", default=None,
-                   help="output path (default: BENCH_4.json at the repo "
+                   help="output path (default: BENCH_5.json at the repo "
                         "root; quick mode defaults elsewhere so a smoke "
                         "never overwrites the committed perf anchor)")
     args = p.parse_args(argv)
+    if args.dist_worker is not None:
+        return dist_worker(args)
     if args.quick:
         args.n, args.d, args.iters, args.eval_every = 300, 12, 400, 100
         args.m_max = 8
         args.seeds = min(args.seeds, 4)
     if args.out is None:
-        args.out = (os.path.join(tempfile.gettempdir(), "BENCH_4.quick.json")
-                    if args.quick else os.path.join(ROOT, "BENCH_4.json"))
+        args.out = (os.path.join(tempfile.gettempdir(), "BENCH_5.quick.json")
+                    if args.quick else os.path.join(ROOT, "BENCH_5.json"))
     ms = list(range(1, args.m_max + 1))
 
     ds = synth.make_higgs_like(jax.random.PRNGKey(0), n=args.n, d=args.d)
@@ -251,19 +395,43 @@ def main(argv=None):
     print(f"{'cache fresh':>15}: {fresh:7.2f} s")
     print(f"{'cache hit':>15}: {cached:7.2f} s")
 
+    # mesh sizes: 1, the physical core count (the only mesh that can win
+    # on CPU — intra-op parallelism can't cross scan iterations, device
+    # sharding of the element axis can), and 8 (CI's forced-device size;
+    # oversubscribed when cores < 8, measuring the invariance-tool regime)
+    counts = ((1, 8) if args.quick
+              else tuple(sorted({1, os.cpu_count() or 1, 8})))
+    dist = time_distributed(args, device_counts=counts)
+    d1 = dist["devices_1"]
+    for key in sorted(dist):
+        e = dist[key]
+        print(f"{key:>15}: fine {e['engine_default_s']:6.2f} s  wide "
+              f"{e['wide_compute']['wall_clock_s']:6.2f} s "
+              f"({e['jit_compiles']} compiles)  hogwild race "
+              f"{e['hogwild_race']['race_s']:6.2f} s "
+              f"({e['hogwild_race']['throughput_vs_oracle']:.2f}x oracle)")
+    dist_summary = {
+        key: {"speedup_fine_vs_1dev": d1["engine_default_s"]
+              / max(dist[key]["engine_default_s"], 1e-9),
+              "speedup_wide_vs_1dev":
+                  d1["wide_compute"]["wall_clock_s"]
+                  / max(dist[key]["wide_compute"]["wall_clock_s"], 1e-9),
+              "jit_compiles": dist[key]["jit_compiles"]}
+        for key in dist}
+
     speedup = (timings["pr1"] + chars_ref) / (timings["engine_default"]
                                               + chars_fused)
-    # embed the PR-3 anchor for the within-noise comparison, if present
-    # (the single-seed path is bit-identical to ENGINE_VERSION 3)
-    vs_bench3 = None
-    b3_path = os.path.join(ROOT, "BENCH_3.json")
-    if not args.quick and os.path.exists(b3_path):
-        with open(b3_path) as f:
-            b3 = json.load(f)["main"]["wall_clock_s"]
-        vs_bench3 = {
-            "bench3_wall_clock_s": b3,
+    # embed the PR-4 anchor for the within-noise comparison, if present
+    # (the single-seed single-device path is bit-identical)
+    vs_bench4 = None
+    b4_path = os.path.join(ROOT, "BENCH_4.json")
+    if not args.quick and os.path.exists(b4_path):
+        with open(b4_path) as f:
+            b4 = json.load(f)["main"]["wall_clock_s"]
+        vs_bench4 = {
+            "bench4_wall_clock_s": b4,
             "ratio_engine_default": timings["engine_default"]
-            / max(b3["engine_default"], 1e-9),
+            / max(b4["engine_default"], 1e-9),
         }
 
     payload = {
@@ -299,9 +467,36 @@ def main(argv=None):
                        "iters": args.iters, "bucketed": False},
             "results": seed_axis,
         },
+        "distributed": {
+            "config": {"dataset": "higgs_like", "n": args.n, "d": args.d,
+                       "iters": args.iters, "ms": f"1..{args.m_max}",
+                       "host_cores": os.cpu_count(),
+                       "note": "forced host CPU devices, cold subprocess "
+                               "per mesh size, min over repeats. "
+                               "engine_default = fine d=28 grid, "
+                               "wide_compute = d=400 grid (per-step "
+                               "FLOPs dominate). Sharding divides the "
+                               "element axis that intra-op threads "
+                               "cannot (whole per-element scans run "
+                               "concurrently), so speedup needs devices "
+                               "<= physical cores AND compute-dominated "
+                               "elements; this container has 2 shared "
+                               "cores, where a 1-device run already "
+                               "saturates memory bandwidth + both cores "
+                               "via intra-op threads, so measured "
+                               "sharding speedups are ~parity and noisy "
+                               "(the mesh's value here is the "
+                               "invariance contract + CI correctness; "
+                               "real multi-chip meshes hit the same "
+                               "code path).  Compile counts must stay "
+                               "equal across mesh sizes: 1 jit per "
+                               "bucket per mesh, sharded or not."},
+            "per_mesh": dist,
+            "summary": dist_summary,
+        },
         "cache_roundtrip_s": {"fresh": fresh, "cached": cached,
                               "speedup": fresh / max(cached, 1e-9)},
-        "vs_bench3": vs_bench3,
+        "vs_bench4": vs_bench4,
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)

@@ -8,6 +8,10 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# report the device mesh this smoke runs on (CI's smoke-mesh8 job forces
+# 8 host devices via XLA_FLAGS; sweeps then take the sharded engine path)
+python -c "from repro.distributed import get_mesh; print(get_mesh().describe())"
+
 echo "== [1/5] test suite (quick loop: -m 'not slow') =="
 # The full tier-1 suite (ROADMAP.md) is `python -m pytest -x -q` with no
 # marker filter; the smoke loop skips @pytest.mark.slow sweep/subprocess

@@ -4,9 +4,11 @@ JAX/Pallas system.  `core` holds the paper's substance (dataset-character
 metrics, the four parallel training algorithms, scalability theory, the
 advisor); `experiments` is the unified sweep engine that reproduces every
 figure/table; `analysis` turns seed-replicated sweeps into statistics
-(bootstrap CIs, scaling-law fits, the paper report CLI); `data`
+(bootstrap CIs, scaling-law fits, the paper report CLI); `distributed`
+shards sweep execution over a device mesh with mesh-invariant results
+and carries the model stack's FSDP/TP partition rules; `data`
 generates the Table-I synthetic datasets; `kernels`
 carries the Pallas hot loops with jnp oracles; `configs`/`models`/`optim`/
-`sharding`/`train`/`serve`/`launch` form the production-flavored model
+`train`/`serve`/`launch` form the production-flavored model
 stack the scalability analysis plugs into.  Start at README.md.
 """

@@ -17,6 +17,15 @@ as one ``jax.vmap`` (one trace, one compile) instead of re-jitting per m.
 
 Under the PCA, wall-time for m workers = t_single / m * n_iterations, so the
 figures report iterations (server) and iterations-per-worker (= cost).
+
+Since ENGINE_VERSION 5 this sequential recurrence is also the **parity
+oracle** for the true multi-device racing mode
+(`repro.distributed.hogwild_shards`): there the worker set is split into
+per-device shards under ``shard_map`` and the shards genuinely race on a
+donated shared parameter, reconciling their deltas every sync round.
+The oracle stays the cached, mesh-invariant default the engine sweeps;
+the race is the hardware-validation mode (:func:`run_hogwild_sharded`
+delegates; divergence regimes are documented in docs/distributed.md).
 """
 
 from __future__ import annotations
@@ -140,3 +149,12 @@ def run_hogwild(train, test, *, m=4, iters=4000, gamma=0.1, lam=LAMBDA,
         "x": x,
         "iters_per_worker": iters / m,
     }
+
+
+def run_hogwild_sharded(train, test, **kwargs):
+    """The real race: worker shards on a device mesh updating a donated
+    shared parameter (lazy delegate to `repro.distributed.hogwild_shards`
+    — `repro.core` stays importable without the distributed package's
+    mesh machinery; this recurrence here remains its parity oracle)."""
+    from repro.distributed.hogwild_shards import run_hogwild_sharded as fn
+    return fn(train, test, **kwargs)

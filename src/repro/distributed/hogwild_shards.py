@@ -1,0 +1,198 @@
+"""True multi-device Hogwild!: worker shards racing on a shared parameter.
+
+The engine's Hogwild! (`repro.core.algorithms.hogwild`) *emulates* the
+lock-free race as a sequential staleness recurrence — gradient ``j`` is
+computed against the model from iteration ``j - tau`` with ``tau``
+cycling over ``[1, m]`` (Thm 1).  That recurrence is the **parity
+oracle**: deterministic, single-device, and what every grid sweep and
+cache artifact is defined by.
+
+This module runs the race for real.  The ``m`` workers are split into
+``D`` shards (one per mesh device) under ``jax.experimental.shard_map``;
+each shard races ahead on its own copy of the parameter vector — its
+local workers apply full-step SGD updates sequentially, *reading*
+whatever their shard's copy currently holds — and every ``sync_every``
+rounds the shards reconcile by **summing their deltas onto the shared
+parameter** (``x <- x_base + psum(x_local - x_base)``), i.e. every
+gradient lands with its full step exactly as Hogwild!'s writes do, but
+cross-shard reads are stale by up to ``sync_every * m`` server
+iterations.  The shared parameter buffer is donated
+(``donate_argnums``), so the reconciled model overwrites the stale one
+in place instead of allocating per sync.
+
+When it matches the oracle and when it diverges (docs/distributed.md):
+both apply every gradient at full step against a model that is at most
+O(m) iterations stale, so at small ``gamma * m`` the curves track within
+a loose tolerance (tested in tests/test_distributed.py).  They are NOT
+bit-comparable: the oracle's lag is exactly ``tau = (j % m) + 1`` while
+the race's lag depends on the shard layout — ``D = 1`` degenerates to
+fresh sequential SGD (no staleness at all), and large ``sync_every * m``
+or large ``gamma`` amplify the divergence the same way real Hogwild!
+degrades past the paper's ``m_max``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.algorithms.lr import LAMBDA, lr_grad, test_logloss
+from repro.distributed import mesh as mesh_mod
+
+#: compile counter for the sharded racing mode — `scripts/bench_engine.py
+#: dist_worker` snapshots it around the race timing (the engine's own
+#: `JIT_CALLS` only counts grid-path compiles)
+JIT_CALLS = 0
+
+
+def _build_race(X, y, Xte, yte, dmesh, *, w, gamma, lam, sync_every):
+    """jitted ``(x0, samples, mask) -> losses`` racing step pipeline.
+
+    ``samples``: (n_evals, rounds_per_eval, D, w) sample indices, worker
+    axis laid out over the mesh; ``mask``: (D, w) live-worker mask (0 for
+    the padding workers that round ``m`` up to a multiple of ``D``).
+    """
+    global JIT_CALLS
+    axis = mesh_mod.SHARD_AXIS
+
+    def shard_fn(x0, samples, mask):
+        samples = samples[:, :, 0, :]            # local view: (E, R, w)
+        mask = mask[0]                           # (w,)
+
+        def worker_step(x_loc, inp):
+            i, live = inp
+            g = lr_grad(x_loc, X[i], y[i], lam)
+            # the racing read: the gradient saw whatever this shard's
+            # copy held; the write lands at full step (masked if padded)
+            return x_loc - gamma * live * g, None
+
+        def reconcile(args):
+            # every shard's accumulated delta lands on the shared
+            # parameter (sum, not mean — all writes count)
+            x_base, x_loc = args
+            x_sync = x_base + jax.lax.psum(x_loc - x_base, axis)
+            return x_sync, x_sync
+
+        def round_step(carry, s_round):
+            x_base, x_loc, r = carry
+            x_loc, _ = jax.lax.scan(worker_step, x_loc, (s_round, mask))
+            # the round counter is replicated, so every shard takes the
+            # same branch and non-sync rounds pay NO collective — wider
+            # sync windows trade staleness for communication, which is
+            # the whole tradeoff this mode exists to measure
+            do = (r % sync_every) == (sync_every - 1)
+            x_base, x_loc = jax.lax.cond(do, reconcile,
+                                         lambda args: args,
+                                         (x_base, x_loc))
+            return (x_base, x_loc, r + 1), None
+
+        def eval_block(carry, samples_e):
+            carry, _ = jax.lax.scan(round_step, carry, samples_e)
+            x_base, x_loc, r = carry
+            # force a sync at the eval boundary: the evaluated model is
+            # the shared parameter, identical on every shard
+            x_sync, _ = reconcile((x_base, x_loc))
+            return ((x_sync, x_sync, r),
+                    test_logloss(x_sync, Xte, yte))
+
+        carry0 = (x0, x0, jnp.zeros((), jnp.int32))
+        (x, _, _), losses = jax.lax.scan(eval_block, carry0, samples)
+        return x, losses
+
+    mapped = shard_map(
+        shard_fn, mesh=dmesh.mesh,
+        in_specs=(P(), P(None, None, mesh_mod.SHARD_AXIS, None),
+                  P(mesh_mod.SHARD_AXIS, None)),
+        out_specs=(P(), P()), check_rep=False)
+    JIT_CALLS += 1
+    return jax.jit(mapped, donate_argnums=(0,))
+
+
+def run_hogwild_sharded(train, test, *, m: int = 8, iters: int = 4000,
+                        gamma: float = 0.1, lam: float = LAMBDA,
+                        eval_every: int = 100, key=None,
+                        mesh: mesh_mod.MeshLike = None,
+                        sync_every: int = 1) -> Dict:
+    """Race ``m`` workers over the mesh's devices; returns a curve dict.
+
+    Server-iteration accounting matches the oracle: ``iters`` total
+    gradient applications, a test-loss eval every ``eval_every`` of them
+    (``eval_every`` must be a multiple of ``m`` so eval points land on
+    round boundaries).  ``mesh`` resolves via `mesh.get_mesh` (auto =
+    every device); workers pad up to a multiple of the device count with
+    masked (inert) slots, so any ``m`` runs on any mesh.
+    """
+    dmesh = mesh_mod.get_mesh(mesh)
+    D = dmesh.n_devices
+    if eval_every % m:
+        raise ValueError(
+            f"eval_every={eval_every} must be a multiple of m={m}: the "
+            f"racing mode applies m gradients per round and evals on "
+            f"round boundaries")
+    key = key if key is not None else jax.random.PRNGKey(0)
+    n = train.X.shape[0]
+    w = -(-m // D)                       # workers per shard
+    m_eff = w * D
+    n_evals = iters // eval_every
+    rounds_per_eval = eval_every // m
+    # one sample per (round, worker slot); padded slots draw but never
+    # apply, keeping live workers' streams independent of the mesh size
+    samples = jax.random.randint(
+        key, (n_evals, rounds_per_eval, D, w), 0, n)
+    mask = (jnp.arange(m_eff) < m).astype(jnp.float32).reshape(D, w)
+
+    race = _build_race(train.X, train.y, test.X, test.y, dmesh,
+                       w=w, gamma=gamma, lam=lam, sync_every=sync_every)
+    x0 = jnp.zeros((train.X.shape[1],))
+    x, losses = race(x0, samples, mask)
+    return {
+        "algorithm": "hogwild_sharded",
+        "m": m,
+        "devices": D,
+        "sync_every": sync_every,
+        "iters": n_evals * eval_every,
+        "eval_every": eval_every,
+        "losses": jax.device_get(losses),
+        "x": x,
+        "iters_per_worker": iters / m,
+    }
+
+
+def sweep_hogwild_sharded(train, test, ms: Sequence[int], *, iters: int,
+                          eval_every: int, gamma: float = 0.1,
+                          lam: float = LAMBDA, key=None,
+                          mesh: mesh_mod.MeshLike = None,
+                          sync_every: int = 1) -> Dict:
+    """Racing-mode m-grid (Python loop per m — this mode parallelizes over
+    *devices*, not grid members; the engine's vmapped grid with the
+    staleness oracle remains the cached, mesh-invariant default).
+
+    Each m's eval cadence is aligned DOWN to its nearest round boundary
+    (``ev_m = m * (eval_every // m)``, at least one round) and its budget
+    to ``(iters // eval_every) * ev_m`` — so any grid runs, every row has
+    the same number of evals, and eval points sit within one round of
+    the requested cadence.
+    """
+    dmesh = mesh_mod.get_mesh(mesh)
+    n_evals = iters // eval_every
+    curves = []
+    for m in ms:
+        ev = int(m) * max(1, eval_every // int(m))
+        curves.append(run_hogwild_sharded(
+            train, test, m=int(m), iters=n_evals * ev, eval_every=ev,
+            gamma=gamma, lam=lam, key=key, mesh=dmesh,
+            sync_every=sync_every)["losses"])
+    return {
+        "algorithm": "hogwild_sharded",
+        "problem": "logistic",
+        "ms": [int(m) for m in ms],
+        "devices": dmesh.n_devices,
+        "iters": int(iters),
+        "eval_every": int(eval_every),
+        "n_seeds": 1,
+        "losses": [[float(v) for v in row] for row in curves],
+    }

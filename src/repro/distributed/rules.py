@@ -1,4 +1,11 @@
-"""Logical sharding rules -> jax.sharding.PartitionSpec.
+"""Logical sharding rules -> jax.sharding.PartitionSpec (model stack).
+
+These are the *model-stack* partition rules — FSDP/TP layouts for the
+production-flavored training/serving side (`repro.train.steps`,
+`repro.launch.dryrun`), folded into `repro.distributed` from the former
+``repro.sharding`` package.  The paper-side sweep engine shards
+differently: its batched simulations go through
+`repro.distributed.partition` over the 1-D sweep mesh.
 
 Layout (DESIGN.md §5):
   * FSDP:  params / optimizer state sharded over ('pod','data') on the

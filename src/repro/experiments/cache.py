@@ -6,6 +6,14 @@ dict plus ``ENGINE_VERSION``.  Any change to the spec (grid, iters, dataset
 kwargs, epsilon policy, ...) or to the engine version lands on a different
 file, so a hit is always safe to reuse and repeated sweeps are free.
 
+Artifacts are **mesh-independent**: the fingerprint strips execution-only
+spec fields (`spec.EXECUTION_ONLY_FIELDS`) and :func:`store` strips the
+volatile per-run keys (`VOLATILE_KEYS`: the ``cache`` hit info and the
+``execution`` mesh report the runner attaches) before writing — so a sweep
+computed on an 8-device mesh writes the same artifact, under the same key,
+as the single-device run, and either one serves the other's lookups
+(tested in tests/test_distributed.py).
+
 The default directory is ``results/sweep_cache`` (override with the
 ``REPRO_SWEEP_CACHE`` environment variable or the ``cache_dir`` argument).
 """
@@ -19,6 +27,10 @@ from typing import Dict, Optional
 
 DEFAULT_CACHE_DIR = os.environ.get(
     "REPRO_SWEEP_CACHE", os.path.join("results", "sweep_cache"))
+
+#: result keys describing one concrete run, not the computation — never
+#: persisted, re-attached fresh by the runner after every load/store
+VOLATILE_KEYS = ("cache", "execution")
 
 
 def artifact_path(cache_dir: str, name: str, fp: str) -> str:
@@ -39,10 +51,13 @@ def load(cache_dir: str, name: str, fp: str) -> Optional[Dict]:
 
 
 def store(cache_dir: str, name: str, fp: str, payload: Dict) -> str:
-    """Atomically write the payload; returns the artifact path."""
+    """Atomically write the payload; returns the artifact path.
+    Volatile per-run keys (`VOLATILE_KEYS`) are stripped so the artifact
+    bytes do not depend on which mesh computed them."""
     os.makedirs(cache_dir, exist_ok=True)
     path = artifact_path(cache_dir, name, fp)
-    payload = {**payload, "fingerprint": fp}
+    payload = {k: v for k, v in payload.items() if k not in VOLATILE_KEYS}
+    payload["fingerprint"] = fp
     fd, tmp = tempfile.mkstemp(dir=cache_dir, suffix=".tmp")
     try:
         with os.fdopen(fd, "w") as f:

@@ -52,10 +52,22 @@ per-seed draws are stacked, and the per-m simulation is ``jax.vmap``-ed
 over that stacked axis *inside* ``sim(m)``.  The m-grid vmap then wraps
 the seed vmap, so the whole (seeds x m) grid is still ONE trace and ONE
 compile per bucket — no per-seed recompiles (`scripts/bench_engine.py`
-measures this via `JIT_CALLS` in BENCH_4.json).  Results keep ``losses``
+measures this via `JIT_CALLS` in BENCH_5.json).  Results keep ``losses``
 as the seed-0 rows (every legacy consumer unchanged) and add
 ``losses_seeds`` — the full (S, n_seeds, n_evals) block `repro.analysis.
 stats` turns into mean/CI curves and bootstrap m_max distributions.
+
+**Device-mesh sharding** (ENGINE_VERSION 5): ``mesh=`` hands each
+bucket's batched simulation to `repro.distributed.partition`, which
+flattens the (members x seeds) cells into one element axis, pads it to
+the device count, and dispatches ONE jitted vmap whose inputs are laid
+over the mesh — XLA then splits the batch across devices.  Because the
+cells are independent, results are **mesh-invariant** (1e-5 contract,
+tests/test_distributed.py) and cache fingerprints exclude the mesh
+entirely.  ``mesh=None`` (every existing caller) and single-device
+meshes take the exact unsharded path below — the single-device fallback
+is bit-exact with ENGINE_VERSION 4.  The sequential reference path
+(``use_vmap=False``) never shards.
 """
 
 from __future__ import annotations
@@ -69,6 +81,8 @@ from repro.core import problems as problems_mod
 from repro.core.algorithms import base as alg_base
 from repro.core.algorithms import run_hogwild
 from repro.core.algorithms.lr import LAMBDA
+from repro.distributed import mesh as dist_mesh
+from repro.distributed import partition as dist_partition
 
 #: Pad-waste bound for `_buckets`: within a bucket, the padded worker axis
 #: is at most this multiple of the smallest member.
@@ -168,7 +182,8 @@ def sweep(algorithm: Union[str, alg_base.Algorithm], train, test,
           ms: Sequence[int], *, iters: int, eval_every: int,
           problem="logistic", lam: Optional[float] = None, key=None,
           use_vmap: bool = True, bucketed: Optional[bool] = None,
-          n_seeds: int = 1, **alg_kwargs) -> Dict:
+          n_seeds: int = 1, mesh: "dist_mesh.MeshLike" = None,
+          **alg_kwargs) -> Dict:
     """Run ``algorithm`` on ``problem`` over the worker grid ``ms``.
 
     ``algorithm`` is a registry name (instantiated with ``alg_kwargs``,
@@ -178,6 +193,12 @@ def sweep(algorithm: Union[str, alg_base.Algorithm], train, test,
     algorithm's declared padding policy.  ``n_seeds > 1`` replicates every
     grid member over that many independent draw sequences, vmapped inside
     the same trace (seed 0 == the single-seed run bit-exactly).
+
+    ``mesh`` shards each bucket's batched simulation over a device mesh
+    (`repro.distributed`): ``None`` keeps the unsharded path, an int /
+    ``"auto"`` / `DeviceMesh` resolves via `repro.distributed.get_mesh`.
+    Execution-only: results are mesh-invariant at 1e-5 and a
+    single-device mesh is bit-exact with ``mesh=None``.
     """
     if isinstance(algorithm, alg_base.Algorithm):
         if alg_kwargs:
@@ -203,9 +224,7 @@ def sweep(algorithm: Union[str, alg_base.Algorithm], train, test,
                          for s in range(1, n_seeds)]
     draws_by_seed = [alg.make_draws(k, n, iters, m_top) for k in seed_keys]
 
-    def make_sim(m_pad):
-        subs = [alg.slice_draws(d, m_pad) for d in draws_by_seed]
-
+    def make_sim_with(m_pad):
         def sim_with(sub):
             def sim(m):
                 ctx = alg_base.SimContext(m, m_pad)
@@ -229,6 +248,12 @@ def sweep(algorithm: Union[str, alg_base.Algorithm], train, test,
 
             return sim
 
+        return sim_with
+
+    def make_sim(m_pad):
+        sim_with = make_sim_with(m_pad)
+        subs = [alg.slice_draws(d, m_pad) for d in draws_by_seed]
+
         if n_seeds == 1:
             return sim_with(subs[0])       # the exact ENGINE_VERSION-3 path
 
@@ -242,34 +267,58 @@ def sweep(algorithm: Union[str, alg_base.Algorithm], train, test,
 
         return sim_seeded
 
+    def make_sim_elem(m_pad):
+        # distributed twin of `make_sim`: one simulation per (m, seed)
+        # cell, with the seed's draws gathered by the traced index — the
+        # partitioner vmaps this over a flat element axis laid across the
+        # mesh, so the seed axis shards exactly like the grid axis
+        sim_with = make_sim_with(m_pad)
+        subs = [alg.slice_draws(d, m_pad) for d in draws_by_seed]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *subs)
+
+        def sim_elem(m, s):
+            sub = jax.tree.map(lambda a: a[s], stacked)
+            return sim_with(sub)(m)
+
+        return sim_elem
+
     if bucketed is None:
         bucketed = alg.bucketed_default
     if alg.force_flat:
         bucketed = False
-    losses = _run_grid(make_sim, ms, use_vmap, bucketed)
+    dmesh = dist_mesh.resolve(mesh)
+    if dmesh is not None and dmesh.n_devices > 1 and use_vmap:
+        buckets = (_buckets(ms) if bucketed
+                   else [(tuple(range(len(ms))), m_top)])
+        losses = dist_partition.run_grid_sharded(
+            make_sim_elem, ms, n_seeds, dmesh, buckets, jit_fn=_jit)
+    else:
+        losses = _run_grid(make_sim, ms, use_vmap, bucketed)
     return _losses_dict(alg.name, ms, losses, iters, eval_every,
                         problem=prob.name, n_seeds=n_seeds)
 
 
 def run_algorithm_sweep(algorithm: str, train, test, ms, *, iters,
                         eval_every, use_vmap=True, bucketed=None,
-                        n_seeds=1, **kwargs) -> Dict:
+                        n_seeds=1, mesh=None, **kwargs) -> Dict:
     """Dispatch one (algorithm, problem, dataset) job over the worker grid.
 
     Every registered algorithm routes through the generic :func:`sweep`;
     the four paper algorithms go via their ``sweep_*`` compatibility
     wrappers (which only add the legacy Hogwild! sequential reference
-    path).  ``bucketed=None`` keeps each algorithm's declared default.
+    path).  ``bucketed=None`` keeps each algorithm's declared default;
+    ``mesh`` is the execution-only device mesh (see :func:`sweep`).
     """
     fn = SWEEPERS.get(algorithm)
     if fn is None:
         return sweep(algorithm, train, test, ms, iters=iters,
                      eval_every=eval_every, use_vmap=use_vmap,
-                     bucketed=bucketed, n_seeds=n_seeds, **kwargs)
+                     bucketed=bucketed, n_seeds=n_seeds, mesh=mesh,
+                     **kwargs)
     if bucketed is not None:
         kwargs["bucketed"] = bucketed
     return fn(train, test, list(ms), iters=iters, eval_every=eval_every,
-              use_vmap=use_vmap, n_seeds=n_seeds, **kwargs)
+              use_vmap=use_vmap, n_seeds=n_seeds, mesh=mesh, **kwargs)
 
 
 # ---------------------------------------------------------------------------
@@ -279,36 +328,37 @@ def run_algorithm_sweep(algorithm: str, train, test, ms, *, iters,
 def sweep_minibatch(train, test, ms: Sequence[int], *, iters: int,
                     eval_every: int, gamma=0.1, lam=LAMBDA, key=None,
                     use_vmap=True, bucketed=True, n_seeds=1,
-                    problem="logistic") -> Dict:
+                    problem="logistic", mesh=None) -> Dict:
     return sweep("minibatch", train, test, ms, iters=iters,
                  eval_every=eval_every, problem=problem, lam=lam, key=key,
                  use_vmap=use_vmap, bucketed=bucketed, n_seeds=n_seeds,
-                 gamma=gamma)
+                 mesh=mesh, gamma=gamma)
 
 
 def sweep_ecd_psgd(train, test, ms: Sequence[int], *, iters: int,
                    eval_every: int, gamma=0.1, lam=LAMBDA, compress_bits=8,
                    key=None, use_vmap=True, bucketed=True, n_seeds=1,
-                   problem="logistic") -> Dict:
+                   problem="logistic", mesh=None) -> Dict:
     return sweep("ecd_psgd", train, test, ms, iters=iters,
                  eval_every=eval_every, problem=problem, lam=lam, key=key,
                  use_vmap=use_vmap, bucketed=bucketed, n_seeds=n_seeds,
-                 gamma=gamma, compress_bits=compress_bits)
+                 mesh=mesh, gamma=gamma, compress_bits=compress_bits)
 
 
 def sweep_dadm(train, test, ms: Sequence[int], *, iters: int, eval_every: int,
                local_batch=8, lam=LAMBDA, key=None, use_vmap=True,
-               bucketed=False, n_seeds=1, problem="logistic") -> Dict:
+               bucketed=False, n_seeds=1, problem="logistic",
+               mesh=None) -> Dict:
     return sweep("dadm", train, test, ms, iters=iters,
                  eval_every=eval_every, problem=problem, lam=lam, key=key,
                  use_vmap=use_vmap, bucketed=bucketed, n_seeds=n_seeds,
-                 local_batch=local_batch)
+                 mesh=mesh, local_batch=local_batch)
 
 
 def sweep_hogwild(train, test, ms: Sequence[int], *, iters: int,
                   eval_every: int, gamma=0.1, lam=LAMBDA, key=None,
                   use_vmap=True, bucketed=True, n_seeds=1,
-                  problem="logistic") -> Dict:
+                  problem="logistic", mesh=None) -> Dict:
     key = key if key is not None else jax.random.PRNGKey(0)
     if not use_vmap and problem == "logistic" and n_seeds == 1:
         # Legacy per-m reference path (re-jits per m): the vmapped grid is
@@ -325,7 +375,7 @@ def sweep_hogwild(train, test, ms: Sequence[int], *, iters: int,
     del bucketed   # force_flat: work is O(iters * d) regardless of m_pad
     return sweep("hogwild", train, test, ms, iters=iters,
                  eval_every=eval_every, problem=problem, lam=lam, key=key,
-                 use_vmap=use_vmap, n_seeds=n_seeds, gamma=gamma)
+                 use_vmap=use_vmap, n_seeds=n_seeds, mesh=mesh, gamma=gamma)
 
 
 SWEEPERS = {

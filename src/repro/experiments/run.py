@@ -16,6 +16,11 @@ suit the new one's curvature (ridge on wide-range features wants a much
 smaller gamma than Eq. 4 — see the ``problem_generality`` spec); the
 runner warns if a curve goes non-finite.
 
+``--devices`` (default ``auto``) shards every job's batched grid over a
+device mesh (`repro.distributed`); the resolved mesh is reported at
+startup.  Execution-only: curves and cache keys are identical on any
+mesh size, so a sweep computed on 1 device is a cache hit on 8.
+
 Repeated runs of an unchanged spec are served from the artifact cache
 (--force recomputes, --no-cache bypasses it).  --json writes the full
 result payload; the stdout report ends with the measured-vs-predicted
@@ -32,6 +37,7 @@ import sys
 from repro.core import problems as problems_mod
 from repro.core.algorithms import base as alg_base
 from repro.data import synth
+from repro.distributed import get_mesh
 from repro.experiments import registry, runner
 
 
@@ -83,13 +89,19 @@ def _print_report(result: dict) -> None:
             print(f"  {key:28s} measured={meas:<6d} predicted={pred}")
 
     cache = result.get("cache", {})
-    src = "cache hit" if cache.get("hit") else \
-        f"computed in {result.get('elapsed_s', 0.0):.1f}s"
+    exe = result.get("execution", {})
+    if cache.get("hit"):
+        src = "cache hit"
+    else:
+        src = f"computed in {result.get('elapsed_s', 0.0):.1f}s"
+        if exe.get("sharded"):
+            src += f" sharded over {exe['devices']} devices"
     print(f"\n[{src}] artifact: {cache.get('path')}")
 
 
 def _print_registries() -> None:
-    print("registered sweep specs:")
+    print(get_mesh().describe())
+    print("\nregistered sweep specs:")
     for name in registry.SPEC_IDS:
         spec = registry.get_spec(name, quick=True)
         print(f"  {name:20s} {spec.description}")
@@ -138,8 +150,16 @@ def main(argv=None) -> int:
     ap.add_argument("--no-cache", action="store_true",
                     help="neither read nor write the artifact cache")
     ap.add_argument("--cache-dir", help="artifact cache directory")
+    ap.add_argument("--devices", default="auto",
+                    help="device mesh for sharded execution: 'auto' (all "
+                         "available XLA devices, the default) or an int; "
+                         "execution-only — results and cache keys are "
+                         "mesh-invariant (see docs/distributed.md).  On "
+                         "CPU, create virtual devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
     ap.add_argument("--seq", action="store_true",
-                    help="sequential per-m loop instead of the vmapped grid")
+                    help="sequential per-m loop instead of the vmapped grid "
+                         "(never sharded)")
     ap.add_argument("--json", help="also write the full result to this path")
     ap.add_argument("-v", "--verbose", action="store_true")
     args = ap.parse_args(argv)
@@ -157,9 +177,24 @@ def main(argv=None) -> int:
         spec = dataclasses.replace(spec, jobs=tuple(
             dataclasses.replace(j, problem=args.problem)
             for j in spec.jobs)).validate()
+    devices = args.devices
+    if devices != "auto":
+        try:
+            devices = int(devices)
+        except ValueError:
+            ap.error(f"--devices must be an int or 'auto', got {devices!r}")
+    # startup mesh report — best-effort: an unsatisfiable request (e.g.
+    # --devices 8 on a 1-device host) must still serve cached artifacts,
+    # so the mesh is only *resolved* by the runner, and only on a miss
+    try:
+        print(get_mesh(devices).describe())
+    except ValueError as e:
+        print(f"mesh: not resolvable here ({e}); cached artifacts still "
+              f"serve, a fresh compute will fail")
     result = runner.run_sweep(spec, use_cache=not args.no_cache,
                               force=args.force, cache_dir=args.cache_dir,
-                              use_vmap=not args.seq, verbose=args.verbose)
+                              use_vmap=not args.seq, verbose=args.verbose,
+                              mesh=devices)
     _print_report(result)
     if args.json:
         with open(args.json, "w") as f:

@@ -32,8 +32,10 @@ distributions.
 Results are plain JSON-serializable dicts (curves as a row-per-m list of
 lists; use `curves_by_m` for {m: curve} access) and are stored in the
 content-hashed artifact cache — re-running an unchanged spec is a disk
-read.  The fresh/cached distinction is reported in ``result["cache"]``,
-which is attached after loading and never persisted.
+read.  The fresh/cached distinction is reported in ``result["cache"]``
+and the resolved device mesh in ``result["execution"]``; both are
+attached after loading and never persisted (`cache.VOLATILE_KEYS`), so
+artifacts are byte-identical whichever mesh computed them.
 """
 
 from __future__ import annotations
@@ -43,12 +45,14 @@ import time
 import warnings
 from typing import Dict, List, Optional
 
+import jax
 import numpy as np
 
 from repro.analysis import fit as fit_mod
 from repro.core import metrics as MX
 from repro.core import scalability as SC
 from repro.core.algorithms import base as alg_base
+from repro.distributed import mesh as dist_mesh
 from repro.experiments import cache as artifact_cache
 from repro.experiments import engine
 from repro.experiments import spec as spec_mod
@@ -99,8 +103,17 @@ def _cost_readout(job_result: Dict, epsilon: float, asynchronous: bool):
 
 def run_sweep(spec: SweepSpec, *, use_cache: bool = True, force: bool = False,
               cache_dir: Optional[str] = None, use_vmap: bool = True,
-              verbose: bool = False) -> Dict:
-    """Execute (or fetch) the full sweep a spec describes."""
+              verbose: bool = False,
+              mesh: "dist_mesh.MeshLike" = None) -> Dict:
+    """Execute (or fetch) the full sweep a spec describes.
+
+    ``mesh`` (or, when absent, the spec's execution-only ``devices``
+    field) shards every job's batched grid over a device mesh via
+    `repro.distributed` — results and cache keys are mesh-invariant, so
+    the mesh only changes where the arithmetic runs.  The resolved mesh
+    is reported in ``result["execution"]`` (attached after load/store,
+    never persisted — see `cache.VOLATILE_KEYS`).
+    """
     spec.validate()
     cache_dir = cache_dir or artifact_cache.DEFAULT_CACHE_DIR
     fp = spec_mod.fingerprint(spec)
@@ -111,10 +124,27 @@ def run_sweep(spec: SweepSpec, *, use_cache: bool = True, force: bool = False,
             hit["cache"] = {"hit": True,
                             "path": artifact_cache.artifact_path(
                                 cache_dir, spec.name, fp)}
+            # a hit executes nothing, so the mesh request is never
+            # resolved — an artifact cached elsewhere must serve even on
+            # a host that cannot satisfy the spec's `devices` ask
+            hit["execution"] = {"devices": len(jax.devices()),
+                                "sharded": False,
+                                "backend": jax.default_backend()}
             return hit
 
+    dmesh = dist_mesh.resolve(mesh if mesh is not None else spec.devices)
+    execution = {
+        "devices": dmesh.n_devices if dmesh is not None else 1,
+        "sharded": dmesh is not None and dmesh.n_devices > 1 and use_vmap,
+        "backend": jax.default_backend(),
+    }
+
     t0 = time.time()
-    result: Dict = {"name": spec.name, "spec": spec.to_dict(),
+    # the persisted spec dict is exactly the fingerprinted one: two
+    # requests differing only in execution fields share a fingerprint,
+    # so the artifact they race to write must be byte-identical too
+    result: Dict = {"name": spec.name,
+                    "spec": spec_mod.computational_dict(spec),
                     "datasets": {}, "jobs": {}}
 
     datasets = {name: spec_mod.build_dataset(ds)
@@ -141,7 +171,8 @@ def run_sweep(spec: SweepSpec, *, use_cache: bool = True, force: bool = False,
         jr = engine.run_algorithm_sweep(
             job.algorithm, tr, te, spec.ms, iters=spec.iters,
             eval_every=spec.eval_every, use_vmap=use_vmap,
-            problem=job.problem, n_seeds=spec.n_seeds, **job.kwargs)
+            problem=job.problem, n_seeds=spec.n_seeds, mesh=dmesh,
+            **job.kwargs)
         jr["dataset"] = job.dataset
         if not np.isfinite(jr.get("losses_seeds", jr["losses"])).all():
             # diverged — usually a step size tuned for another objective's
@@ -174,4 +205,5 @@ def run_sweep(spec: SweepSpec, *, use_cache: bool = True, force: bool = False,
     if use_cache:
         path = artifact_cache.store(cache_dir, spec.name, fp, result)
     result["cache"] = {"hit": False, "path": path}
+    result["execution"] = execution
     return result

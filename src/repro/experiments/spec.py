@@ -28,8 +28,11 @@ content-hashable (:func:`fingerprint`) — the fingerprint keys the on-disk
 artifact cache and covers, besides the spec dict and ``ENGINE_VERSION``,
 the *source* of every registry entry the spec references
 (:func:`registry_signature`): editing a registered Algorithm, Problem, or
-generator invalidates exactly the cached sweeps that used it.  Named paper
-specs live in `repro.experiments.registry`.
+generator invalidates exactly the cached sweeps that used it.  Fields that
+only steer *execution* — the ``devices`` mesh request — are excluded from
+the fingerprint (`EXECUTION_ONLY_FIELDS`): results are mesh-invariant, so
+the mesh must never split the cache.  Named paper specs live in
+`repro.experiments.registry`.
 """
 
 from __future__ import annotations
@@ -38,7 +41,7 @@ import dataclasses
 import hashlib
 import inspect
 import json
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple, Union
 
 import jax
 
@@ -64,7 +67,20 @@ from repro.data import synth
 #      ENGINE_VERSION-3 draws bit-exactly; extra seeds fold the seed index
 #      into the sweep key); results gain `n_seeds`/`losses_seeds`, consumed
 #      by the `repro.analysis` statistics subsystem
-ENGINE_VERSION = 4
+#   5: PR-5 device-mesh sharded execution (`repro.distributed`): each
+#      bucket's batched sim can be laid over every available XLA device.
+#      The single-device path is bit-compatible with ENGINE_VERSION 4 and
+#      multi-device execution is pinned mesh-invariant at 1e-5, but the
+#      engine generation is bumped conservatively because curves may now
+#      be produced under any mesh; the mesh itself NEVER enters the
+#      fingerprint (`EXECUTION_ONLY_FIELDS`) — a sweep cached on 1 device
+#      is a hit on 8
+ENGINE_VERSION = 5
+
+#: SweepSpec fields that steer *execution only* (where the sweep runs,
+#: never what it computes).  `fingerprint` strips them, so they cannot
+#: split the artifact cache; `cache.store` keeps them out of artifacts.
+EXECUTION_ONLY_FIELDS = ("devices",)
 
 #: Import-time snapshots for display / back-compat; validation always goes
 #: through the live registries, so late registrations are fully usable.
@@ -142,11 +158,21 @@ class SweepSpec:
     characters_rows: int = 0             # §IV summary rows; 0 = default cap
     split_seed: int = 0                  # key for shuffled splits
     n_seeds: int = 1                     # seed replicates per job (vmapped)
+    #: EXECUTION-ONLY (never part of result identity — see
+    #: EXECUTION_ONLY_FIELDS): device mesh request resolved by
+    #: `repro.distributed.get_mesh` — None = unsharded, "auto" = every
+    #: available XLA device, int = that many.  The CLI's ``--devices``
+    #: overrides it per run without touching the spec.
+    devices: Optional[Union[int, str]] = None
 
     # -- validation ---------------------------------------------------------
     def validate(self) -> "SweepSpec":
         if not self.jobs:
             raise ValueError(f"spec {self.name!r} has no jobs")
+        if self.devices is not None and self.devices != "auto" and (
+                not isinstance(self.devices, int) or self.devices < 1):
+            raise ValueError(f"spec {self.name!r}: devices={self.devices!r} "
+                             f"must be None, 'auto', or a positive int")
         if len(set(self.ms)) != len(self.ms) or any(m < 1 for m in self.ms):
             raise ValueError(f"spec {self.name!r}: bad worker grid {self.ms}")
         if self.iters < self.eval_every or self.eval_every < 1:
@@ -223,12 +249,28 @@ def registry_signature(spec: SweepSpec) -> Dict[str, str]:
     return sig
 
 
+def computational_dict(spec: SweepSpec) -> Dict:
+    """``spec.to_dict()`` minus `EXECUTION_ONLY_FIELDS` — the dict that
+    describes *what* a sweep computes, with no trace of where it runs.
+    Both the fingerprint and the persisted artifact's ``spec`` entry use
+    this one helper, keeping the two byte-consistent by construction."""
+    d = spec.to_dict()
+    for field in EXECUTION_ONLY_FIELDS:
+        d.pop(field, None)
+    return d
+
+
 def fingerprint(spec: SweepSpec) -> str:
     """Content hash of a spec (plus the engine version and the sources of
-    the registry entries it references) — the cache key."""
+    the registry entries it references) — the cache key.
+
+    Hashes `computational_dict`, i.e. execution-only fields (``devices``)
+    never enter: *where* a sweep runs never changes *what* it computes
+    (the mesh-invariance contract, docs/distributed.md), so a sweep cached
+    on one mesh is a hit on any other."""
     payload = json.dumps({"engine_version": ENGINE_VERSION,
                           "registries": registry_signature(spec),
-                          "spec": spec.to_dict()},
+                          "spec": computational_dict(spec)},
                          sort_keys=True, default=str)
     return hashlib.sha256(payload.encode()).hexdigest()
 

@@ -2,7 +2,9 @@
 runs real (CPU-scale, reduced-config) optimization; `serve` runs batched
 greedy decoding; `dryrun` lowers/compiles every (arch x shape) on the
 production mesh without executing (the 512-virtual-device coherence
-proof); `mesh`, `specs`, `hlo_stats` and `analytic` are its supporting
-mesh/shape/cost tooling.  The paper-experiment entry point is separate:
-``python -m repro.experiments.run``.
+proof); `specs`, `hlo_stats` and `analytic` are its supporting
+shape/cost tooling (mesh builders live in `repro.distributed.mesh`).
+The paper-experiment entry point is separate:
+``python -m repro.experiments.run`` (``--devices N`` shards it over a
+device mesh via `repro.distributed`).
 """

@@ -26,10 +26,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import INPUT_SHAPES
 from repro.configs.registry import (ARCH_IDS, get_arch, pair_supported)
 from repro.launch import hlo_stats
-from repro.launch.mesh import make_production_mesh
 from repro.launch import specs as S
-from repro.sharding import (batch_specs, data_axes, decode_state_specs,
-                            param_specs)
+from repro.distributed import (batch_specs, data_axes, decode_state_specs,
+                               make_production_mesh, param_specs)
 
 # v5e hardware constants for the roofline terms (EXPERIMENTS.md §Roofline)
 PEAK_FLOPS = 197e12          # bf16 / chip
@@ -75,7 +74,7 @@ def lower_pair(arch_id, shape_name, mesh, *, strategy="sync", seq_shard=True,
         lowered = jf.lower(state_shapes, S.input_specs(cfg, shape))
     elif shape.mode == "prefill":
         from repro.serve.engine import make_prefill_step
-        from repro.sharding import act_constraint
+        from repro.distributed import act_constraint
         step = make_prefill_step(
             cfg, constrain=act_constraint(mesh, seq_shard=seq_shard))
         p_shapes = S.param_shapes(cfg)
@@ -86,7 +85,7 @@ def lower_pair(arch_id, shape_name, mesh, *, strategy="sync", seq_shard=True,
         lowered = jf.lower(p_shapes, S.input_specs(cfg, shape))
     else:  # decode
         from repro.serve.engine import make_serve_step
-        from repro.sharding import decode_act_constraint
+        from repro.distributed import decode_act_constraint
         c_dec = (decode_act_constraint(mesh)
                  if os.environ.get("REPRO_DECODE_REPL", "1") == "1" else None)
         step = make_serve_step(cfg, constrain=c_dec)

@@ -25,9 +25,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ArchConfig
 from repro.models import model as M
 from repro.optim import adamw_init, adamw_update
-from repro.sharding import (act_constraint, batch_specs, data_axes,
-                            head_constraint, inner_act_constraint,
-                            layer_constraint, logits_constraint, param_specs)
+from repro.distributed import (act_constraint, batch_specs, data_axes,
+                               head_constraint, inner_act_constraint,
+                               layer_constraint, logits_constraint,
+                               param_specs)
 
 
 # ---------------------------------------------------------------------------

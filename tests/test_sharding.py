@@ -13,7 +13,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.registry import get_arch
 from repro.launch import specs as S
 from repro.launch.hlo_stats import collective_stats, total_collective_bytes
-from repro.sharding.rules import fit_spec, _leaf_spec, data_axes
+from repro.distributed.rules import fit_spec, _leaf_spec, data_axes
 
 
 class _FakeMesh:
@@ -37,7 +37,7 @@ def test_fit_spec_drops_nondivisible_axes():
 
 
 def test_param_specs_structure():
-    from repro.sharding import param_specs
+    from repro.distributed import param_specs
     cfg = get_arch("qwen2.5-3b")
     shapes = S.param_shapes(cfg)
     specs = param_specs(shapes, MESH)
@@ -86,7 +86,7 @@ SUBPROC = textwrap.dedent("""
     import jax, jax.numpy as jnp
     from repro.configs.registry import get_arch
     from repro.launch.dryrun import lower_pair
-    from repro.launch.mesh import make_debug_mesh
+    from repro.distributed import make_debug_mesh
     import dataclasses
     mesh = make_debug_mesh(data=2, model=2, pod=2)
     # reduced config through the REAL dryrun path on a tiny mesh
