@@ -1,5 +1,15 @@
 #!/usr/bin/env python
-"""Engine wall-clock benchmark — emits BENCH_5.json (perf-trajectory anchor).
+"""Engine wall-clock benchmark — emits BENCH_6.json (perf-trajectory anchor).
+
+PR 6 registers three critical-parameter algorithms (momentum, local_sgd,
+async_svrg) against the UNCHANGED ENGINE_VERSION-5 engine.  The
+**new_algorithms** section times each of them through the same generic
+sweep path the paper's four take (cold, fine worker grid) and records the
+jit compile count — one compile per flat grid (or per bucket), exactly
+like the incumbents, because nothing algorithm-specific leaks into the
+engine.  The **vs_bench5** block embeds BENCH_5's engine_default
+wall-clock for the non-regression comparison: the registration-only PR
+must leave the original 4-algorithm sweep within noise.
 
 ENGINE_VERSION 5 adds device-mesh sharded execution (`repro.distributed`):
 each bucket's batched (m-grid x seed) simulation can be laid over every
@@ -61,7 +71,7 @@ changed relative to PR 1 (all still tracked):
    crossover honestly.
 
 jit caches are cleared between configurations so every timing includes
-its own compiles, as a cold run would.  Results land in BENCH_5.json at
+its own compiles, as a cold run would.  Results land in BENCH_6.json at
 the repo root so the perf trajectory is tracked from this PR onward.
 
 Usage:  PYTHONPATH=src python scripts/bench_engine.py [--quick]
@@ -89,6 +99,9 @@ from repro.experiments.spec import (DatasetSpec, JobSpec, SweepSpec,
                                     ENGINE_VERSION)
 
 ALGOS = ("minibatch", "ecd_psgd", "dadm", "hogwild")
+# the PR-6 critical-parameter registrations — benchmarked separately so
+# the `main` section stays comparable against every earlier BENCH anchor
+NEW_ALGOS = ("momentum", "local_sgd", "async_svrg")
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
@@ -106,6 +119,35 @@ def time_configuration(tr, te, ms, iters, eval_every, *, use_vmap, bucketed,
                                    eval_every=eval_every, use_vmap=uv,
                                    bucketed=bucketed)
     return time.perf_counter() - t0, engine.JIT_CALLS - jits0
+
+
+def time_new_algorithms(tr, te, ms, iters, eval_every):
+    """Each PR-6 registration through the engine's shipped defaults, cold.
+
+    Per-algorithm (not one lump) so a future regression is attributable;
+    sequential reruns the same sweep with use_vmap=False.  The stable
+    claim is the compile pattern matching the incumbents — 1 jit per
+    bucket (momentum/local_sgd bucket by default, async_svrg is
+    force_flat like hogwild -> exactly 1) — not a vmap speedup: at this
+    compile-dominated scale the bucketed grids with per-worker state
+    (local_sgd's replicas) can lose to the sequential loop, same
+    crossover the bucketing_regime section tracks."""
+    out = {}
+    for algo in NEW_ALGOS:
+        entry = {}
+        for label, use_vmap in (("vmapped", True), ("sequential", False)):
+            jax.clear_caches()
+            jits0 = engine.JIT_CALLS
+            t0 = time.perf_counter()
+            engine.run_algorithm_sweep(algo, tr, te, ms, iters=iters,
+                                       eval_every=eval_every,
+                                       use_vmap=use_vmap)
+            entry[label + "_s"] = time.perf_counter() - t0
+            entry["jit_compiles_" + label] = engine.JIT_CALLS - jits0
+        entry["speedup"] = entry["sequential_s"] / max(entry["vmapped_s"],
+                                                       1e-9)
+        out[algo] = entry
+    return out
 
 
 def time_characters(X, rng, batch_size):
@@ -331,7 +373,7 @@ def main(argv=None):
                    help="internal: run the distributed-section worker "
                         "under this forced host device count and exit")
     p.add_argument("--out", default=None,
-                   help="output path (default: BENCH_5.json at the repo "
+                   help="output path (default: BENCH_6.json at the repo "
                         "root; quick mode defaults elsewhere so a smoke "
                         "never overwrites the committed perf anchor)")
     args = p.parse_args(argv)
@@ -342,8 +384,8 @@ def main(argv=None):
         args.m_max = 8
         args.seeds = min(args.seeds, 4)
     if args.out is None:
-        args.out = (os.path.join(tempfile.gettempdir(), "BENCH_5.quick.json")
-                    if args.quick else os.path.join(ROOT, "BENCH_5.json"))
+        args.out = (os.path.join(tempfile.gettempdir(), "BENCH_6.quick.json")
+                    if args.quick else os.path.join(ROOT, "BENCH_6.json"))
     ms = list(range(1, args.m_max + 1))
 
     ds = synth.make_higgs_like(jax.random.PRNGKey(0), n=args.n, d=args.d)
@@ -366,6 +408,12 @@ def main(argv=None):
             tr, te, **kw, **cfg)
         print(f"{name:>15}: {timings[name]:7.2f} s "
               f"({jit_counts[name]} compiles)")
+
+    new_algos = time_new_algorithms(tr, te, ms, args.iters, args.eval_every)
+    for algo, r in new_algos.items():
+        print(f"{algo:>15}: vmapped {r['vmapped_s']:6.2f} s "
+              f"({r['jit_compiles_vmapped']} compiles)  sequential "
+              f"{r['sequential_s']:6.2f} s  {r['speedup']:.2f}x")
 
     chars_ref, chars_fused = time_characters(
         ds.X[:min(400, args.n)], rng=args.m_max, batch_size=args.m_max)
@@ -433,6 +481,18 @@ def main(argv=None):
             "ratio_engine_default": timings["engine_default"]
             / max(b4["engine_default"], 1e-9),
         }
+    # PR-6 non-regression: registration-only PR, the original 4-algorithm
+    # engine_default sweep must stay within noise of the PR-5 anchor
+    vs_bench5 = None
+    b5_path = os.path.join(ROOT, "BENCH_5.json")
+    if not args.quick and os.path.exists(b5_path):
+        with open(b5_path) as f:
+            b5 = json.load(f)["main"]["wall_clock_s"]
+        vs_bench5 = {
+            "bench5_wall_clock_s": b5,
+            "ratio_engine_default": timings["engine_default"]
+            / max(b5["engine_default"], 1e-9),
+        }
 
     payload = {
         "bench": "engine_sweep",
@@ -447,6 +507,16 @@ def main(argv=None):
             "wall_clock_s": timings,
             "jit_compiles": jit_counts,
             "hogwild_compiles": {"pr1": len(ms), "vmap": 1},
+        },
+        "new_algorithms": {
+            "config": {"dataset": "higgs_like", "n": args.n, "d": args.d,
+                       "iters": args.iters, "eval_every": args.eval_every,
+                       "ms": f"1..{args.m_max}",
+                       "note": "PR-6 registrations on the unchanged "
+                               "ENGINE_VERSION-5 engine, shipped defaults "
+                               "(momentum/local_sgd bucketed, async_svrg "
+                               "force_flat), cold per algorithm"},
+            "results": new_algos,
         },
         "characters": {
             "config": {"rows": min(400, args.n), "rng": args.m_max,
@@ -497,6 +567,7 @@ def main(argv=None):
         "cache_roundtrip_s": {"fresh": fresh, "cached": cached,
                               "speedup": fresh / max(cached, 1e-9)},
         "vs_bench4": vs_bench4,
+        "vs_bench5": vs_bench5,
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)

@@ -80,6 +80,37 @@ def hogwild_mmax(omega_frac: float, delta: float, rho: float,
     return int(fails.argmax()) + 1          # m before the first failure
 
 
+def momentum_mmax(sigma: float, beta: float = 0.9,
+                  parallel_cost: float = 1e-3, m_cap: int = M_CAP) -> int:
+    """Critical batch size under heavy-ball momentum: the buffer already
+    geometrically averages ~1/(1-beta) past gradients, consuming part of
+    the noise budget batch parallelism would otherwise spend, so the
+    Thm-3 gain growth runs on an effective sigma sqrt(1-beta) and the
+    cliff moves DOWN with beta (beta=0 recovers :func:`sync_mmax`)."""
+    return sync_mmax(sigma * math.sqrt(max(1.0 - beta, 0.0)),
+                     parallel_cost, m_cap)
+
+
+def local_sgd_mmax(sigma: float, sync_every: int = 4,
+                   parallel_cost: float = 1e-3, m_cap: int = M_CAP) -> int:
+    """Critical worker count under a local-update window: communication is
+    paid once per ``sync_every`` local steps, so the per-iteration parallel
+    cost divides by the window and the cliff moves UP with it
+    (sync_every=1 recovers :func:`sync_mmax`)."""
+    return sync_mmax(sigma, parallel_cost / max(int(sync_every), 1), m_cap)
+
+
+def svrg_mmax(omega_frac: float, delta: float, rho: float,
+              theta: float = 0.5, m_cap: int = M_CAP) -> int:
+    """Critical staleness under semi-stochastic gradients: near the anchor
+    the two point-gradient terms cancel, damping the Thm-2 coordination
+    term 6 m omega sqrt(delta) by a variance-reduction factor
+    theta in (0, 1] (theta=1 recovers :func:`hogwild_mmax`; theta -> 0 is
+    the full-gradient limit with unbounded staleness tolerance)."""
+    return hogwild_mmax(omega_frac * min(max(theta, 0.0), 1.0), delta, rho,
+                        m_cap)
+
+
 def predict_sync_mmax(X, *, parallel_cost: float = 1e-3,
                       m_cap: int = M_CAP) -> Dict:
     """Dataset-level sync predictor (vectorized `core.scalability` twin —
@@ -103,6 +134,44 @@ def predict_hogwild_mmax(X, *, m_cap: int = M_CAP) -> Dict:
     return {**hw, "omega_delta_term": omega_term, "m_star": m_star,
             "predicted_m_max": hogwild_mmax(hw["omega_frac"], hw["delta"],
                                             hw["rho"], m_cap)}
+
+
+def predict_momentum_mmax(X, *, beta: float = 0.9,
+                          parallel_cost: float = 1e-3,
+                          m_cap: int = M_CAP) -> Dict:
+    """Dataset-level critical batch size for momentum mini-batch SGD; the
+    job's ``beta`` reaches here via the runner's predictor-kwargs pass."""
+    sigma = math.sqrt(max(MX.mean_feature_variance(X), 1e-12))
+    return {"sigma_proxy": sigma, "beta": beta,
+            "parallel_cost": parallel_cost,
+            "predicted_m_max": momentum_mmax(sigma, beta, parallel_cost,
+                                             m_cap)}
+
+
+def predict_local_sgd_mmax(X, *, sync_every: int = 4,
+                           parallel_cost: float = 1e-3,
+                           m_cap: int = M_CAP) -> Dict:
+    """Dataset-level critical worker count for local SGD at a given sync
+    window (the window amortizes the communication cost)."""
+    sigma = math.sqrt(max(MX.mean_feature_variance(X), 1e-12))
+    return {"sigma_proxy": sigma, "sync_every": int(sync_every),
+            "parallel_cost": parallel_cost,
+            "predicted_m_max": local_sgd_mmax(sigma, sync_every,
+                                              parallel_cost, m_cap)}
+
+
+def predict_svrg_mmax(X, *, anchor_every: int = 100,
+                      m_cap: int = M_CAP) -> Dict:
+    """Dataset-level critical staleness for async-SVRG.  The variance-
+    reduction factor interpolates with the anchor period H relative to the
+    epoch length n: theta = H / (H + n) — a fresh anchor every step
+    (H -> 0) is the full-gradient limit, a never-refreshed anchor
+    (H -> inf) degenerates to raw Hogwild!."""
+    hw = MX.hogwild_params(X)
+    theta = anchor_every / (anchor_every + X.shape[0])
+    return {**hw, "anchor_every": int(anchor_every), "theta": theta,
+            "predicted_m_max": svrg_mmax(hw["omega_frac"], hw["delta"],
+                                         hw["rho"], theta, m_cap)}
 
 
 # ---------------------------------------------------------------------------

@@ -18,7 +18,11 @@ Sections:
   2. **Character surface** — the ``character_surface`` spec: the
      (variance x density x duplication) knob grid with measured / fitted /
      predicted m_max per cell.
-  3. **characters -> m_max regression** — fitted coefficients and R^2
+  3. **Critical-parameter surface** — the ``critical_params`` spec:
+     momentum lr x local-SGD sync window x async-SVRG anchor period, each
+     at two dataset-character settings, with the per-knob m_max cliff and
+     its character-driven shift spelled out.
+  4. **characters -> m_max regression** — fitted coefficients and R^2
      across all cached sweeps (anything `run_sweep` ever stored in the
      cache dir contributes points).
 
@@ -47,7 +51,7 @@ from repro.experiments.spec import ENGINE_VERSION
 
 #: specs the report runs; upper_bound ships single-seed, so the report
 #: replicates it with this many seeds unless --seeds overrides
-REPORT_SPECS = ("upper_bound", "character_surface")
+REPORT_SPECS = ("upper_bound", "character_surface", "critical_params")
 DEFAULT_SEEDS = {"quick": 3, "full": 8}
 DEFAULT_OUT = os.path.join("results", "analysis_report.md")
 
@@ -190,9 +194,56 @@ def render_character_surface(result: Dict) -> List[str]:
     return lines + _table(head, rows) + [""]
 
 
+def render_critical_params(result: Dict) -> List[str]:
+    from repro.experiments.spec import JobSpec
+
+    probe_m, frac = _eps_of(result)
+    lines = ["## 3. Critical-parameter surface (`critical_params`)", ""]
+    lines += ["Three optimizer classes, one critical knob each — the "
+              "momentum step size, the local-SGD sync window `H`, the "
+              "async-SVRG anchor period `A` — swept at two "
+              "`character_knob` settings.  The worker grid is the batch "
+              "axis for the synchronous pair and the staleness axis "
+              "(tau_max = m) for async-SVRG; the question is whether the "
+              "m_max cliff moves with the knob AND with the dataset "
+              "characters.", ""]
+    head = ["algorithm", "knob", "dataset", "var", "density", "dup",
+            "measured m_max [CI]", "fitted m_max [CI]", "predicted"]
+    rows = []
+    # fitted/measured bounds per (algorithm, knob) across the character
+    # settings, in spec dataset order — the cliff shift spelled out below
+    shifts: Dict[str, Dict[str, tuple]] = {}
+    for j in result["spec"]["jobs"]:
+        key = JobSpec(**j).key
+        jr = result["jobs"][key]
+        ds = result["spec"]["datasets"][jr["dataset"]]["kwargs"]
+        boot = stats.mmax_bootstrap(jr, probe_m=probe_m, frac=frac)
+        law = fit.fit_job(jr, probe_m=probe_m, frac=frac)
+        pred = (jr.get("predicted") or {}).get("predicted_m_max", "-")
+        knob = j.get("label") or "-"
+        rows.append([j["algorithm"], knob, jr["dataset"],
+                     f"{ds.get('variance', 1.0):g}",
+                     f"{ds.get('density', 1.0):g}",
+                     f"{ds.get('duplication', 0.0):g}",
+                     _fmt_ci(boot["m_max"], boot["lo"], boot["hi"]),
+                     _fmt_ci(law["fitted_m_max"], law["fitted_m_max_lo"],
+                             law["fitted_m_max_hi"]),
+                     str(pred)])
+        shifts.setdefault(f"{j['algorithm']}[{knob}]", {})[
+            jr["dataset"]] = (boot["m_max"], law["fitted_m_max"])
+    lines += _table(head, rows)
+    lines += ["", "m_max cliff across the character settings "
+              "(measured, fitted in parentheses):", ""]
+    for cell, per_ds in shifts.items():
+        path = " &#8594; ".join(
+            f"{name} {m} ({f_})" for name, (m, f_) in per_ds.items())
+        lines.append(f"- `{cell}`: {path}")
+    return lines + [""]
+
+
 def render_regression(results: List[Dict]) -> List[str]:
     points = fit.collect_character_points(results)
-    lines = ["## 3. characters &#8594; m_max regression", ""]
+    lines = ["## 4. characters &#8594; m_max regression", ""]
     reg = fit.characters_regression(points)
     if reg is None:
         return lines + [f"not enough cost-readout points "
@@ -276,6 +327,7 @@ def main(argv=None) -> int:
              ""]
     lines += render_upper_bound(results["upper_bound"], svg=not args.no_svg)
     lines += render_character_surface(results["character_surface"])
+    lines += render_critical_params(results["critical_params"])
     lines += render_regression(load_cached_results(cache_dir))
 
     md = "\n".join(lines) + "\n"

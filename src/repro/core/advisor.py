@@ -71,11 +71,18 @@ class ScalabilityAdvisor:
         return ch
 
     # -- dataset-level characters (faithful tier) ---------------------------
-    def from_dataset(self, X, *, tau_max=8, batch_size=8) -> Dict:
+    def from_dataset(self, X, *, tau_max=8, batch_size=8, beta=0.9,
+                     sync_every=4, anchor_every=100) -> Dict:
         ch = MX.summarize(X, tau_max=tau_max, batch_size=batch_size)
         ch["hogwild"] = FIT.predict_hogwild_mmax(X)
         ch["sync"] = FIT.predict_sync_mmax(X, parallel_cost=self.parallel_cost)
         ch["dadm"] = FIT.predict_dadm_mmax(X, parallel_cost=self.parallel_cost)
+        # critical-parameter envelopes: same characters, knob-shifted cliffs
+        ch["momentum"] = FIT.predict_momentum_mmax(
+            X, beta=beta, parallel_cost=self.parallel_cost)
+        ch["local_sgd"] = FIT.predict_local_sgd_mmax(
+            X, sync_every=sync_every, parallel_cost=self.parallel_cost)
+        ch["svrg"] = FIT.predict_svrg_mmax(X, anchor_every=anchor_every)
         ch["recommendation"] = self._recommend_dataset(ch)
         return ch
 
@@ -94,8 +101,10 @@ class ScalabilityAdvisor:
     def _recommend_dataset(self, ch: Dict) -> str:
         if ch["sparsity"] > 0.9:
             return ("sparse + low-variance dataset: Hogwild!-class (predicted "
-                    f"m_max {ch['hogwild']['predicted_m_max']}); mini-batch "
-                    "gains will be minor (paper Fig 3b)")
+                    f"m_max {ch['hogwild']['predicted_m_max']}, "
+                    f"{ch['svrg']['predicted_m_max']} with semi-stochastic "
+                    "gradients); mini-batch gains will be minor (paper "
+                    "Fig 3b)")
         if ch["mean_feature_variance"] > 1.0:
             return ("dense high-variance dataset: mini-batch SGD/ECD-PSGD "
                     f"class, m_max ~{ch['sync']['predicted_m_max']} "
@@ -103,4 +112,7 @@ class ScalabilityAdvisor:
         if ch["diversity_ratio"] < 0.5:
             return ("low diversity: DADM and all model-average methods "
                     "saturate early (paper Fig 6); deduplicate or reshuffle")
-        return "balanced characters: any strategy; bound set by parallel cost"
+        return ("balanced characters: any strategy; bound set by parallel "
+                "cost — a local-SGD sync window amortizes it (predicted "
+                f"m_max {ch['local_sgd']['predicted_m_max']} vs sync "
+                f"{ch['sync']['predicted_m_max']})")

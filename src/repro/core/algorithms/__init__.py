@@ -2,7 +2,10 @@
 registered `Algorithm` protocol (`base.py`): Hogwild! (Alg 1, async,
 deterministic staleness simulation), mini-batch SGD (Alg 2, batch size =
 degree of parallelism), DADM (Alg 3, distributed dual coordinate ascent)
-and ECD-PSGD (Alg 4, decentralized ring gossip with compression).
+and ECD-PSGD (Alg 4, decentralized ring gossip with compression) — plus
+the critical-parameter extensions (ROADMAP item 4): momentum mini-batch
+SGD (`Momentum`), local SGD / EASGD (`LocalSgd`) and asynchronous SVRG
+(`AsyncSvrg`), protocol-only dataclasses with no legacy runner face.
 
 Each module carries two faces:
 
@@ -25,3 +28,6 @@ from repro.core.algorithms.hogwild import Hogwild, run_hogwild
 from repro.core.algorithms.minibatch import Minibatch, run_minibatch
 from repro.core.algorithms.ecd_psgd import EcdPsgd, run_ecd_psgd
 from repro.core.algorithms.dadm import Dadm, run_dadm
+from repro.core.algorithms.momentum import Momentum
+from repro.core.algorithms.local_sgd import LocalSgd
+from repro.core.algorithms.async_svrg import AsyncSvrg

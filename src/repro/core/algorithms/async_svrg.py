@@ -1,0 +1,84 @@
+"""Asynchronous SVRG: Hogwild!-style staleness over semi-stochastic grads.
+
+Same deterministic staleness recurrence as `hogwild.py` (the gradient
+applied at server iteration j was computed at iteration j - tau, tau
+cycling over [1, m] — Thm 1's "lag equals the worker count"), but the
+worker evaluates the SVRG semi-stochastic gradient instead of the raw
+point gradient (Zhang et al., arXiv 1508.01633):
+
+    v_j = grad f_i(x_stale) - grad f_i(x_anchor) + mu,
+    mu  = full gradient at x_anchor,
+
+with the anchor (and mu) refreshed from the current model every
+``anchor_every`` server iterations.  Near the anchor the two point terms
+cancel, so both the gradient *variance* and the staleness error the
+recurrence injects shrink with ||x_stale - x_anchor|| — which is why
+semi-stochastic gradients tolerate staleness (here: worker count m,
+since tau_max = m) far better than Hogwild!'s raw gradients, and why the
+anchor period is the third knob of the critical-parameter surface.
+Theory-side bound: `repro.analysis.fit.svrg_mmax` (predictor kind
+``"svrg"`` — Thm 2's Hogwild! recipe with the coordination term damped
+by the variance-reduction factor theta = H / (H + n)).
+
+Padding-safe like Hogwild!: the model history is allocated at the static
+pad width, indexed modulo the *traced* m; the anchor refresh is a
+``lax.cond`` on the (unbatched) iteration index, so the full-gradient
+pass runs once per ``anchor_every`` steps, not per step, even under the
+engine's grid vmap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.algorithms.base import (Algorithm, SimContext,
+                                        register_algorithm)
+
+
+@register_algorithm
+@dataclasses.dataclass(frozen=True)
+class AsyncSvrg(Algorithm):
+    """Traced-m staleness recurrence over SVRG semi-stochastic gradients
+    with a periodic full-gradient anchor."""
+
+    name: ClassVar[str] = "async_svrg"
+    asynchronous: ClassVar[bool] = True      # cost divides iters by m
+    bucketed_default: ClassVar[bool] = False
+    force_flat: ClassVar[bool] = True        # single-model recurrence
+    predictor: ClassVar[str] = "svrg"
+
+    gamma: float = 0.1
+    anchor_every: int = 100
+
+    def make_draws(self, key, n, iters, m_top):
+        # one shared server sample sequence, m-independent (as hogwild)
+        return jax.random.randint(key, (iters,), 0, n)
+
+    def init_state(self, problem, data, ctx: SimContext):
+        d = data.X.shape[1]
+        x0 = jnp.zeros((d,))
+        mu0 = problem.batch_grad(x0, data.X, data.y)
+        # (model, stale-model history, anchor, full gradient at anchor)
+        return (x0, jnp.zeros((ctx.m_pad, d)), x0, mu0)
+
+    def step(self, problem, data, ctx: SimContext, state, i, j):
+        x, hist, anchor, mu = state
+        tau = (j % ctx.m) + 1
+        x_stale = hist[(j - tau) % ctx.m]
+        v = (problem.point_grad(x_stale, data.X[i], data.y[i])
+             - problem.point_grad(anchor, data.X[i], data.y[i]) + mu)
+        x_new = x - self.gamma * v
+        hist = hist.at[j % ctx.m].set(x_new)
+        anchor, mu = jax.lax.cond(
+            (j + 1) % self.anchor_every == 0,
+            lambda _: (x_new, problem.batch_grad(x_new, data.X, data.y)),
+            lambda _: (anchor, mu),
+            operand=None)
+        return (x_new, hist, anchor, mu)
+
+    def readout(self, ctx: SimContext, state):
+        return state[0]

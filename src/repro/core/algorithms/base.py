@@ -28,7 +28,10 @@ Class-level policy flags steer the engine without special cases:
   ``bucketed_default`` whether bucketed m-padding pays for this algorithm
   ``force_flat``       always one flat vmap (work independent of pad width)
   ``predictor``        which theory-side m_max predictor applies
-        ("sync" | "hogwild" | "dadm" — see `experiments.runner`)
+        (one of ``PREDICTOR_KINDS`` — see `experiments.runner`)
+  ``gamma_scale``      how much the algorithm amplifies its nominal step
+        size (momentum's 1/(1-beta)); generic harnesses multiply a step
+        size tuned for plain SGD by this before instantiating
 
 Register with :func:`register_algorithm`; the registry is *live* (latest
 registration wins) and spec fingerprints hash the registered source, so
@@ -53,7 +56,7 @@ import jax.numpy as jnp
 ALGORITHMS: Dict[str, Type["Algorithm"]] = {}
 
 #: predictor kinds an Algorithm may declare (resolved in experiments.runner)
-PREDICTOR_KINDS = ("sync", "hogwild", "dadm")
+PREDICTOR_KINDS = ("sync", "hogwild", "dadm", "momentum", "local_sgd", "svrg")
 
 
 def register_algorithm(cls: Type["Algorithm"]) -> Type["Algorithm"]:
@@ -103,6 +106,8 @@ class Algorithm:
     bucketed_default: ClassVar[bool] = True
     force_flat: ClassVar[bool] = False
     predictor: ClassVar[str] = "sync"
+    #: effective-step amplification a generic harness should divide out
+    gamma_scale: ClassVar[float] = 1.0
 
     # -- randomness ---------------------------------------------------------
     def make_draws(self, key, n: int, iters: int, m_top: int):

@@ -1,0 +1,73 @@
+"""Local SGD / EASGD under the PCA: per-worker models, periodic averaging.
+
+Each of the m workers keeps its own model replica and takes one local SGD
+step per server iteration on its own sample; every ``sync_every``-th
+iteration the replicas are pulled toward their (live-worker) average:
+
+    x_i <- x_i - gamma g_i(x_i)                      every iteration
+    x_i <- x_i + averaging (x_bar - x_i)             when (t+1) % H == 0
+
+``averaging=1.0`` is plain local SGD (replicas collapse onto the mean);
+``averaging < 1`` is the EASGD elastic pull.  At ``sync_every=1`` every
+step starts from a shared average of equal replicas, so the update is
+exactly mini-batch SGD (Alg 2) up to reduction order — the conformance
+suite pins that equivalence.
+
+The sync window H is the second knob of the critical-parameter surface
+(Stich, arXiv 1805.09767): communication is paid once per H local steps,
+so the per-iteration parallel cost divides by H and the m_max cliff moves
+*up* with the window — until replica drift over the window erases the
+variance gain.  Theory-side bound: `repro.analysis.fit.local_sgd_mmax`
+(predictor kind ``"local_sgd"``).
+
+Masking contract: the replica bank lives at the static pad width
+``(m_pad, d)``; padded rows step on their own (valid) draws but the sync
+average reduces through ``ctx.active`` and the readout does the same, so
+no padded value ever reaches a live row — the padded run is numerically
+the m-worker run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.algorithms.base import (Algorithm, SimContext,
+                                        register_algorithm)
+
+
+@register_algorithm
+@dataclasses.dataclass(frozen=True)
+class LocalSgd(Algorithm):
+    """m model replicas, one local point-gradient step each per server
+    iteration, masked-mean synchronization every ``sync_every`` steps."""
+
+    name: ClassVar[str] = "local_sgd"
+    bucketed_default: ClassVar[bool] = True      # replica bank is O(m_pad * d)
+    predictor: ClassVar[str] = "local_sgd"
+
+    gamma: float = 0.1
+    sync_every: int = 4
+    averaging: float = 1.0      # 1.0 = local SGD, <1 = EASGD elastic pull
+
+    def make_draws(self, key, n, iters, m_top):
+        # one sample per worker per iteration, same layout as Minibatch
+        return jax.random.randint(key, (iters, m_top), 0, n)
+
+    def init_state(self, problem, data, ctx: SimContext):
+        return jnp.zeros((ctx.m_pad, data.X.shape[1]))
+
+    def step(self, problem, data, ctx: SimContext, xs, idx, t):
+        gs = jax.vmap(
+            lambda xi, i: problem.point_grad(xi, data.X[i], data.y[i]))(xs, idx)
+        xs = xs - self.gamma * gs
+        # sync boundary: pull every replica toward the live-worker mean
+        avg = (ctx.active @ xs) / ctx.mf
+        pulled = xs + self.averaging * (avg[None, :] - xs)
+        return jnp.where((t + 1) % self.sync_every == 0, pulled, xs)
+
+    def readout(self, ctx: SimContext, xs):
+        return (ctx.active @ xs) / ctx.mf

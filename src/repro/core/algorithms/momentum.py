@@ -1,0 +1,72 @@
+"""Momentum mini-batch SGD (heavy-ball / Nesterov) under the PCA.
+
+Same parallelization as Alg 2 (m one-sample worker gradients averaged by
+the server per iteration, Fact 1: batch size IS the worker count), but the
+server applies the averaged gradient through a momentum buffer:
+
+    heavy-ball:  v_{t+1} = beta v_t - gamma g(x_t);        x_{t+1} = x_t + v_{t+1}
+    Nesterov:    v_{t+1} = beta v_t - gamma g(x_t + beta v_t)
+
+Momentum is the first knob of the critical-parameter surface (Stich et
+al., arXiv 2103.02351): the buffer geometrically averages ~1/(1-beta)
+past gradients, so part of the gradient-noise budget that batch
+parallelism would otherwise spend is already consumed — the variance-
+driven sqrt(m) gain saturates earlier, and the critical batch size moves
+*down* with beta.  The theory-side bound is
+`repro.analysis.fit.momentum_mmax` (predictor kind ``"momentum"``);
+sweeping ``gamma`` at fixed beta maps the lr axis of the surface
+(`critical_params` spec).
+
+Note the effective step size is gamma / (1 - beta): a gamma tuned for
+plain SGD is ~10x too large at beta=0.9.  ``gamma_scale`` declares that
+amplification to generic harnesses (the conformance suite scales its
+per-problem step sizes by it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import ClassVar
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.algorithms.base import (Algorithm, SimContext,
+                                        register_algorithm)
+
+
+@register_algorithm
+@dataclasses.dataclass(frozen=True)
+class Momentum(Algorithm):
+    """m parallel one-sample gradients averaged by the server, applied
+    through a heavy-ball (or Nesterov) momentum buffer each step."""
+
+    name: ClassVar[str] = "momentum"
+    bucketed_default: ClassVar[bool] = True      # work is O(m_pad * d)/step
+    predictor: ClassVar[str] = "momentum"
+    #: effective step is gamma/(1-beta) — generic drivers scale gamma by this
+    gamma_scale: ClassVar[float] = 0.1
+
+    gamma: float = 0.01
+    beta: float = 0.9
+    nesterov: bool = False
+
+    def make_draws(self, key, n, iters, m_top):
+        # identical layout to Minibatch: sweep member m reads the first m
+        # worker columns in any bucket / execution mode
+        return jax.random.randint(key, (iters, m_top), 0, n)
+
+    def init_state(self, problem, data, ctx: SimContext):
+        d = data.X.shape[1]
+        return (jnp.zeros((d,)), jnp.zeros((d,)))    # (model, velocity)
+
+    def step(self, problem, data, ctx: SimContext, state, idx, t):
+        x, v = state
+        x_eval = x + self.beta * v if self.nesterov else x
+        g = problem.masked_batch_grad(x_eval, data.X[idx], data.y[idx],
+                                      ctx.active, ctx.mf)
+        v_new = self.beta * v - self.gamma * g
+        return (x + v_new, v_new)
+
+    def readout(self, ctx: SimContext, state):
+        return state[0]

@@ -20,6 +20,11 @@ complete, hashable description of a paper experiment:
                           replicates, cost readouts, and predictions —
                           the input of `repro.analysis.fit`'s
                           characters -> m_max regression
+  ``critical_params``     the critical-parameter surface: momentum lr x
+                          local-SGD sync window x async-SVRG anchor
+                          period, each knob swept at two dataset-character
+                          settings — does the m_max cliff move with the
+                          knob AND the characters?
 
 Use :func:`get_spec` / :data:`SPEC_IDS`; ``iters`` / ``n`` / ``seeds``
 overrides thread through for fast smoke runs (``seeds`` replaces the
@@ -226,6 +231,66 @@ def _character_surface(quick=False, iters: Optional[int] = None,
         n_seeds=3 if quick else 8).validate()
 
 
+def _critical_params(quick=False, iters: Optional[int] = None,
+                     n: Optional[int] = None) -> SweepSpec:
+    """The critical-parameter surface (ROADMAP item 4, Stich arXiv
+    2103.02351 / Zhang arXiv 1508.01633): for each of the three
+    critical-parameter algorithms, sweep its critical knob — the momentum
+    step size (lr axis), the local-SGD sync window, the async-SVRG anchor
+    period — over TWO `character_knob` settings (low variance + heavy
+    duplication vs high variance, full density, all-unique).  The worker
+    grid is the batch axis for the synchronous pair and the staleness axis
+    (tau_max = m) for async-SVRG.  Every cell costs and predicts, so the
+    report can show the m_max cliff moving BOTH with the knob and with the
+    dataset characters — the paper's thesis extended across optimizer
+    classes.
+
+    Knob labels disambiguate same-cell jobs (`JobSpec.label`); momentum
+    gammas are pre-divided by 1/(1-beta) (see `Momentum.gamma_scale`).
+    """
+    iters = iters if iters is not None else (400 if quick else 1200)
+    n = n if n is not None else (512 if quick else 1536)
+    datasets = {
+        "lo_char": DatasetSpec(
+            "character_knob",
+            {"n": n, "d": 48, "variance": 0.25, "density": 0.5,
+             "duplication": 0.75}),
+        "hi_char": DatasetSpec(
+            "character_knob",
+            {"n": n, "d": 48, "variance": 4.0, "density": 1.0,
+             "duplication": 0.0}),
+    }
+    gammas = (0.005, 0.02) if quick else (0.005, 0.01, 0.02)
+    windows = (1, 8) if quick else (1, 4, 16)
+    anchors = (25, 200) if quick else (25, 100, 400)
+    jobs = []
+    for ds in datasets:
+        for g in gammas:
+            jobs.append(JobSpec("momentum", ds, {"gamma": g},
+                                predict=True, label=f"g{g}"))
+        for w in windows:
+            jobs.append(JobSpec("local_sgd", ds,
+                                {"gamma": 0.1, "sync_every": w},
+                                predict=True, label=f"H{w}"))
+        for h in anchors:
+            jobs.append(JobSpec("async_svrg", ds,
+                                {"gamma": 0.1, "anchor_every": h},
+                                predict=True, label=f"A{h}"))
+    return SweepSpec(
+        name="critical_params",
+        description="critical-parameter surface: momentum lr x local-SGD "
+                    "sync window x async-SVRG anchor period, per dataset "
+                    "character setting",
+        ms=(1, 2, 4, 8) if quick else (1, 2, 4, 8, 16),
+        iters=iters, eval_every=iters // 10,
+        datasets=datasets, jobs=tuple(jobs),
+        epsilon=EpsilonSpec(probe_m=2, frac=0.7),
+        # duplicates tile after the unique head — measure every row (see
+        # _character_surface)
+        characters_rows=n,
+        n_seeds=3 if quick else 8).validate()
+
+
 _BUILDERS = {
     "variance_sparsity": _variance_sparsity,
     "diversity": _diversity,
@@ -234,6 +299,7 @@ _BUILDERS = {
     "scalability_study": _scalability_study,
     "problem_generality": _problem_generality,
     "character_surface": _character_surface,
+    "critical_params": _critical_params,
 }
 
 SPEC_IDS = sorted(_BUILDERS)

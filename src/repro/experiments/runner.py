@@ -40,6 +40,7 @@ artifacts are byte-identical whichever mesh computed them.
 
 from __future__ import annotations
 
+import inspect
 import math
 import time
 import warnings
@@ -65,7 +66,21 @@ _PREDICTORS = {
     "hogwild": fit_mod.predict_hogwild_mmax,
     "sync": fit_mod.predict_sync_mmax,
     "dadm": fit_mod.predict_dadm_mmax,
+    "momentum": fit_mod.predict_momentum_mmax,
+    "local_sgd": fit_mod.predict_local_sgd_mmax,
+    "svrg": fit_mod.predict_svrg_mmax,
 }
+
+
+def _predict(predictor: str, X, job_kwargs: Dict) -> Dict:
+    """Run the theory-side predictor, forwarding exactly the job
+    hyperparameters its signature accepts (momentum's beta, local SGD's
+    sync_every, async-SVRG's anchor_every) — the critical-parameter specs
+    sweep those knobs, and the prediction must move with them."""
+    fn = _PREDICTORS[predictor]
+    accepted = inspect.signature(fn).parameters
+    hints = {k: v for k, v in job_kwargs.items() if k in accepted}
+    return fn(X, **hints)
 
 #: row cap for the always-on dataset-characters report (the §IV indices are
 #: O(rows^2)-ish through the LS scans; specs override via characters_rows)
@@ -196,7 +211,7 @@ def run_sweep(spec: SweepSpec, *, use_cache: bool = True, force: bool = False,
             X = datasets[job.dataset].X
             if job.predict_rows > 0:
                 X = X[:job.predict_rows]
-            jr["predicted"] = _PREDICTORS[alg_cls.predictor](X)
+            jr["predicted"] = _predict(alg_cls.predictor, X, job.kwargs)
 
         result["jobs"][job.key] = jr
 

@@ -121,15 +121,21 @@ class JobSpec:
     predict: bool = False                # run the theory-side m_max predictor
     predict_rows: int = 0                # rows of X fed to it (0 = all)
     problem: str = "logistic"            # key in the Problem registry
+    #: disambiguator for specs that place the same (algorithm, problem,
+    #: dataset) cell at several hyperparameter points (the critical_params
+    #: knob grids); None keeps every legacy key byte-identical
+    label: Optional[str] = None
 
     @property
     def key(self) -> str:
         # legacy "<algorithm>/<dataset>" for the paper's logistic jobs, so
         # every existing JSON/CSV consumer keeps its keys; non-default
         # problems are spelled out
+        algo = (self.algorithm if self.label is None
+                else f"{self.algorithm}[{self.label}]")
         if self.problem == "logistic":
-            return f"{self.algorithm}/{self.dataset}"
-        return f"{self.algorithm}+{self.problem}/{self.dataset}"
+            return f"{algo}/{self.dataset}"
+        return f"{algo}+{self.problem}/{self.dataset}"
 
     def validate(self):
         alg_base.get_algorithm(self.algorithm)     # raises KeyError
@@ -195,6 +201,13 @@ class SweepSpec:
             job.validate()
             if job.dataset not in self.datasets:
                 raise KeyError(f"job {job.key!r} references unknown dataset")
+        keys = [job.key for job in self.jobs]
+        if len(set(keys)) != len(keys):
+            dupes = sorted({k for k in keys if keys.count(k) > 1})
+            raise ValueError(
+                f"spec {self.name!r}: duplicate job keys {dupes} — jobs "
+                f"sharing a (algorithm, problem, dataset) cell need "
+                f"distinct JobSpec.label values")
         return self
 
     # -- serialization ------------------------------------------------------
@@ -257,6 +270,11 @@ def computational_dict(spec: SweepSpec) -> Dict:
     d = spec.to_dict()
     for field in EXECUTION_ONLY_FIELDS:
         d.pop(field, None)
+    # an unset job label is identity-neutral: dropping it keeps every
+    # pre-label spec's fingerprint (and cached artifact) byte-identical
+    for job in d["jobs"]:
+        if job.get("label") is None:
+            job.pop("label", None)
     return d
 
 

@@ -99,9 +99,14 @@ def sparse_split():
     (run_hogwild, {"m": 4}),
     (run_minibatch, {"batch_size": 4}),
     pytest.param(run_ecd_psgd, {"m": 4}, marks=pytest.mark.xfail(
-        strict=False,
-        reason="pre-existing seed failure (ISSUE 2): ECD-PSGD does not "
-               "descend on the dense split at m=4 within this budget")),
+        strict=True,
+        reason="root-caused (ISSUE 6): ECD-PSGD's z-extrapolation range "
+               "grows ~t*gamma, so stochastic-quantization noise "
+               "(~ range * 2^-bits, injected with weight 2/t) settles at a "
+               "constant floor ~ gamma * 2^-bits that exceeds this split's "
+               "optimality gap at gamma=0.1 / 8 bits — faithful algorithm "
+               "behaviour at an aggressive operating point, not an engine "
+               "bug; see test_ecd_psgd_quantization_noise_floor")),
     (run_dadm, {"m": 4}),
 ])
 def test_algorithms_decrease_loss(dense_split, runner, kw):
@@ -109,6 +114,61 @@ def test_algorithms_decrease_loss(dense_split, runner, kw):
     r = runner(tr, te, iters=1500, eval_every=100, **kw)
     assert r["losses"][-1] < r["losses"][0]
     assert np.isfinite(r["losses"]).all()
+
+
+def test_ecd_psgd_quantization_noise_floor(dense_split):
+    """Regression pin for the strict xfail above: the non-descent is the
+    step-size x quantization interaction, so shrinking the noise floor on
+    EITHER axis — more bits at the same gamma, or a smaller gamma at the
+    same bits — restores descent on the identical split/seed/budget."""
+    tr, te = dense_split
+    kw = dict(m=4, iters=1500, eval_every=100)
+    at_fault = run_ecd_psgd(tr, te, gamma=0.1, compress_bits=8, **kw)
+    finer = run_ecd_psgd(tr, te, gamma=0.1, compress_bits=16, **kw)
+    smaller = run_ecd_psgd(tr, te, gamma=0.02, compress_bits=8, **kw)
+    # the failing point descends mid-run then wanders at its noise floor
+    assert min(at_fault["losses"]) < at_fault["losses"][0]
+    assert not at_fault["losses"][-1] < at_fault["losses"][0]
+    for fixed in (finer, smaller):
+        assert fixed["losses"][-1] < fixed["losses"][0]
+        assert fixed["losses"][-1] < at_fault["losses"][-1]
+
+
+def test_ecd_psgd_divergence_envelope():
+    """Enforce the documented ECD-PSGD exemption (docs/distributed.md):
+    stochastic quantization makes every execution-mode comparison chaotic
+    at long horizons — but inside a measured envelope.  At 60 iterations
+    the modes agree essentially exactly; by 120+ the same ulp-level
+    reconvergence noise is amplified to the ~1e-2 class, and no further.
+    A blow-up past the envelope (or a silent return to exactness after an
+    engine change that skirts the quantizer) fails this pin."""
+    from repro.experiments import engine
+
+    key = jax.random.PRNGKey(0)
+    ds = synth.make_higgs_like(key, n=160, d=10)
+    tr, te = ds.split(key=key)
+    ms = [1, 2, 4, 8]
+
+    def modes(iters):
+        kw = dict(iters=iters, eval_every=20, key=key)
+        b = engine.run_algorithm_sweep("ecd_psgd", tr, te, ms,
+                                       bucketed=True, **kw)
+        f = engine.run_algorithm_sweep("ecd_psgd", tr, te, ms,
+                                       bucketed=False, **kw)
+        s = engine.run_algorithm_sweep("ecd_psgd", tr, te, ms,
+                                       use_vmap=False, **kw)
+        return (np.asarray(b["losses"]), np.asarray(f["losses"]),
+                np.asarray(s["losses"]))
+
+    b60, f60, s60 = modes(60)
+    # short horizon: bucketed==flat to float32 ulps, sequential near-exact
+    np.testing.assert_allclose(b60, f60, rtol=0, atol=1e-6)
+    np.testing.assert_allclose(f60, s60, rtol=0, atol=1e-3)
+
+    b120, f120, s120 = modes(120)
+    for a, b in ((b120, f120), (f120, s120)):
+        assert np.isfinite(a).all() and np.isfinite(b).all()
+        assert np.abs(a - b).max() <= 2e-2    # the documented ~1e-2 class
 
 
 @pytest.mark.slow

@@ -1,0 +1,94 @@
+"""Property-based sweep invariants over randomly-shaped small SweepSpecs.
+
+Each generated example builds ONE spec carrying a job for EVERY registered
+algorithm (so a future registration is covered with zero edits here) with
+a randomly drawn worker grid, seed-replicate count, and iteration budget,
+then asserts the two engine-wide contracts the rest of the repo leans on:
+
+  * **cache roundtrip** — a fresh `run_sweep` followed by a second call is
+    a disk hit with byte-identical curves, and the persisted artifact
+    carries no volatile per-run keys;
+  * **mesh invariance** — recomputing the same spec under an explicit
+    1-device mesh (`resolve`'s sharded entry path, vs the ``mesh=None``
+    unsharded default) reproduces every curve bit-exactly, so the mesh
+    can never split the cache.
+
+Strategies come through `tests/_hypothesis_compat.py`: real hypothesis
+when installed, a deterministic parametrize fallback otherwise.
+"""
+
+import dataclasses
+import json
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.algorithms import base as alg_base
+from repro.distributed import mesh as dist_mesh
+from repro.experiments import (DatasetSpec, JobSpec, SweepSpec, run_sweep)
+from repro.experiments import cache as artifact_cache
+from repro.experiments import spec as spec_mod
+
+pytestmark = pytest.mark.slow
+
+GRIDS = ((1, 2), (1, 2, 4), (2, 4, 8))
+
+
+def _job(algo):
+    """Per-algorithm job with a problem-stable step size iff it takes one
+    (registry-derived, like the conformance suite's `_alg_kwargs`)."""
+    cls = alg_base.ALGORITHMS[algo]
+    fields = {f.name for f in dataclasses.fields(cls)}
+    kw = {"gamma": 0.1 * cls.gamma_scale} if "gamma" in fields else {}
+    return JobSpec(algo, "d0", kw)
+
+
+def _spec(grid_id, n_seeds, iters):
+    return SweepSpec(
+        name=f"prop_g{grid_id}_s{n_seeds}_i{iters}",
+        ms=GRIDS[grid_id], iters=iters, eval_every=20,
+        datasets={"d0": DatasetSpec("higgs_like", {"n": 120, "d": 8})},
+        jobs=tuple(_job(a) for a in sorted(alg_base.ALGORITHMS)),
+        n_seeds=n_seeds).validate()
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, len(GRIDS) - 1), st.integers(1, 2),
+       st.sampled_from((40, 60)))
+def test_random_spec_cache_roundtrip_and_mesh_invariance(
+        grid_id, n_seeds, iters):
+    spec = _spec(grid_id, n_seeds, iters)
+    with tempfile.TemporaryDirectory() as td:
+        fresh = run_sweep(spec, cache_dir=td)
+        assert fresh["cache"]["hit"] is False
+
+        # roundtrip: second call is a pure disk read, curves identical
+        hit = run_sweep(spec, cache_dir=td)
+        assert hit["cache"]["hit"] is True
+        for key, jr in fresh["jobs"].items():
+            np.testing.assert_array_equal(
+                np.asarray(jr["losses"]), np.asarray(hit["jobs"][key]["losses"]))
+
+        # the artifact on disk is execution-clean
+        path = artifact_cache.artifact_path(td, spec.name,
+                                            spec_mod.fingerprint(spec))
+        assert os.path.exists(path)
+        with open(path) as f:
+            stored = json.load(f)
+        for volatile in artifact_cache.VOLATILE_KEYS:
+            assert volatile not in stored
+
+        # mesh invariance: an explicit 1-device mesh recomputes the same
+        # bytes the unsharded default produced
+        meshed = run_sweep(spec, cache_dir=td, force=True,
+                           mesh=dist_mesh.get_mesh(1))
+        assert meshed["cache"]["hit"] is False
+        for key, jr in fresh["jobs"].items():
+            np.testing.assert_array_equal(
+                np.asarray(jr.get("losses_seeds", jr["losses"])),
+                np.asarray(meshed["jobs"][key].get("losses_seeds",
+                                                   meshed["jobs"][key]["losses"])))

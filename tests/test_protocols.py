@@ -36,7 +36,15 @@ GAMMAS = {"logistic": 0.1, "ridge": 0.01, "hinge": 0.05}
 
 
 def _alg_kwargs(algo, prob):
-    return {} if algo == "dadm" else {"gamma": GAMMAS[prob]}
+    """Per-pair kwargs derived purely from the registry entry: pass the
+    problem-stable step size iff the algorithm takes one, scaled by the
+    algorithm's declared effective-step amplification (``gamma_scale``) —
+    future registrations are covered with zero edits here."""
+    cls = alg_base.ALGORITHMS[algo]
+    fields = {f.name for f in dataclasses.fields(cls)}
+    if "gamma" not in fields:
+        return {}
+    return {"gamma": GAMMAS[prob] * cls.gamma_scale}
 
 
 @pytest.fixture(scope="module")
@@ -126,24 +134,33 @@ def test_registry_rejects_malformed_entries():
 # fingerprints track the registries
 # ---------------------------------------------------------------------------
 
-def _tiny_spec(**job_kw):
+def _tiny_spec(algo="minibatch", **job_kw):
     return SweepSpec(
         name="proto_fp", ms=(1, 2), iters=40, eval_every=20,
         datasets={"d0": DatasetSpec("higgs_like", {"n": 120, "d": 8})},
-        jobs=(JobSpec("minibatch", "d0", **job_kw),)).validate()
+        jobs=(JobSpec(algo, "d0", **job_kw),)).validate()
 
 
-def test_fingerprint_tracks_algorithm_registry():
-    spec = _tiny_spec()
+@pytest.mark.parametrize("algo", ALGOS)
+def test_fingerprint_tracks_algorithm_registry(algo):
+    """Re-registering ANY algorithm with different source must orphan
+    exactly the cached sweeps that reference it."""
+    spec = _tiny_spec(algo)
     fp0 = fingerprint(spec)
-    orig = alg_base.ALGORITHMS["minibatch"]
+    orig = alg_base.ALGORITHMS[algo]
 
-    class PatchedMinibatch(orig):
+    class Patched(orig):
         """Same name, different source — must orphan cached sweeps."""
 
     try:
-        alg_base.register_algorithm(PatchedMinibatch)
+        alg_base.register_algorithm(Patched)
         assert fingerprint(spec) != fp0
+        # other algorithms' specs are untouched by this re-registration
+        others = [a for a in ALGOS if a != algo]
+        if others:
+            fp_other = fingerprint(_tiny_spec(others[0]))
+            alg_base.register_algorithm(orig)
+            assert fingerprint(_tiny_spec(others[0])) == fp_other
     finally:
         alg_base.register_algorithm(orig)
     assert fingerprint(spec) == fp0
@@ -259,10 +276,14 @@ def test_new_problem_and_dataset_full_pipeline(tmp_path):
 
 
 def test_cli_lists_registries(capsys):
+    """--list enumerates the live registries, so any registered algorithm,
+    problem, generator, or named spec shows up with zero CLI edits."""
+    from repro.experiments.registry import SPEC_IDS
+
     assert cli.main(["--list"]) == 0
     out = capsys.readouterr().out
-    for name in ("ridge", "hinge", "logistic", "label_noise", "heavy_tailed",
-                 "minibatch", "ecd_psgd", "problem_generality"):
+    for name in (list(alg_base.ALGORITHMS) + list(problems_mod.PROBLEMS)
+                 + ["label_noise", "heavy_tailed"] + list(SPEC_IDS)):
         assert name in out
 
 
