@@ -253,13 +253,18 @@ REGRESSION_FEATURES = ("log10_variance", "sparsity", "diversity_ratio")
 
 def collect_character_points(results: Iterable[Dict]) -> List[Dict]:
     """Harvest (characters, m_max) points from `run_sweep` results — every
-    job with a cost readout contributes one point, using the bootstrap
-    point estimate when the job carries seed replicates and the scalar
-    seed-0 bound otherwise."""
+    *healthy* job with a cost readout contributes one point, using the
+    bootstrap point estimate when the job carries seed replicates and the
+    scalar seed-0 bound otherwise.  Diverged/failed jobs (the runner's
+    ``status`` field) are excluded — one NaN curve must not bend the
+    regression for its healthy neighbors."""
     points = []
     for result in results:
         eps = (result.get("spec") or {}).get("epsilon") or {}
         for key, jr in result.get("jobs", {}).items():
+            status = str(jr.get("status", "ok"))
+            if not (status == "ok" or status.startswith("retried")):
+                continue
             if "measured_m_max" not in jr:
                 continue
             ch = result["datasets"][jr["dataset"]].get("characters")

@@ -22,9 +22,16 @@ Sections:
      momentum lr x local-SGD sync window x async-SVRG anchor period, each
      at two dataset-character settings, with the per-knob m_max cliff and
      its character-driven shift spelled out.
-  4. **characters -> m_max regression** — fitted coefficients and R^2
+  4. **Fault tolerance** — the ``fault_tolerance`` spec: Hogwild! and
+     local SGD under seeded delivery-fault rates (straggle + sign-flip,
+     `repro.resilience.faults`) at the two character settings, with the
+     measured m_max degradation vs fault rate spelled out per cell —
+     the hi-variance, all-unique dataset collapses faster than the
+     duplicated lo-variance one (docs/robustness.md).
+  5. **characters -> m_max regression** — fitted coefficients and R^2
      across all cached sweeps (anything `run_sweep` ever stored in the
-     cache dir contributes points).
+     cache dir contributes points; diverged/failed jobs are excluded by
+     their ``status``).
 
 Results come from the artifact cache when fingerprints match (a report
 re-render is then pure formatting) or from a fresh run; ``--quick``,
@@ -51,7 +58,8 @@ from repro.experiments.spec import ENGINE_VERSION
 
 #: specs the report runs; upper_bound ships single-seed, so the report
 #: replicates it with this many seeds unless --seeds overrides
-REPORT_SPECS = ("upper_bound", "character_surface", "critical_params")
+REPORT_SPECS = ("upper_bound", "character_surface", "critical_params",
+                "fault_tolerance")
 DEFAULT_SEEDS = {"quick": 3, "full": 8}
 DEFAULT_OUT = os.path.join("results", "analysis_report.md")
 
@@ -241,9 +249,65 @@ def render_critical_params(result: Dict) -> List[str]:
     return lines + [""]
 
 
+def render_fault_tolerance(result: Dict) -> List[str]:
+    from repro.experiments.spec import JobSpec
+
+    probe_m, frac = _eps_of(result)
+    lines = ["## 4. Fault tolerance (`fault_tolerance`)", ""]
+    lines += ["Deterministic fault injection (`repro.resilience.faults`) "
+              "as a sweep axis: each cell runs under a seeded stream of "
+              "straggling (extra staleness, capped at tau = m) and "
+              "sign-flipped updates at the row's rate.  The fault seed is "
+              "pinned, so every cell is bit-reproducible and the seed "
+              "replicates share the fault schedule.  `measured` is the "
+              "bootstrap m_max point estimate; degradation is relative "
+              "to the same cell's clean (rate 0) run.", ""]
+    head = ["algorithm", "fault rate", "dataset", "var", "dup",
+            "status", "measured m_max [CI]", "vs clean"]
+    rows = []
+    # (algorithm, dataset) -> {rate: bootstrap m_max}, spec job order
+    cells: Dict[tuple, Dict[float, int]] = {}
+    for j in result["spec"]["jobs"]:
+        key = JobSpec(**j).key
+        jr = result["jobs"][key]
+        ds = result["spec"]["datasets"][jr["dataset"]]["kwargs"]
+        rate = float((j["kwargs"].get("fault") or {})
+                     .get("straggle_rate", 0.0))
+        status = str(jr.get("status", "ok"))
+        if status == "ok" or status.startswith("retried"):
+            boot = stats.mmax_bootstrap(jr, probe_m=probe_m, frac=frac)
+            cell = cells.setdefault((j["algorithm"], jr["dataset"]), {})
+            cell[rate] = boot["m_max"]
+            clean = cell.get(0.0)
+            vs = ("-" if not clean or rate == 0.0
+                  else f"{boot['m_max'] / clean:.0%}")
+            measured = _fmt_ci(boot["m_max"], boot["lo"], boot["hi"])
+        else:
+            # a diverged/failed cell still renders — as its status, not
+            # as a number pretending to be one
+            vs, measured = "-", "-"
+        rows.append([j["algorithm"], f"{rate:g}", jr["dataset"],
+                     f"{ds.get('variance', 1.0):g}",
+                     f"{ds.get('duplication', 0.0):g}",
+                     status, measured, vs])
+    lines += _table(head, rows)
+    lines += ["", "m_max degradation at the top fault rate (bootstrap "
+              "estimate, relative to the clean cell):", ""]
+    for (algo, ds_name), byrate in cells.items():
+        clean = byrate.get(0.0)
+        top = max(byrate)
+        if not clean or top == 0.0:
+            continue
+        kept = byrate[top] / clean
+        lines.append(f"- `{algo}` on `{ds_name}`: {clean} &#8594; "
+                     f"{byrate[top]} at rate {top:g} "
+                     f"({kept:.0%} of clean m_max)")
+    return lines + [""]
+
+
 def render_regression(results: List[Dict]) -> List[str]:
     points = fit.collect_character_points(results)
-    lines = ["## 4. characters &#8594; m_max regression", ""]
+    lines = ["## 5. characters &#8594; m_max regression", ""]
     reg = fit.characters_regression(points)
     if reg is None:
         return lines + [f"not enough cost-readout points "
@@ -328,6 +392,7 @@ def main(argv=None) -> int:
     lines += render_upper_bound(results["upper_bound"], svg=not args.no_svg)
     lines += render_character_surface(results["character_surface"])
     lines += render_critical_params(results["critical_params"])
+    lines += render_fault_tolerance(results["fault_tolerance"])
     lines += render_regression(load_cached_results(cache_dir))
 
     md = "\n".join(lines) + "\n"

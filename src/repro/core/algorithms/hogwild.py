@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import ClassVar
+from typing import ClassVar, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +40,7 @@ import jax.numpy as jnp
 from repro.core.algorithms.base import (Algorithm, SimContext,
                                         register_algorithm)
 from repro.core.algorithms.lr import lr_grad, test_logloss, LAMBDA
+from repro.resilience import faults
 
 
 @register_algorithm
@@ -50,7 +51,17 @@ class Hogwild(Algorithm):
     modulo the traced m, and the sample sequence is m-independent — so the
     engine sweeps the whole grid as ONE flat vmap (``force_flat``: the
     recurrence updates a single model, work is O(iters * d) regardless of
-    the pad width, so bucketing would only add compiles)."""
+    the pad width, so bucketing would only add compiles).
+
+    ``fault`` (a `repro.resilience.faults.FaultSpec` or its dict form)
+    injects update-delivery faults into the recurrence: a straggle event
+    deepens the staleness (``tau + straggle_rounds``, clamped to the
+    m-deep history), drop/duplicate scale the landing gradient by 0 / 2,
+    corruption rewrites it — all as traced transforms on an ``(iters,)``
+    event stream drawn once from the fault seed, so faulted sweeps vmap
+    and bucket exactly like unfaulted ones.  Zero-rate specs are
+    bit-exact with ``fault=None``.
+    """
 
     name: ClassVar[str] = "hogwild"
     asynchronous: ClassVar[bool] = True      # cost divides iters by m
@@ -59,21 +70,42 @@ class Hogwild(Algorithm):
     predictor: ClassVar[str] = "hogwild"
 
     gamma: float = 0.1
+    fault: Optional[faults.FaultSpec] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "fault", faults.resolve(self.fault))
 
     def make_draws(self, key, n, iters, m_top):
-        # identical draw to run_hogwild's: the sequence is m-independent
-        return jax.random.randint(key, (iters,), 0, n)
+        # identical draw to run_hogwild's: the sequence is m-independent.
+        # The fault stream is keyed from the FAULT seed, not the sweep
+        # key: faults are environment — every seed replicate faces the
+        # same schedule, so the seed axis keeps measuring sampling noise.
+        order = jax.random.randint(key, (iters,), 0, n)
+        if self.fault is None:
+            return order
+        return {"i": order,
+                "fault": faults.make_stream(self.fault, (iters,))}
 
     def init_state(self, problem, data, ctx: SimContext):
         d = data.X.shape[1]
         return (jnp.zeros((d,)), jnp.zeros((ctx.m_pad, d)))
 
-    def step(self, problem, data, ctx: SimContext, state, i, j):
+    def step(self, problem, data, ctx: SimContext, state, batch, j):
         x, hist = state
+        i = batch if self.fault is None else batch["i"]
         # stale model: the one from j - tau, tau = (j % m) + 1 (Thm 1)
         tau = (j % ctx.m) + 1
+        if self.fault is not None:
+            # straggler: the read is extra rounds stale, clamped to the
+            # m-deep history (identity when the event did not fire)
+            tau = jnp.minimum(
+                tau + faults.extra_staleness(self.fault, batch["fault"]),
+                ctx.m)
         x_stale = hist[(j - tau) % ctx.m]
         g = problem.point_grad(x_stale, data.X[i], data.y[i])
+        if self.fault is not None:
+            g = faults.corrupt(self.fault, g, batch["fault"]["corrupt"])
+            g = faults.delivery_scale(batch["fault"]) * g
         x_new = x - self.gamma * g
         return (x_new, hist.at[j % ctx.m].set(x_new))
 

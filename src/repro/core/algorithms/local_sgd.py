@@ -30,20 +30,32 @@ the m-worker run.
 from __future__ import annotations
 
 import dataclasses
-from typing import ClassVar
+from typing import ClassVar, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.algorithms.base import (Algorithm, SimContext,
                                         register_algorithm)
+from repro.resilience import faults
 
 
 @register_algorithm
 @dataclasses.dataclass(frozen=True)
 class LocalSgd(Algorithm):
     """m model replicas, one local point-gradient step each per server
-    iteration, masked-mean synchronization every ``sync_every`` steps."""
+    iteration, masked-mean synchronization every ``sync_every`` steps.
+
+    ``fault`` (`repro.resilience.faults.FaultSpec` / dict) injects
+    update-delivery faults: corruption rewrites a worker's local gradient
+    (the update stream), while drop / straggle / duplicate act on the sync
+    **messages** — a dropped or straggling worker's replica is excluded
+    from the average (weight 0) and is not pulled toward it (it missed
+    the sync), a duplicated one is counted twice.  The event stream is
+    ``(iters, m_top)`` — per (iteration, worker), sliced per bucket like
+    the sample draws — and zero-rate specs are bit-exact with
+    ``fault=None``.
+    """
 
     name: ClassVar[str] = "local_sgd"
     bucketed_default: ClassVar[bool] = True      # replica bank is O(m_pad * d)
@@ -52,21 +64,48 @@ class LocalSgd(Algorithm):
     gamma: float = 0.1
     sync_every: int = 4
     averaging: float = 1.0      # 1.0 = local SGD, <1 = EASGD elastic pull
+    fault: Optional[faults.FaultSpec] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "fault", faults.resolve(self.fault))
 
     def make_draws(self, key, n, iters, m_top):
-        # one sample per worker per iteration, same layout as Minibatch
-        return jax.random.randint(key, (iters, m_top), 0, n)
+        # one sample per worker per iteration, same layout as Minibatch;
+        # the fault stream is keyed from the FAULT seed (environment, not
+        # experiment randomness) — identical across seed replicates
+        idx = jax.random.randint(key, (iters, m_top), 0, n)
+        if self.fault is None:
+            return idx
+        return {"i": idx,
+                "fault": faults.make_stream(self.fault, (iters, m_top))}
 
     def init_state(self, problem, data, ctx: SimContext):
         return jnp.zeros((ctx.m_pad, data.X.shape[1]))
 
-    def step(self, problem, data, ctx: SimContext, xs, idx, t):
+    def step(self, problem, data, ctx: SimContext, xs, batch, t):
+        idx = batch if self.fault is None else batch["i"]
         gs = jax.vmap(
             lambda xi, i: problem.point_grad(xi, data.X[i], data.y[i]))(xs, idx)
+        if self.fault is not None:
+            gs = faults.corrupt(self.fault, gs, batch["fault"]["corrupt"])
         xs = xs - self.gamma * gs
-        # sync boundary: pull every replica toward the live-worker mean
-        avg = (ctx.active @ xs) / ctx.mf
-        pulled = xs + self.averaging * (avg[None, :] - xs)
+        if self.fault is None:
+            # sync boundary: pull every replica toward the live-worker mean
+            avg = (ctx.active @ xs) / ctx.mf
+            pulled = xs + self.averaging * (avg[None, :] - xs)
+        else:
+            f = batch["fault"]
+            # a straggler's message is as lost as a dropped one: both
+            # miss the sync window entirely
+            absent = jnp.maximum(f["drop"], f["straggle"])
+            # delivery-weighted mean: absent replicas weigh 0, duplicated
+            # ones 2; all-absent degrades to weight 1 (exact identity
+            # otherwise — the live-worker count is integer-valued)
+            wt = ctx.active * (1.0 - absent) * (1.0 + f["dup"])
+            avg = (wt @ xs) / jnp.maximum(wt.sum(), 1.0)
+            # absent workers are not pulled: they never saw the average
+            pulled = xs + self.averaging * (
+                (1.0 - absent)[:, None] * (avg[None, :] - xs))
         return jnp.where((t + 1) % self.sync_every == 0, pulled, xs)
 
     def readout(self, ctx: SimContext, xs):

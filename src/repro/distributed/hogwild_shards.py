@@ -42,6 +42,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.algorithms.lr import LAMBDA, lr_grad, test_logloss
 from repro.distributed import mesh as mesh_mod
+from repro.resilience import faults
 
 #: compile counter for the sharded racing mode — `scripts/bench_engine.py
 #: dist_worker` snapshots it around the race timing (the engine's own
@@ -49,12 +50,23 @@ from repro.distributed import mesh as mesh_mod
 JIT_CALLS = 0
 
 
-def _build_race(X, y, Xte, yte, dmesh, *, w, gamma, lam, sync_every):
-    """jitted ``(x0, samples, mask) -> losses`` racing step pipeline.
+def _build_race(X, y, Xte, yte, dmesh, *, w, gamma, lam, sync_every,
+                fspec=None):
+    """jitted ``(x0, samples, mask[, fstream]) -> losses`` racing pipeline.
 
     ``samples``: (n_evals, rounds_per_eval, D, w) sample indices, worker
     axis laid out over the mesh; ``mask``: (D, w) live-worker mask (0 for
     the padding workers that round ``m`` up to a multiple of ``D``).
+
+    ``fspec`` (a resolved `repro.resilience.faults.FaultSpec`) switches to
+    the faulted pipeline, which additionally takes ``fstream`` — the
+    per-(round, worker) fault events, sharded exactly like ``samples``.
+    A dropped update's gradient never enters its shard's local delta, so
+    the next ``psum`` reconcile genuinely never sees it: the message is
+    lost on the wire, not masked after the fact.  A straggle event makes
+    the worker read its shard's *round-start* model (one round extra
+    stale); corruption rewrites the gradient payload.  Zero-rate streams
+    are bit-exact with the unfaulted pipeline.
     """
     global JIT_CALLS
     axis = mesh_mod.SHARD_AXIS
@@ -103,11 +115,72 @@ def _build_race(X, y, Xte, yte, dmesh, *, w, gamma, lam, sync_every):
         (x, _, _), losses = jax.lax.scan(eval_block, carry0, samples)
         return x, losses
 
-    mapped = shard_map(
-        shard_fn, mesh=dmesh.mesh,
-        in_specs=(P(), P(None, None, mesh_mod.SHARD_AXIS, None),
-                  P(mesh_mod.SHARD_AXIS, None)),
-        out_specs=(P(), P()), check_rep=False)
+    def shard_fn_faulted(x0, samples, mask, fstream):
+        samples = samples[:, :, 0, :]            # local view: (E, R, w)
+        mask = mask[0]                           # (w,)
+        fstream = {k: v[:, :, 0, :] for k, v in fstream.items()}
+
+        def worker_step(carry, inp):
+            x_loc, b = carry
+            i, live, fd = inp
+            # a straggler read its shard's round-start model — one round
+            # of extra staleness on top of the race's own.  Both reads
+            # are evaluated and the GRADIENT is selected: a select on the
+            # model before `lr_grad` changes XLA's dot-reduction fusion
+            # and costs ~1 ulp/step vs the unfaulted pipeline, while the
+            # post-gradient select keeps zero-rate streams bit-exact.
+            g = jnp.where(fd["straggle"] > 0,
+                          lr_grad(b, X[i], y[i], lam),
+                          lr_grad(x_loc, X[i], y[i], lam))
+            g = faults.corrupt(fspec, g, fd["corrupt"])
+            # drop: the update never enters the local delta, so the next
+            # psum never sums it — a genuinely lost message; dup lands it
+            # twice; zero-rate scale is a computed exact 1.0
+            scale = faults.delivery_scale(fd)
+            return (x_loc - gamma * live * scale * g, b), None
+
+        def reconcile(args):
+            x_base, x_loc = args
+            x_sync = x_base + jax.lax.psum(x_loc - x_base, axis)
+            return x_sync, x_sync
+
+        def round_step(carry, inp):
+            s_round, f_round = inp
+            x_base, x_loc, r = carry
+            (x_loc, _), _ = jax.lax.scan(
+                worker_step, (x_loc, x_loc), (s_round, mask, f_round))
+            do = (r % sync_every) == (sync_every - 1)
+            x_base, x_loc = jax.lax.cond(do, reconcile,
+                                         lambda args: args,
+                                         (x_base, x_loc))
+            return (x_base, x_loc, r + 1), None
+
+        def eval_block(carry, inp):
+            samples_e, fstream_e = inp
+            carry, _ = jax.lax.scan(round_step, carry, (samples_e, fstream_e))
+            x_base, x_loc, r = carry
+            x_sync, _ = reconcile((x_base, x_loc))
+            return ((x_sync, x_sync, r),
+                    test_logloss(x_sync, Xte, yte))
+
+        carry0 = (x0, x0, jnp.zeros((), jnp.int32))
+        (x, _, _), losses = jax.lax.scan(eval_block, carry0,
+                                         (samples, fstream))
+        return x, losses
+
+    if fspec is None:
+        mapped = shard_map(
+            shard_fn, mesh=dmesh.mesh,
+            in_specs=(P(), P(None, None, mesh_mod.SHARD_AXIS, None),
+                      P(mesh_mod.SHARD_AXIS, None)),
+            out_specs=(P(), P()), check_rep=False)
+    else:
+        mapped = shard_map(
+            shard_fn_faulted, mesh=dmesh.mesh,
+            in_specs=(P(), P(None, None, mesh_mod.SHARD_AXIS, None),
+                      P(mesh_mod.SHARD_AXIS, None),
+                      P(None, None, mesh_mod.SHARD_AXIS, None)),
+            out_specs=(P(), P()), check_rep=False)
     JIT_CALLS += 1
     return jax.jit(mapped, donate_argnums=(0,))
 
@@ -116,7 +189,8 @@ def run_hogwild_sharded(train, test, *, m: int = 8, iters: int = 4000,
                         gamma: float = 0.1, lam: float = LAMBDA,
                         eval_every: int = 100, key=None,
                         mesh: mesh_mod.MeshLike = None,
-                        sync_every: int = 1) -> Dict:
+                        sync_every: int = 1,
+                        fault: "faults.FaultLike" = None) -> Dict:
     """Race ``m`` workers over the mesh's devices; returns a curve dict.
 
     Server-iteration accounting matches the oracle: ``iters`` total
@@ -125,8 +199,19 @@ def run_hogwild_sharded(train, test, *, m: int = 8, iters: int = 4000,
     round boundaries).  ``mesh`` resolves via `mesh.get_mesh` (auto =
     every device); workers pad up to a multiple of the device count with
     masked (inert) slots, so any ``m`` runs on any mesh.
+
+    ``fault`` (FaultSpec / dict / None) injects per-(round, worker)
+    delivery faults into the race — see :func:`_build_race`.  The event
+    stream is drawn at the race's ``(E, R, D, w)`` layout from the fault
+    seed; threefry draws depend only on the element count, so at
+    ``m == D * w`` it is flat-identical to the sequential oracle's
+    ``(iters,)`` stream — the engine's faulted Hogwild! with the same
+    spec is the parity oracle at ``sync_every=1`` (for delivery faults;
+    corruption parity additionally needs a gradient-linear corruption
+    model like ``sign_flip``).
     """
     dmesh = mesh_mod.get_mesh(mesh)
+    fspec = faults.resolve(fault)
     D = dmesh.n_devices
     if eval_every % m:
         raise ValueError(
@@ -146,10 +231,16 @@ def run_hogwild_sharded(train, test, *, m: int = 8, iters: int = 4000,
     mask = (jnp.arange(m_eff) < m).astype(jnp.float32).reshape(D, w)
 
     race = _build_race(train.X, train.y, test.X, test.y, dmesh,
-                       w=w, gamma=gamma, lam=lam, sync_every=sync_every)
+                       w=w, gamma=gamma, lam=lam, sync_every=sync_every,
+                       fspec=fspec)
     x0 = jnp.zeros((train.X.shape[1],))
-    x, losses = race(x0, samples, mask)
-    return {
+    if fspec is None:
+        x, losses = race(x0, samples, mask)
+    else:
+        fstream = faults.make_stream(
+            fspec, (n_evals, rounds_per_eval, D, w))
+        x, losses = race(x0, samples, mask, fstream)
+    out = {
         "algorithm": "hogwild_sharded",
         "m": m,
         "devices": D,
@@ -160,13 +251,17 @@ def run_hogwild_sharded(train, test, *, m: int = 8, iters: int = 4000,
         "x": x,
         "iters_per_worker": iters / m,
     }
+    if fspec is not None:
+        out["fault"] = fspec.to_dict()
+    return out
 
 
 def sweep_hogwild_sharded(train, test, ms: Sequence[int], *, iters: int,
                           eval_every: int, gamma: float = 0.1,
                           lam: float = LAMBDA, key=None,
                           mesh: mesh_mod.MeshLike = None,
-                          sync_every: int = 1) -> Dict:
+                          sync_every: int = 1,
+                          fault: "faults.FaultLike" = None) -> Dict:
     """Racing-mode m-grid (Python loop per m — this mode parallelizes over
     *devices*, not grid members; the engine's vmapped grid with the
     staleness oracle remains the cached, mesh-invariant default).
@@ -185,7 +280,7 @@ def sweep_hogwild_sharded(train, test, ms: Sequence[int], *, iters: int,
         curves.append(run_hogwild_sharded(
             train, test, m=int(m), iters=n_evals * ev, eval_every=ev,
             gamma=gamma, lam=lam, key=key, mesh=dmesh,
-            sync_every=sync_every)["losses"])
+            sync_every=sync_every, fault=fault)["losses"])
     return {
         "algorithm": "hogwild_sharded",
         "problem": "logistic",

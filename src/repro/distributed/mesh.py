@@ -25,6 +25,7 @@ must see 1 CPU device, not 512).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Sequence, Union
 
 import jax
@@ -78,16 +79,25 @@ class DeviceMesh:
 MeshLike = Union[None, str, int, DeviceMesh]
 
 
+#: one-shot flag for the over-subscription clamp warning — a sweep over
+#: many specs should say it once, not once per job (tests reset it)
+_CLAMP_WARNED = False
+
+
 def get_mesh(devices: MeshLike = None) -> DeviceMesh:
     """Resolve a sweep mesh from a ``--devices``-style request.
 
     ``None`` / ``"auto"`` take every available XLA device; an int takes
     the first ``devices`` of them (so 1 forces the single-device
-    fallback on any host); a :class:`DeviceMesh` passes through.  More
-    devices than exist is an error — on a CPU container, request them
-    via ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before*
-    the first jax import.
+    fallback on any host); a :class:`DeviceMesh` passes through.
+    Requesting more devices than exist **clamps to what the host has**
+    with a one-shot warning (graceful degradation: results are
+    mesh-invariant, so a spec tuned for an 8-device host still runs —
+    just slower — on a laptop); on a CPU container the full request can
+    be honored via ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    *before* the first jax import.
     """
+    global _CLAMP_WARNED
     if isinstance(devices, DeviceMesh):
         return devices
     avail = jax.devices()
@@ -98,11 +108,16 @@ def get_mesh(devices: MeshLike = None) -> DeviceMesh:
         if n < 1:
             raise ValueError(f"devices={devices!r} must be >= 1")
         if n > len(avail):
-            raise ValueError(
-                f"devices={n} requested but only {len(avail)} XLA device"
-                f"{'s' if len(avail) != 1 else ''} available; on CPU set "
-                f"XLA_FLAGS=--xla_force_host_platform_device_count={n} "
-                f"before the first jax import")
+            if not _CLAMP_WARNED:
+                warnings.warn(
+                    f"devices={n} requested but only {len(avail)} XLA "
+                    f"device{'s' if len(avail) != 1 else ''} available — "
+                    f"clamping to {len(avail)} (results are mesh-invariant; "
+                    f"on CPU set XLA_FLAGS=--xla_force_host_platform_"
+                    f"device_count={n} before the first jax import to honor "
+                    f"the request)", RuntimeWarning, stacklevel=2)
+                _CLAMP_WARNED = True
+            n = len(avail)
     return from_devices(avail[:n])
 
 

@@ -8,11 +8,20 @@ file, so a hit is always safe to reuse and repeated sweeps are free.
 
 Artifacts are **mesh-independent**: the fingerprint strips execution-only
 spec fields (`spec.EXECUTION_ONLY_FIELDS`) and :func:`store` strips the
-volatile per-run keys (`VOLATILE_KEYS`: the ``cache`` hit info and the
-``execution`` mesh report the runner attaches) before writing — so a sweep
-computed on an 8-device mesh writes the same artifact, under the same key,
-as the single-device run, and either one serves the other's lookups
-(tested in tests/test_distributed.py).
+volatile per-run keys (`VOLATILE_KEYS`: the ``cache`` hit info, the
+``execution`` mesh report, and the wall-clock ``elapsed_s`` the runner
+attaches) before writing — so a sweep computed on an 8-device mesh writes
+the same artifact, byte for byte, as the single-device run (and as a
+journal-resumed run, see docs/robustness.md), and either one serves the
+other's lookups (tested in tests/test_distributed.py).
+
+**Integrity** (docs/robustness.md): :func:`store` embeds a sha256
+``checksum`` of the canonical payload serialization; :func:`load`
+verifies it and **quarantines** artifacts that fail — bit-rotted or
+hand-mutated files are renamed to ``<path>.corrupt`` with a warning
+instead of being silently treated as a cache miss (or worse, served).
+Pre-checksum artifacts (no ``checksum`` key) still load unverified, so
+existing caches keep serving.
 
 The default directory is ``results/sweep_cache`` (override with the
 ``REPRO_SWEEP_CACHE`` environment variable or the ``cache_dir`` argument).
@@ -20,9 +29,11 @@ The default directory is ``results/sweep_cache`` (override with the
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import tempfile
+import warnings
 from typing import Dict, Optional
 
 DEFAULT_CACHE_DIR = os.environ.get(
@@ -30,22 +41,55 @@ DEFAULT_CACHE_DIR = os.environ.get(
 
 #: result keys describing one concrete run, not the computation — never
 #: persisted, re-attached fresh by the runner after every load/store
-VOLATILE_KEYS = ("cache", "execution")
+VOLATILE_KEYS = ("cache", "execution", "elapsed_s")
 
 
 def artifact_path(cache_dir: str, name: str, fp: str) -> str:
     return os.path.join(cache_dir, f"{name}-{fp[:16]}.json")
 
 
+def _payload_checksum(payload: Dict) -> str:
+    """sha256 of the canonical (sorted-key) serialization, ``checksum``
+    excluded.  JSON floats round-trip via shortest repr, so a parsed
+    payload re-serializes to the same canonical bytes — verification
+    after `json.load` is exact."""
+    body = {k: v for k, v in payload.items() if k != "checksum"}
+    return hashlib.sha256(
+        json.dumps(body, sort_keys=True, default=float).encode()).hexdigest()
+
+
+def _quarantine(path: str, reason: str) -> None:
+    corrupt = path + ".corrupt"
+    try:
+        os.replace(path, corrupt)
+    except OSError:
+        corrupt = path                      # couldn't move; report in place
+    warnings.warn(
+        f"sweep artifact {path} failed integrity verification ({reason}); "
+        f"quarantined to {corrupt} — the sweep will recompute",
+        RuntimeWarning, stacklevel=3)
+
+
 def load(cache_dir: str, name: str, fp: str) -> Optional[Dict]:
-    """Return the cached payload, or None on miss / unreadable artifact."""
+    """Return the cached payload, or None on miss.  Unparsable or
+    checksum-mismatching artifacts are quarantined (see module docs)."""
     path = artifact_path(cache_dir, name, fp)
     try:
         with open(path) as f:
-            payload = json.load(f)
-    except (OSError, json.JSONDecodeError):
+            raw = f.read()
+    except OSError:
         return None
-    if payload.get("fingerprint") != fp:      # stale / truncated artifact
+    try:
+        payload = json.loads(raw)
+    except json.JSONDecodeError:
+        _quarantine(path, "not parseable as JSON — truncated write?")
+        return None
+    if payload.get("fingerprint") != fp:      # foreign / stale artifact
+        return None
+    if "checksum" in payload and (
+            payload["checksum"] != _payload_checksum(payload)):
+        _quarantine(path, "payload checksum mismatch — bit rot or a "
+                          "hand-edited artifact")
         return None
     return payload
 
@@ -53,11 +97,13 @@ def load(cache_dir: str, name: str, fp: str) -> Optional[Dict]:
 def store(cache_dir: str, name: str, fp: str, payload: Dict) -> str:
     """Atomically write the payload; returns the artifact path.
     Volatile per-run keys (`VOLATILE_KEYS`) are stripped so the artifact
-    bytes do not depend on which mesh computed them."""
+    bytes do not depend on which mesh computed them (or how long it
+    took); a payload checksum is embedded for `load` to verify."""
     os.makedirs(cache_dir, exist_ok=True)
     path = artifact_path(cache_dir, name, fp)
     payload = {k: v for k, v in payload.items() if k not in VOLATILE_KEYS}
     payload["fingerprint"] = fp
+    payload["checksum"] = _payload_checksum(payload)
     fd, tmp = tempfile.mkstemp(dir=cache_dir, suffix=".tmp")
     try:
         with os.fdopen(fd, "w") as f:

@@ -358,9 +358,10 @@ def sweep_dadm(train, test, ms: Sequence[int], *, iters: int, eval_every: int,
 def sweep_hogwild(train, test, ms: Sequence[int], *, iters: int,
                   eval_every: int, gamma=0.1, lam=LAMBDA, key=None,
                   use_vmap=True, bucketed=True, n_seeds=1,
-                  problem="logistic", mesh=None) -> Dict:
+                  problem="logistic", mesh=None, fault=None) -> Dict:
     key = key if key is not None else jax.random.PRNGKey(0)
-    if not use_vmap and problem == "logistic" and n_seeds == 1:
+    if (fault is None and not use_vmap and problem == "logistic"
+            and n_seeds == 1):
         # Legacy per-m reference path (re-jits per m): the vmapped grid is
         # equivalence-tested against this, i.e. against the original
         # recurrence rather than against another padded kernel.
@@ -375,7 +376,8 @@ def sweep_hogwild(train, test, ms: Sequence[int], *, iters: int,
     del bucketed   # force_flat: work is O(iters * d) regardless of m_pad
     return sweep("hogwild", train, test, ms, iters=iters,
                  eval_every=eval_every, problem=problem, lam=lam, key=key,
-                 use_vmap=use_vmap, n_seeds=n_seeds, mesh=mesh, gamma=gamma)
+                 use_vmap=use_vmap, n_seeds=n_seeds, mesh=mesh, gamma=gamma,
+                 fault=fault)
 
 
 SWEEPERS = {

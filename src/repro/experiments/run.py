@@ -183,9 +183,10 @@ def main(argv=None) -> int:
             devices = int(devices)
         except ValueError:
             ap.error(f"--devices must be an int or 'auto', got {devices!r}")
-    # startup mesh report — best-effort: an unsatisfiable request (e.g.
-    # --devices 8 on a 1-device host) must still serve cached artifacts,
-    # so the mesh is only *resolved* by the runner, and only on a miss
+    # startup mesh report — best-effort: an over-subscribed request (e.g.
+    # --devices 8 on a 1-device host) clamps with a warning, and an
+    # otherwise-invalid one (--devices 0) must still serve cached
+    # artifacts, so the runner resolves the mesh only on a miss
     try:
         print(get_mesh(devices).describe())
     except ValueError as e:

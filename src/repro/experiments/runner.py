@@ -36,6 +36,16 @@ read.  The fresh/cached distinction is reported in ``result["cache"]``
 and the resolved device mesh in ``result["execution"]``; both are
 attached after loading and never persisted (`cache.VOLATILE_KEYS`), so
 artifacts are byte-identical whichever mesh computed them.
+
+Fault tolerance (docs/robustness.md): every finished job is appended to a
+crash journal (`repro.resilience.journal`) next to the artifact, so a
+sweep killed mid-run resumes from the completed jobs and still produces a
+byte-identical artifact; jobs that raise or diverge are retried with
+backoff (``max_retries``) and carry a structured ``status`` field
+("ok" / "retried:N" / "diverged" / "failed") instead of poisoning the
+epsilon/cost/predictor readouts — unhealthy jobs keep their curves (or a
+structured error stub) but are excluded from every derived quantity (see
+`job_is_healthy`).
 """
 
 from __future__ import annotations
@@ -58,6 +68,7 @@ from repro.experiments import cache as artifact_cache
 from repro.experiments import engine
 from repro.experiments import spec as spec_mod
 from repro.experiments.spec import SweepSpec
+from repro.resilience import journal as journal_mod
 
 #: theory-side m_max predictor per Algorithm.predictor kind — the
 #: vectorized `repro.analysis.fit` scans (the scalar while-loops in
@@ -103,6 +114,58 @@ def _epsilon_from_probe(job_result: Dict, eps_spec) -> float:
     return float(curve[idx])
 
 
+def job_is_healthy(job_result: Dict) -> bool:
+    """True when the job's curves are trustworthy inputs for readouts,
+    fits, and reports.  "ok" and "retried:N" (succeeded after transient
+    failure) are healthy; "diverged" and "failed" are not.  Artifacts
+    from before the status field default to healthy."""
+    status = str(job_result.get("status", "ok"))
+    return status == "ok" or status.startswith("retried")
+
+
+def _finite(job_result: Dict) -> bool:
+    return bool(np.isfinite(
+        job_result.get("losses_seeds", job_result["losses"])).all())
+
+
+def _run_job_with_retries(spec: SweepSpec, job, tr, te, dmesh, use_vmap: bool,
+                          max_retries: int, retry_backoff_s: float,
+                          verbose: bool):
+    """Run one job with bounded retry-with-backoff; returns
+    ``(job_result, status)``.  The engine is deterministic, so retries
+    target transient infrastructure failures (OOM, interrupted device
+    pools), not numerics — a curve that diverges twice is reported as
+    "diverged" with its curves intact, and a job whose every attempt
+    raised becomes a structured "failed" stub instead of killing the
+    sweep."""
+    last_exc: Optional[BaseException] = None
+    jr: Optional[Dict] = None
+    for attempt in range(max_retries + 1):
+        if attempt and retry_backoff_s > 0:
+            time.sleep(retry_backoff_s * (2 ** (attempt - 1)))
+        try:
+            jr = engine.run_algorithm_sweep(
+                job.algorithm, tr, te, spec.ms, iters=spec.iters,
+                eval_every=spec.eval_every, use_vmap=use_vmap,
+                problem=job.problem, n_seeds=spec.n_seeds, mesh=dmesh,
+                **job.kwargs)
+        except Exception as exc:  # noqa: BLE001 — one job must not kill the sweep
+            last_exc = exc
+            if verbose:
+                print(f"[{spec.name}] {job.key}: attempt {attempt + 1} "
+                      f"raised {type(exc).__name__}: {exc}")
+            continue
+        if _finite(jr):
+            return jr, ("ok" if attempt == 0 else f"retried:{attempt}")
+        if verbose:
+            print(f"[{spec.name}] {job.key}: attempt {attempt + 1} "
+                  f"produced non-finite curves")
+    if jr is not None:
+        return jr, "diverged"
+    return ({"algorithm": job.algorithm, "problem": job.problem,
+             "error": f"{type(last_exc).__name__}: {last_exc}"}, "failed")
+
+
 def _cost_readout(job_result: Dict, epsilon: float, asynchronous: bool):
     iters = job_result["iters"]
     costs = []
@@ -118,8 +181,9 @@ def _cost_readout(job_result: Dict, epsilon: float, asynchronous: bool):
 
 def run_sweep(spec: SweepSpec, *, use_cache: bool = True, force: bool = False,
               cache_dir: Optional[str] = None, use_vmap: bool = True,
-              verbose: bool = False,
-              mesh: "dist_mesh.MeshLike" = None) -> Dict:
+              verbose: bool = False, mesh: "dist_mesh.MeshLike" = None,
+              journal: bool = True, max_retries: int = 1,
+              retry_backoff_s: float = 0.25) -> Dict:
     """Execute (or fetch) the full sweep a spec describes.
 
     ``mesh`` (or, when absent, the spec's execution-only ``devices``
@@ -128,6 +192,13 @@ def run_sweep(spec: SweepSpec, *, use_cache: bool = True, force: bool = False,
     the mesh only changes where the arithmetic runs.  The resolved mesh
     is reported in ``result["execution"]`` (attached after load/store,
     never persisted — see `cache.VOLATILE_KEYS`).
+
+    ``journal=True`` (with ``use_cache``) appends every finished job to a
+    crash journal beside the artifact and, on a re-run after a crash,
+    replays journaled jobs instead of recomputing them — the resumed
+    artifact is byte-identical to an uninterrupted run's.  ``max_retries``
+    bounds the retry-with-backoff loop for jobs that raise or produce
+    non-finite curves (see `_run_job_with_retries`).
     """
     spec.validate()
     cache_dir = cache_dir or artifact_cache.DEFAULT_CACHE_DIR
@@ -146,6 +217,14 @@ def run_sweep(spec: SweepSpec, *, use_cache: bool = True, force: bool = False,
                                 "sharded": False,
                                 "backend": jax.default_backend()}
             return hit
+
+    jpath = journal_mod.journal_path(cache_dir, spec.name, fp)
+    journaled: Dict[str, Dict] = {}
+    if use_cache and journal and not force:
+        journaled = journal_mod.read_entries(jpath, fp)
+        if verbose and journaled:
+            print(f"[{spec.name}] resuming: {len(journaled)} job(s) "
+                  f"replayed from crash journal {jpath}")
 
     dmesh = dist_mesh.resolve(mesh if mesh is not None else spec.devices)
     execution = {
@@ -179,46 +258,64 @@ def run_sweep(spec: SweepSpec, *, use_cache: bool = True, force: bool = False,
         result["datasets"][name] = info
 
     for job in spec.jobs:
+        if job.key in journaled:
+            # crash-journal replay: the entry already carries readouts,
+            # predictions, and status — a JSON round-trip of exactly what
+            # an uninterrupted run would have put here
+            if verbose:
+                print(f"[{spec.name}] {job.key}: resumed from journal")
+            result["jobs"][job.key] = journaled[job.key]
+            continue
         if verbose:
             print(f"[{spec.name}] sweep {job.key} over m={list(spec.ms)}")
         alg_cls = alg_base.get_algorithm(job.algorithm)
         tr, te = splits[job.dataset]
-        jr = engine.run_algorithm_sweep(
-            job.algorithm, tr, te, spec.ms, iters=spec.iters,
-            eval_every=spec.eval_every, use_vmap=use_vmap,
-            problem=job.problem, n_seeds=spec.n_seeds, mesh=dmesh,
-            **job.kwargs)
+        jr, status = _run_job_with_retries(
+            spec, job, tr, te, dmesh, use_vmap,
+            max_retries, retry_backoff_s, verbose)
         jr["dataset"] = job.dataset
-        if not np.isfinite(jr.get("losses_seeds", jr["losses"])).all():
-            # diverged — usually a step size tuned for another objective's
-            # curvature (e.g. logistic gamma on ridge); surface it loudly
-            # instead of caching NaN readouts silently
+        jr["status"] = status
+        if status == "diverged":
+            # usually a step size tuned for another objective's curvature
+            # (e.g. logistic gamma on ridge); surface it loudly — the
+            # curves are kept but every readout below skips this job
             warnings.warn(
                 f"job {job.key!r}: non-finite loss curve — the step size "
                 f"is likely unstable for problem {job.problem!r} on this "
                 f"dataset; tune the job kwargs (see the problem_generality "
                 f"spec for per-problem gammas)", RuntimeWarning,
                 stacklevel=2)
+        elif status == "failed":
+            warnings.warn(
+                f"job {job.key!r}: failed after {max_retries + 1} "
+                f"attempt(s) — {jr['error']}; a structured stub is cached "
+                f"in its place", RuntimeWarning, stacklevel=2)
+        healthy = job_is_healthy(jr)
 
-        if spec.epsilon is not None:
+        if spec.epsilon is not None and healthy:
             eps = _epsilon_from_probe(jr, spec.epsilon)
             costs, gg, bound = _cost_readout(
                 jr, eps, asynchronous=alg_cls.asynchronous)
             jr.update(epsilon=eps, costs=costs, gain_growth=gg,
                       measured_m_max=int(bound))
 
-        if job.predict:
+        if job.predict and healthy:
             X = datasets[job.dataset].X
             if job.predict_rows > 0:
                 X = X[:job.predict_rows]
             jr["predicted"] = _predict(alg_cls.predictor, X, job.kwargs)
 
         result["jobs"][job.key] = jr
+        if use_cache and journal:
+            journal_mod.append_entry(jpath, fp, job.key, jr)
 
     result["elapsed_s"] = time.time() - t0
     path = None
     if use_cache:
         path = artifact_cache.store(cache_dir, spec.name, fp, result)
+        if journal:
+            # the artifact now supersedes the journal
+            journal_mod.consume(jpath)
     result["cache"] = {"hit": False, "path": path}
     result["execution"] = execution
     return result

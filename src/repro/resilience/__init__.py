@@ -1,0 +1,33 @@
+"""repro.resilience — faults as science, and an engine that survives them.
+
+Two halves (docs/robustness.md):
+
+  `faults`    :class:`FaultSpec` — a seeded, fingerprint-hashed description
+              of update-delivery faults (dropped / duplicated / straggling
+              updates, gradient corruption) realized as *pure traced
+              transforms* on the engine's pre-drawn update streams.  The
+              same spec drives the Hogwild! staleness oracle, local SGD's
+              sync average, and the true racing multi-device reconcile —
+              faulted sweeps vmap, bucket, and cache like any other job.
+  `journal`   per-job JSONL journaling for `runner.run_sweep`: every
+              completed job is appended atomically, so a sweep killed
+              mid-run resumes from the journal and still produces a
+              byte-identical final artifact.
+
+The determinism contract both halves build on: a fault stream is a
+function of ``FaultSpec.seed`` and the stream shape's element count only
+— never of the worker grid, the seed replicate, the mesh, or wall time —
+and every fault application is written so that zero-rate streams are
+**bit-exact** with the unfaulted code path (multiplies by a computed 1.0,
+``where`` on a computed all-False mask).
+"""
+
+from repro.resilience.faults import (FaultSpec, corrupt, delivery_scale,
+                                     make_stream, resolve)
+from repro.resilience.journal import (append_entry, consume, journal_path,
+                                      read_entries)
+
+__all__ = [
+    "FaultSpec", "resolve", "make_stream", "delivery_scale", "corrupt",
+    "journal_path", "append_entry", "read_entries", "consume",
+]

@@ -1,0 +1,170 @@
+"""Deterministic fault injection for parallel-training update streams.
+
+A :class:`FaultSpec` names four fault processes on the stream of worker
+updates — the delivery effects Keuper & Pfreundt (arXiv 1505.04956) show
+bound async scalability:
+
+  * **drop**      the update is lost: its gradient never lands
+                  (``drop_rate``);
+  * **duplicate** the update lands twice — a retransmission the dedup
+                  layer missed (``duplicate_rate``);
+  * **straggle**  the worker read an *extra-stale* model: its gradient
+                  was computed ``straggle_rounds`` rounds further in the
+                  past than the algorithm's own staleness already implies
+                  (``straggle_rate``);
+  * **corrupt**   the gradient payload is corrupted — ``sign_flip``
+                  (adversarial bit-flip of the direction) or ``quantize``
+                  (deterministic ``corrupt_bits``-bit rounding, the lossy
+                  compression model) (``corrupt_rate``).
+
+Faults are **environment, not randomness of the experiment**: every mask
+is drawn from ``PRNGKey(FaultSpec.seed)`` (one ``fold_in`` tag per fault
+kind), never from the engine's per-seed draw keys — so seed replicates of
+a sweep face the *same* fault schedule, and the seed axis keeps measuring
+sampling noise only.
+
+Determinism / parity contract (pinned in tests/test_resilience.py):
+
+  * a stream is a pure function of ``(spec.seed, shape)``; re-running a
+    faulted sweep is bit-reproducible;
+  * threefry draws depend only on the element *count*, so an ``(iters,)``
+    stream and an ``(E, R, D, w)`` stream with the same total count carry
+    identical events — the racing multi-device mode and the sequential
+    staleness oracle therefore see the SAME fault schedule, which is what
+    makes faulted results mesh-invariant;
+  * every application helper is IEEE-exact at zero rates: delivery scales
+    are a computed ``1.0`` and corruption is a ``where`` over a computed
+    all-False mask, so ``FaultSpec()`` (all rates 0) runs bit-identical
+    to the unfaulted code path even though it takes the faulted trace.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+#: corruption models a FaultSpec may name
+CORRUPT_KINDS = ("sign_flip", "quantize")
+
+#: fold_in tags, one independent threefry stream per fault process
+_TAGS = {"drop": 0, "dup": 1, "straggle": 2, "corrupt": 3}
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One fault environment: four event rates plus their parameters.
+
+    Rates are per-update probabilities in ``[0, 1]``.  The spec is a
+    frozen dataclass so it can live (as its :func:`to_dict` form) inside
+    ``JobSpec.kwargs`` — faulted jobs fingerprint-split the artifact
+    cache exactly like any other hyperparameter change.
+    """
+
+    drop_rate: float = 0.0
+    duplicate_rate: float = 0.0
+    straggle_rate: float = 0.0
+    straggle_rounds: int = 1          # extra staleness per straggle event
+    corrupt_rate: float = 0.0
+    corrupt_kind: str = "sign_flip"   # one of CORRUPT_KINDS
+    corrupt_bits: int = 8             # quantize: signed levels = 2^(bits-1)
+    seed: int = 0                     # the fault environment's own key
+
+    def validate(self) -> "FaultSpec":
+        for f in ("drop_rate", "duplicate_rate", "straggle_rate",
+                  "corrupt_rate"):
+            v = getattr(self, f)
+            if not 0.0 <= float(v) <= 1.0:
+                raise ValueError(f"FaultSpec.{f}={v!r} must be in [0, 1]")
+        if self.corrupt_kind not in CORRUPT_KINDS:
+            raise ValueError(f"FaultSpec.corrupt_kind={self.corrupt_kind!r} "
+                             f"not in {CORRUPT_KINDS}")
+        if self.straggle_rounds < 1:
+            raise ValueError(
+                f"FaultSpec.straggle_rounds={self.straggle_rounds} "
+                f"must be >= 1")
+        if self.corrupt_bits < 1:
+            raise ValueError(f"FaultSpec.corrupt_bits={self.corrupt_bits} "
+                             f"must be >= 1")
+        return self
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @property
+    def any_rate(self) -> float:
+        """Max event rate — 0.0 means the spec is a (bit-exact) no-op."""
+        return max(self.drop_rate, self.duplicate_rate,
+                   self.straggle_rate, self.corrupt_rate)
+
+
+FaultLike = Union[None, Dict, FaultSpec]
+
+
+def resolve(fault: FaultLike) -> Optional[FaultSpec]:
+    """``None`` passes through (no fault path at all); a dict — the
+    JSON-round-tripped ``JobSpec.kwargs`` form — becomes a validated
+    :class:`FaultSpec`; a spec validates and passes through."""
+    if fault is None:
+        return None
+    if isinstance(fault, FaultSpec):
+        return fault.validate()
+    if isinstance(fault, dict):
+        try:
+            return FaultSpec(**fault).validate()
+        except TypeError as e:
+            raise ValueError(f"bad fault dict {fault!r}: {e}") from None
+    raise TypeError(f"fault must be None, a dict, or a FaultSpec; "
+                    f"got {type(fault).__name__}")
+
+
+def make_stream(spec: FaultSpec, shape: Tuple[int, ...]) -> Dict:
+    """Draw the per-update event indicators for a whole run.
+
+    Returns ``{"drop", "dup", "straggle", "corrupt"}`` — float32 0/1
+    arrays of ``shape``, each from its own ``fold_in(PRNGKey(seed), tag)``
+    stream.  ``uniform() < rate`` makes a zero rate an all-zeros array by
+    construction (uniform draws live in ``[0, 1)``), which the apply
+    helpers below turn into bit-exact identity.
+    """
+    key = jax.random.PRNGKey(spec.seed)
+    rates = {"drop": spec.drop_rate, "dup": spec.duplicate_rate,
+             "straggle": spec.straggle_rate, "corrupt": spec.corrupt_rate}
+    return {name: (jax.random.uniform(jax.random.fold_in(key, tag), shape)
+                   < rates[name]).astype(jnp.float32)
+            for name, tag in _TAGS.items()}
+
+
+def delivery_scale(stream_slice: Dict):
+    """Multiplier a delivered update lands with: ``(1 - drop)(1 + dup)``
+    — 0 for a lost message, 2 for a duplicated one, and a computed
+    exact 1.0 when neither event fired (the zero-rate identity)."""
+    return (1.0 - stream_slice["drop"]) * (1.0 + stream_slice["dup"])
+
+
+def extra_staleness(spec: FaultSpec, stream_slice: Dict):
+    """int32 extra rounds of staleness a straggle event adds (0 when the
+    event did not fire)."""
+    return (stream_slice["straggle"] * spec.straggle_rounds).astype(jnp.int32)
+
+
+def corrupt(spec: FaultSpec, g, flag):
+    """Apply the spec's corruption model where ``flag`` fired.
+
+    ``flag`` broadcasts against ``g`` from the left (a per-worker flag
+    corrupts that worker's whole gradient row).  The un-fired branch is
+    ``g`` itself through ``jnp.where``, so a computed all-False mask is
+    bit-exact identity.
+    """
+    flag = jnp.asarray(flag)
+    while flag.ndim < jnp.ndim(g):
+        flag = flag[..., None]
+    if spec.corrupt_kind == "sign_flip":
+        bad = -g
+    else:   # quantize: deterministic symmetric rounding to 2^(bits-1) levels
+        levels = float(2 ** (spec.corrupt_bits - 1))
+        s = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12)
+        bad = jnp.round(g / s * levels) * (s / levels)
+    return jnp.where(flag > 0, bad, g)

@@ -8,6 +8,7 @@ import os
 import subprocess
 import sys
 import textwrap
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +18,7 @@ import pytest
 from repro.data import synth
 from repro.distributed import (element_plan, get_mesh, pad_to_multiple,
                                resolve, run_grid_sharded)
+from repro.distributed import mesh as mesh_mod
 from repro.experiments import engine
 from repro.experiments.spec import (DatasetSpec, JobSpec, SweepSpec,
                                     EXECUTION_ONLY_FIELDS, fingerprint)
@@ -37,8 +39,17 @@ def test_get_mesh_auto_and_overrides():
     assert resolve(one) is one                   # passthrough
     with pytest.raises(ValueError):
         get_mesh(0)
-    with pytest.raises(ValueError, match="xla_force_host_platform"):
-        get_mesh(len(jax.devices()) + 1)
+    # over-subscription clamps with a one-shot warning, never raises
+    # (graceful degradation — results are mesh-invariant anyway)
+    mesh_mod._CLAMP_WARNED = False
+    with pytest.warns(RuntimeWarning, match="clamping"):
+        clamped = get_mesh(len(jax.devices()) + 1)
+    assert clamped.n_devices == len(jax.devices())
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # second ask: silent (one-shot)
+        assert get_mesh(len(jax.devices()) + 5).n_devices == len(
+            jax.devices())
+    mesh_mod._CLAMP_WARNED = False
 
 
 # ---------------------------------------------------------------------------
@@ -145,9 +156,14 @@ def test_cache_hit_served_without_resolving_devices(tmp_path):
     big = dataclasses.replace(spec, devices=len(jax.devices()) + 7)
     r2 = runner.run_sweep(big, cache_dir=str(tmp_path))
     assert r2["cache"]["hit"] is True
-    # ...while a fresh compute with that request correctly fails
-    with pytest.raises(ValueError, match="devices"):
-        runner.run_sweep(big, cache_dir=str(tmp_path), force=True)
+    # ...and a fresh compute with that request degrades gracefully: the
+    # mesh clamps to the host (one-shot warning) instead of raising
+    mesh_mod._CLAMP_WARNED = False
+    with pytest.warns(RuntimeWarning, match="clamping"):
+        r3 = runner.run_sweep(big, cache_dir=str(tmp_path), force=True)
+    mesh_mod._CLAMP_WARNED = False
+    assert r3["cache"]["hit"] is False
+    assert r3["execution"]["devices"] == len(jax.devices())
 
 
 def test_sweep_hogwild_sharded_any_grid():
