@@ -1,5 +1,20 @@
 #!/usr/bin/env python
-"""Engine wall-clock benchmark — emits BENCH_7.json (perf-trajectory anchor).
+"""Engine wall-clock benchmark — emits BENCH_8.json (perf-trajectory anchor).
+
+PR 8 adds the advisor service (`repro.service`, docs/service.md).  The
+**service** section measures its three claims on this container: (a)
+*batched vs looped probe latency* — N dataset-character probes through
+the slot-batched front end (one masked-batch jitted call) against N
+sequential `from_dataset` calls, warm; (b) *dedup hit behavior* — N
+concurrent forced escalations sharing one SweepSpec fingerprint, with
+the executed-sweep count read off `runner.SWEEP_COMPUTES` (the claim is
+exactly 1); (c) the *analytic-tier answer fraction* on a mixed workload
+(raw high-confidence probes + spec-carrying forced escalations) — the
+early-exit rate that keeps heavy traffic off the sweep engine.  The
+**vs_bench7** block embeds BENCH_7's engine_default wall-clock for the
+non-regression comparison: the service is a new layer over the engine
+(`run_sweep` gained dedup/cache-cap paths that are no-ops by default),
+so the original 4-algorithm sweep must stay within noise.
 
 PR 7 adds crash-safe sweep execution (`repro.resilience`): the runner
 journals every completed job to an fsync'd sidecar so a killed sweep
@@ -85,7 +100,7 @@ changed relative to PR 1 (all still tracked):
    crossover honestly.
 
 jit caches are cleared between configurations so every timing includes
-its own compiles, as a cold run would.  Results land in BENCH_7.json at
+its own compiles, as a cold run would.  Results land in BENCH_8.json at
 the repo root so the perf trajectory is tracked from this PR onward.
 
 Usage:  PYTHONPATH=src python scripts/bench_engine.py [--quick]
@@ -414,6 +429,108 @@ def time_cache_roundtrip(ms, iters, eval_every, n, d):
     return fresh, cached
 
 
+def time_service(n_probes, n, d, sweep_iters, sweep_eval_every):
+    """PR-8 advisor service: batched vs looped probe latency, single-flight
+    escalation dedup, and the analytic-tier early-exit fraction.
+
+    Latency: N dataset-character probes through the slot-batched front
+    end (one masked-batch jitted call for all resident slots) vs N
+    sequential `ScalabilityAdvisor.from_dataset` calls, both warm (one
+    untimed warm-up each) — the claim is the batched path amortizing
+    per-probe dispatch, not a FLOP win.  Dedup: N threads force-escalate
+    the same SweepSpec fingerprint concurrently; `runner.SWEEP_COMPUTES`
+    must rise by exactly 1 (single-flight) and every waiter must get the
+    one stored artifact.  Mixed workload: raw high-confidence probes
+    answer at the analytic tier while spec-carrying forced escalations
+    go to the measured tier — the recorded fraction is the traffic the
+    service keeps off the sweep engine entirely."""
+    import threading
+
+    import numpy as np
+
+    from repro.core.advisor import ScalabilityAdvisor
+    from repro.experiments import runner as runner_mod
+    from repro.service.api import AdvisorService, ProbeRequest
+
+    keys = jax.random.split(jax.random.PRNGKey(42), n_probes)
+    Xs = [np.asarray(synth.make_higgs_like(k, n=n, d=d).X) for k in keys]
+    out = {"config": {"n_probes": n_probes, "n": n, "d": d,
+                      "sweep_ms": [1, 2, 4], "sweep_iters": sweep_iters}}
+    with tempfile.TemporaryDirectory() as cache_dir:
+        svc = AdvisorService(cache_dir=cache_dir, sweep_ms=(1, 2, 4),
+                             sweep_iters=sweep_iters,
+                             sweep_eval_every=sweep_eval_every)
+        adv = ScalabilityAdvisor()
+        svc.probe(ProbeRequest(X=Xs[0]))     # warm the batched envelope
+        adv.from_dataset(Xs[0])              # warm the scalar path
+        t0 = time.perf_counter()
+        batched_resp = svc.probe_batch([ProbeRequest(X=X) for X in Xs])
+        batched = time.perf_counter() - t0
+        assert all(r.status == "ok" for r in batched_resp)
+        t0 = time.perf_counter()
+        for X in Xs:
+            adv.from_dataset(X)
+        looped = time.perf_counter() - t0
+        out["probe_latency"] = {
+            "batched_s": batched, "looped_s": looped,
+            "speedup": looped / max(batched, 1e-9)}
+
+        # N concurrent forced escalations of one fingerprint -> ONE sweep
+        before = runner_mod.SWEEP_COMPUTES
+        responses = [None] * n_probes
+
+        def _escalated(i):
+            responses[i] = svc.probe(ProbeRequest(
+                dataset=DatasetSpec("higgs_like", {"n": n, "d": d}),
+                escalate=True))
+
+        threads = [threading.Thread(target=_escalated, args=(i,))
+                   for i in range(n_probes)]
+        t0 = time.perf_counter()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        dedup_s = time.perf_counter() - t0
+        computes = runner_mod.SWEEP_COMPUTES - before
+        paths = {r.escalation["artifact_path"] for r in responses}
+        assert computes == 1, f"dedup leak: {computes} sweeps for 1 fp"
+        assert len(paths) == 1, f"waiters got {len(paths)} artifacts"
+        assert all(r.status == "ok" and r.tier == "measured"
+                   for r in responses)
+        t0 = time.perf_counter()
+        svc.probe(ProbeRequest(
+            dataset=DatasetSpec("higgs_like", {"n": n, "d": d}),
+            escalate=True))
+        cached_probe = time.perf_counter() - t0
+        out["dedup"] = {
+            "concurrent_requests": n_probes, "sweep_computes": computes,
+            "wall_clock_s": dedup_s,
+            "per_request_s": dedup_s / max(n_probes, 1),
+            "cached_probe_s": cached_probe}
+
+        # mixed workload: raw probes exit at the analytic tier, the two
+        # spec-carrying forced escalations share one fresh fingerprint
+        # (first computes, second is a cache hit inside the same batch)
+        reqs = [ProbeRequest(X=X) for X in Xs]
+        reqs += [ProbeRequest(
+            dataset=DatasetSpec("realsim_like",
+                                {"n": n, "d": d, "density": 0.05}),
+            escalate=True) for _ in range(2)]
+        before = runner_mod.SWEEP_COMPUTES
+        t0 = time.perf_counter()
+        mixed_resp = svc.probe_batch(reqs)
+        mixed_s = time.perf_counter() - t0
+        analytic = sum(r.tier == "analytic" for r in mixed_resp)
+        out["mixed_workload"] = {
+            "requests": len(reqs),
+            "analytic_tier_answers": analytic,
+            "analytic_fraction": analytic / len(reqs),
+            "sweep_computes": runner_mod.SWEEP_COMPUTES - before,
+            "wall_clock_s": mixed_s}
+    return out
+
+
 def main(argv=None):
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     p.add_argument("--n", type=int, default=1500)
@@ -430,7 +547,7 @@ def main(argv=None):
                    help="internal: run the distributed-section worker "
                         "under this forced host device count and exit")
     p.add_argument("--out", default=None,
-                   help="output path (default: BENCH_7.json at the repo "
+                   help="output path (default: BENCH_8.json at the repo "
                         "root; quick mode defaults elsewhere so a smoke "
                         "never overwrites the committed perf anchor)")
     args = p.parse_args(argv)
@@ -441,8 +558,8 @@ def main(argv=None):
         args.m_max = 8
         args.seeds = min(args.seeds, 4)
     if args.out is None:
-        args.out = (os.path.join(tempfile.gettempdir(), "BENCH_7.quick.json")
-                    if args.quick else os.path.join(ROOT, "BENCH_7.json"))
+        args.out = (os.path.join(tempfile.gettempdir(), "BENCH_8.quick.json")
+                    if args.quick else os.path.join(ROOT, "BENCH_8.json"))
     ms = list(range(1, args.m_max + 1))
 
     ds = synth.make_higgs_like(jax.random.PRNGKey(0), n=args.n, d=args.d)
@@ -506,6 +623,25 @@ def main(argv=None):
     print(f"{'journal on':>15}: {resil['journal_on_s']:7.2f} s "
           f"({resil['overhead_frac'] * 100:+.2f}% overhead)")
 
+    if args.quick:
+        svc_cfg = dict(n_probes=6, n=192, d=12, sweep_iters=120,
+                       sweep_eval_every=20)
+    else:
+        svc_cfg = dict(n_probes=8, n=384, d=16, sweep_iters=400,
+                       sweep_eval_every=40)
+    service = time_service(**svc_cfg)
+    lat, dd, mx = (service["probe_latency"], service["dedup"],
+                   service["mixed_workload"])
+    print(f"{'svc batched':>15}: {lat['batched_s']:7.3f} s  looped "
+          f"{lat['looped_s']:7.3f} s  {lat['speedup']:.2f}x")
+    print(f"{'svc dedup':>15}: {dd['concurrent_requests']} concurrent "
+          f"escalations -> {dd['sweep_computes']} sweep in "
+          f"{dd['wall_clock_s']:.2f} s (cached refetch "
+          f"{dd['cached_probe_s'] * 1000:.0f} ms)")
+    print(f"{'svc mixed':>15}: {mx['analytic_tier_answers']}/"
+          f"{mx['requests']} answered analytically "
+          f"({mx['sweep_computes']} sweeps)")
+
     # mesh sizes: 1, the physical core count (the only mesh that can win
     # on CPU — intra-op parallelism can't cross scan iterations, device
     # sharding of the element axis can), and 8 (CI's forced-device size;
@@ -567,6 +703,19 @@ def main(argv=None):
             "bench6_wall_clock_s": b6,
             "ratio_engine_default": timings["engine_default"]
             / max(b6["engine_default"], 1e-9),
+        }
+    # PR-8 non-regression: the service is a new layer over the engine
+    # (run_sweep's dedup/cache-cap paths are no-ops by default), so the
+    # original sweep must stay within noise of the PR-7 anchor
+    vs_bench7 = None
+    b7_path = os.path.join(ROOT, "BENCH_7.json")
+    if not args.quick and os.path.exists(b7_path):
+        with open(b7_path) as f:
+            b7 = json.load(f)["main"]["wall_clock_s"]
+        vs_bench7 = {
+            "bench7_wall_clock_s": b7,
+            "ratio_engine_default": timings["engine_default"]
+            / max(b7["engine_default"], 1e-9),
         }
 
     payload = {
@@ -654,9 +803,20 @@ def main(argv=None):
                                "(target overhead < 2%)"},
             "results": resil,
         },
+        "service": {
+            "note": "advisor service (docs/service.md): batched front "
+                    "end vs per-probe from_dataset loop (warm), N "
+                    "concurrent same-fingerprint forced escalations "
+                    "(single-flight: sweep_computes must be 1, every "
+                    "waiter served the one stored artifact), and the "
+                    "analytic-tier early-exit fraction on a mixed "
+                    "raw+escalated workload",
+            **service,
+        },
         "vs_bench4": vs_bench4,
         "vs_bench5": vs_bench5,
         "vs_bench6": vs_bench6,
+        "vs_bench7": vs_bench7,
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)

@@ -111,24 +111,43 @@ def svrg_mmax(omega_frac: float, delta: float, rho: float,
                         m_cap)
 
 
-def predict_sync_mmax(X, *, parallel_cost: float = 1e-3,
-                      m_cap: int = M_CAP) -> Dict:
-    """Dataset-level sync predictor (vectorized `core.scalability` twin —
-    identical payload, no Python m-loop)."""
-    sigma = math.sqrt(max(MX.mean_feature_variance(X), 1e-12))
+def predict_sync_from_characters(ch: Dict, *, parallel_cost: float = 1e-3,
+                                 m_cap: int = M_CAP) -> Dict:
+    """Sync predictor from an already-measured characters dict (the
+    batched-service path: `repro.service.tiers` feeds the masked-batch
+    characters here, so N probes never re-touch the raw data).  The
+    X-level :func:`predict_sync_mmax` delegates here — one formula, two
+    entry points, identical answers by construction."""
+    sigma = math.sqrt(max(ch["mean_feature_variance"], 1e-12))
     return {"sigma_proxy": sigma, "parallel_cost": parallel_cost,
             "predicted_m_max": sync_mmax(sigma, parallel_cost, m_cap)}
 
 
-def predict_dadm_mmax(X, *, parallel_cost: float = 1e-3,
+def predict_sync_mmax(X, *, parallel_cost: float = 1e-3,
                       m_cap: int = M_CAP) -> Dict:
-    div = MX.diversity_ratio(X)
+    """Dataset-level sync predictor (vectorized `core.scalability` twin —
+    identical payload, no Python m-loop)."""
+    return predict_sync_from_characters(
+        {"mean_feature_variance": MX.mean_feature_variance(X)},
+        parallel_cost=parallel_cost, m_cap=m_cap)
+
+
+def predict_dadm_from_characters(ch: Dict, *, parallel_cost: float = 1e-3,
+                                 m_cap: int = M_CAP) -> Dict:
+    div = ch["diversity_ratio"]
     return {"diversity_ratio": div, "parallel_cost": parallel_cost,
             "predicted_m_max": dadm_mmax(div, parallel_cost, m_cap)}
 
 
-def predict_hogwild_mmax(X, *, m_cap: int = M_CAP) -> Dict:
-    hw = MX.hogwild_params(X)
+def predict_dadm_mmax(X, *, parallel_cost: float = 1e-3,
+                      m_cap: int = M_CAP) -> Dict:
+    return predict_dadm_from_characters(
+        {"diversity_ratio": MX.diversity_ratio(X)},
+        parallel_cost=parallel_cost, m_cap=m_cap)
+
+
+def predict_hogwild_from_characters(ch: Dict, *, m_cap: int = M_CAP) -> Dict:
+    hw = {k: ch[k] for k in ("omega", "omega_frac", "delta", "rho")}
     omega_term = hw["omega_frac"] * math.sqrt(hw["delta"])
     m_star = 1.0 / math.sqrt(6.0 * omega_term) if omega_term > 0 else m_cap
     return {**hw, "omega_delta_term": omega_term, "m_star": m_star,
@@ -136,16 +155,38 @@ def predict_hogwild_mmax(X, *, m_cap: int = M_CAP) -> Dict:
                                             hw["rho"], m_cap)}
 
 
+def predict_hogwild_mmax(X, *, m_cap: int = M_CAP) -> Dict:
+    return predict_hogwild_from_characters(MX.hogwild_params(X), m_cap=m_cap)
+
+
+def predict_momentum_from_characters(ch: Dict, *, beta: float = 0.9,
+                                     parallel_cost: float = 1e-3,
+                                     m_cap: int = M_CAP) -> Dict:
+    sigma = math.sqrt(max(ch["mean_feature_variance"], 1e-12))
+    return {"sigma_proxy": sigma, "beta": beta,
+            "parallel_cost": parallel_cost,
+            "predicted_m_max": momentum_mmax(sigma, beta, parallel_cost,
+                                             m_cap)}
+
+
 def predict_momentum_mmax(X, *, beta: float = 0.9,
                           parallel_cost: float = 1e-3,
                           m_cap: int = M_CAP) -> Dict:
     """Dataset-level critical batch size for momentum mini-batch SGD; the
     job's ``beta`` reaches here via the runner's predictor-kwargs pass."""
-    sigma = math.sqrt(max(MX.mean_feature_variance(X), 1e-12))
-    return {"sigma_proxy": sigma, "beta": beta,
+    return predict_momentum_from_characters(
+        {"mean_feature_variance": MX.mean_feature_variance(X)},
+        beta=beta, parallel_cost=parallel_cost, m_cap=m_cap)
+
+
+def predict_local_sgd_from_characters(ch: Dict, *, sync_every: int = 4,
+                                      parallel_cost: float = 1e-3,
+                                      m_cap: int = M_CAP) -> Dict:
+    sigma = math.sqrt(max(ch["mean_feature_variance"], 1e-12))
+    return {"sigma_proxy": sigma, "sync_every": int(sync_every),
             "parallel_cost": parallel_cost,
-            "predicted_m_max": momentum_mmax(sigma, beta, parallel_cost,
-                                             m_cap)}
+            "predicted_m_max": local_sgd_mmax(sigma, sync_every,
+                                              parallel_cost, m_cap)}
 
 
 def predict_local_sgd_mmax(X, *, sync_every: int = 4,
@@ -153,11 +194,20 @@ def predict_local_sgd_mmax(X, *, sync_every: int = 4,
                            m_cap: int = M_CAP) -> Dict:
     """Dataset-level critical worker count for local SGD at a given sync
     window (the window amortizes the communication cost)."""
-    sigma = math.sqrt(max(MX.mean_feature_variance(X), 1e-12))
-    return {"sigma_proxy": sigma, "sync_every": int(sync_every),
-            "parallel_cost": parallel_cost,
-            "predicted_m_max": local_sgd_mmax(sigma, sync_every,
-                                              parallel_cost, m_cap)}
+    return predict_local_sgd_from_characters(
+        {"mean_feature_variance": MX.mean_feature_variance(X)},
+        sync_every=sync_every, parallel_cost=parallel_cost, m_cap=m_cap)
+
+
+def predict_svrg_from_characters(ch: Dict, *, anchor_every: int = 100,
+                                 m_cap: int = M_CAP) -> Dict:
+    """Needs the Thm-2 params plus ``n`` (the epoch length that sets the
+    variance-reduction factor theta = H / (H + n))."""
+    hw = {k: ch[k] for k in ("omega", "omega_frac", "delta", "rho")}
+    theta = anchor_every / (anchor_every + ch["n"])
+    return {**hw, "anchor_every": int(anchor_every), "theta": theta,
+            "predicted_m_max": svrg_mmax(hw["omega_frac"], hw["delta"],
+                                         hw["rho"], theta, m_cap)}
 
 
 def predict_svrg_mmax(X, *, anchor_every: int = 100,
@@ -167,11 +217,23 @@ def predict_svrg_mmax(X, *, anchor_every: int = 100,
     epoch length n: theta = H / (H + n) — a fresh anchor every step
     (H -> 0) is the full-gradient limit, a never-refreshed anchor
     (H -> inf) degenerates to raw Hogwild!."""
-    hw = MX.hogwild_params(X)
-    theta = anchor_every / (anchor_every + X.shape[0])
-    return {**hw, "anchor_every": int(anchor_every), "theta": theta,
-            "predicted_m_max": svrg_mmax(hw["omega_frac"], hw["delta"],
-                                         hw["rho"], theta, m_cap)}
+    return predict_svrg_from_characters(
+        {**MX.hogwild_params(X), "n": X.shape[0]},
+        anchor_every=anchor_every, m_cap=m_cap)
+
+
+#: characters-dict predictor per kind — what `repro.service.tiers` and any
+#: other batched-characters consumer dispatches through (the X-level
+#: ``predict_*_mmax`` wrappers above delegate to these, so both entry
+#: points give identical answers for identical characters)
+PREDICTORS_FROM_CHARACTERS = {
+    "sync": predict_sync_from_characters,
+    "dadm": predict_dadm_from_characters,
+    "hogwild": predict_hogwild_from_characters,
+    "momentum": predict_momentum_from_characters,
+    "local_sgd": predict_local_sgd_from_characters,
+    "svrg": predict_svrg_from_characters,
+}
 
 
 # ---------------------------------------------------------------------------
@@ -307,4 +369,71 @@ def characters_regression(points: Sequence[Dict]) -> Optional[Dict]:
             "coef": {name: float(c) for name, c in
                      zip(("intercept",) + REGRESSION_FEATURES, coef)},
             "r2": 1.0 - ss_res / ss_tot if ss_tot > 0 else 1.0,
-            "predicted_log2_mmax": pred.tolist()}
+            "predicted_log2_mmax": pred.tolist(),
+            # residual scale + fitted-cloud envelope, the inputs of
+            # `analytic_confidence` (log2 units: rmse 1 = a factor-2
+            # miss on m_max)
+            "residual_rmse": math.sqrt(ss_res / len(points)),
+            "feature_mean": {name: float(X[:, i + 1].mean()) for i, name
+                             in enumerate(REGRESSION_FEATURES)},
+            "feature_std": {name: float(X[:, i + 1].std()) for i, name
+                            in enumerate(REGRESSION_FEATURES)}}
+
+
+# ---------------------------------------------------------------------------
+# analytic-tier confidence (the service's early-exit gate)
+# ---------------------------------------------------------------------------
+
+#: confidence assigned to an analytic answer when no characters->m_max
+#: regression history exists yet — the theory predictors are the only
+#: evidence, so this is a prior, not a measurement (`repro.service`
+#: escalates below its threshold; the default threshold sits under this
+#: prior, so a fresh service trusts the theory until history says not to)
+CONFIDENCE_PRIOR = 0.75
+
+
+def _regression_features(ch: Dict) -> Dict[str, float]:
+    return {"log10_variance":
+            math.log10(max(ch["mean_feature_variance"], 1e-12)),
+            "sparsity": ch["sparsity"],
+            "diversity_ratio": ch["diversity_ratio"]}
+
+
+def analytic_confidence(model: Optional[Dict], ch: Dict) -> Dict:
+    """How much to trust an *analytic* (predictor-only) answer for a
+    dataset with characters ``ch``, derived from the characters->m_max
+    regression residuals (:func:`characters_regression` over the measured
+    sweeps already in the artifact cache):
+
+      confidence = clip(R^2, 0, 1) * exp(-residual_rmse)
+                   * exp(-max(z - 2, 0) / 2)
+
+    — the regression's explanatory power, discounted by its residual
+    scale (rmse in log2(m_max): a 1-bit typical miss costs e^-1) and by
+    extrapolation (z = the character point's largest |z-score| against
+    the fitted cloud; inside 2 sigma is free, beyond decays).  With no
+    model (an empty cache) the answer is the :data:`CONFIDENCE_PRIOR`.
+    Deterministic and unit-tested — the service's tier gate, not a
+    calibrated probability."""
+    if model is None:
+        return {"confidence": CONFIDENCE_PRIOR, "source": "prior",
+                "detail": "no measured characters->m_max history yet"}
+    feats = _regression_features(ch)
+    z = 0.0
+    for name, v in feats.items():
+        std = model["feature_std"].get(name, 0.0)
+        mean = model["feature_mean"].get(name, 0.0)
+        if std <= 1e-9:
+            z = max(z, 0.0 if abs(v - mean) <= 1e-9 else math.inf)
+        else:
+            z = max(z, abs(v - mean) / std)
+    r2 = min(max(model["r2"], 0.0), 1.0)
+    rmse = model["residual_rmse"]
+    conf = r2 * math.exp(-rmse) * math.exp(-max(z - 2.0, 0.0) / 2.0)
+    coef = model["coef"]
+    log2_mmax = coef["intercept"] + sum(
+        coef[name] * v for name, v in feats.items())
+    return {"confidence": float(conf), "source": "regression",
+            "r2": r2, "residual_rmse": rmse, "extrapolation_z": float(z),
+            "n_points": model["n_points"],
+            "regression_log2_mmax": float(log2_mmax)}

@@ -23,6 +23,22 @@ instead of being silently treated as a cache miss (or worse, served).
 Pre-checksum artifacts (no ``checksum`` key) still load unverified, so
 existing caches keep serving.
 
+**Size cap** (for long-lived consumers like `repro.service`): pass
+``max_artifacts`` to :func:`store` — or set the ``REPRO_SWEEP_CACHE_CAP``
+environment variable — and the directory is held to that many artifacts
+with least-recently-*used* eviction (:func:`load` bumps an artifact's
+mtime on every hit, so recency means traffic, not write order).  The
+first eviction raises a one-shot ``RuntimeWarning``; artifacts are
+content-addressed and deterministic, so an evicted sweep that gets
+requested again simply recomputes into byte-identical bytes (checksum-
+verified, pinned in tests/test_experiments.py).
+
+**In-flight dedup** (:class:`InFlightTable`): concurrent callers racing
+to compute the same fingerprint collapse into one execution — the first
+caller leases the fingerprint and computes; the rest wait and then load
+the freshly stored artifact.  `runner.run_sweep(dedup=True)` is the
+consumer; `repro.service` routes every escalated sweep through it.
+
 The default directory is ``results/sweep_cache`` (override with the
 ``REPRO_SWEEP_CACHE`` environment variable or the ``cache_dir`` argument).
 """
@@ -33,11 +49,17 @@ import hashlib
 import json
 import os
 import tempfile
+import threading
 import warnings
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 DEFAULT_CACHE_DIR = os.environ.get(
     "REPRO_SWEEP_CACHE", os.path.join("results", "sweep_cache"))
+
+#: default artifact-count cap applied by `store` (0 / unset = unbounded,
+#: the pre-cap behavior; long-lived services should set a cap)
+DEFAULT_CACHE_CAP: Optional[int] = (
+    int(os.environ.get("REPRO_SWEEP_CACHE_CAP", "0")) or None)
 
 #: result keys describing one concrete run, not the computation — never
 #: persisted, re-attached fresh by the runner after every load/store
@@ -72,7 +94,9 @@ def _quarantine(path: str, reason: str) -> None:
 
 def load(cache_dir: str, name: str, fp: str) -> Optional[Dict]:
     """Return the cached payload, or None on miss.  Unparsable or
-    checksum-mismatching artifacts are quarantined (see module docs)."""
+    checksum-mismatching artifacts are quarantined (see module docs).
+    A hit bumps the artifact's mtime, so LRU eviction (`enforce_cap`)
+    tracks use, not write order."""
     path = artifact_path(cache_dir, name, fp)
     try:
         with open(path) as f:
@@ -91,14 +115,77 @@ def load(cache_dir: str, name: str, fp: str) -> Optional[Dict]:
         _quarantine(path, "payload checksum mismatch — bit rot or a "
                           "hand-edited artifact")
         return None
+    try:
+        os.utime(path, None)                  # recency = last use
+    except OSError:
+        pass
     return payload
 
 
-def store(cache_dir: str, name: str, fp: str, payload: Dict) -> str:
+def list_artifacts(cache_dir: str) -> List[str]:
+    """Paths of every artifact in the cache directory, least-recently-used
+    first (quarantined ``.corrupt`` files and write temps excluded)."""
+    try:
+        names = os.listdir(cache_dir)
+    except OSError:
+        return []
+    paths = [os.path.join(cache_dir, n) for n in names
+             if n.endswith(".json")]
+    def mtime(p):
+        try:
+            return os.stat(p).st_mtime
+        except OSError:
+            return 0.0
+    return sorted(paths, key=mtime)
+
+
+_EVICTION_WARNED = False
+
+
+def enforce_cap(cache_dir: str, max_artifacts: int,
+                keep: Optional[str] = None) -> List[str]:
+    """Evict least-recently-used artifacts until at most ``max_artifacts``
+    remain; returns the evicted paths.  ``keep`` (the artifact just
+    stored) is never evicted.  The first eviction of the process warns
+    once — a service whose working set exceeds its cache cap is
+    recomputing sweeps it could have kept."""
+    global _EVICTION_WARNED
+    evicted: List[str] = []
+    arts = list_artifacts(cache_dir)
+    excess = len(arts) - int(max_artifacts)
+    for path in arts:
+        if excess <= 0:
+            break
+        if keep is not None and os.path.abspath(path) == \
+                os.path.abspath(keep):
+            continue
+        try:
+            os.unlink(path)
+        except OSError:
+            continue
+        evicted.append(path)
+        excess -= 1
+    if evicted and not _EVICTION_WARNED:
+        _EVICTION_WARNED = True
+        warnings.warn(
+            f"sweep cache {cache_dir} exceeded its cap of "
+            f"{max_artifacts} artifact(s); evicted {len(evicted)} "
+            f"least-recently-used (first: {evicted[0]}).  Evicted sweeps "
+            f"recompute to byte-identical artifacts on the next request; "
+            f"raise the cap (REPRO_SWEEP_CACHE_CAP / max_artifacts) if "
+            f"this working set should stay resident.  [warned once]",
+            RuntimeWarning, stacklevel=3)
+    return evicted
+
+
+def store(cache_dir: str, name: str, fp: str, payload: Dict,
+          max_artifacts: Optional[int] = None) -> str:
     """Atomically write the payload; returns the artifact path.
     Volatile per-run keys (`VOLATILE_KEYS`) are stripped so the artifact
     bytes do not depend on which mesh computed them (or how long it
-    took); a payload checksum is embedded for `load` to verify."""
+    took); a payload checksum is embedded for `load` to verify.
+    ``max_artifacts`` (default: `DEFAULT_CACHE_CAP`) bounds the directory
+    with LRU eviction after the write."""
     os.makedirs(cache_dir, exist_ok=True)
     path = artifact_path(cache_dir, name, fp)
     payload = {k: v for k, v in payload.items() if k not in VOLATILE_KEYS}
@@ -113,4 +200,57 @@ def store(cache_dir: str, name: str, fp: str, payload: Dict) -> str:
         if os.path.exists(tmp):
             os.unlink(tmp)
         raise
+    cap = max_artifacts if max_artifacts is not None else DEFAULT_CACHE_CAP
+    if cap is not None and cap > 0:
+        enforce_cap(cache_dir, cap, keep=path)
     return path
+
+
+# ---------------------------------------------------------------------------
+# in-flight dedup (single-flight execution per fingerprint)
+# ---------------------------------------------------------------------------
+
+class InFlightTable:
+    """Single-flight table keyed by sweep fingerprint.
+
+    The first caller to :meth:`lease` a fingerprint becomes its *leader*
+    (computes and stores the artifact); concurrent callers see ``False``,
+    :meth:`wait`, then re-check the artifact cache — the leader's stored
+    bytes serve every waiter, so N identical concurrent requests execute
+    exactly one sweep and every waiter reads the identical artifact.  A
+    leader that fails releases without storing; one waiter then takes
+    over the lease (graceful retry, never a deadlock)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._events: Dict[str, threading.Event] = {}
+
+    def lease(self, fp: str) -> bool:
+        """True -> caller is the leader for ``fp`` and must `release`."""
+        with self._lock:
+            if fp in self._events:
+                return False
+            self._events[fp] = threading.Event()
+            return True
+
+    def wait(self, fp: str, timeout: Optional[float] = None) -> bool:
+        """Block until ``fp``'s leader releases (True), or timeout
+        (False).  Returns immediately when nothing is in flight."""
+        with self._lock:
+            ev = self._events.get(fp)
+        if ev is None:
+            return True
+        return ev.wait(timeout)
+
+    def release(self, fp: str) -> None:
+        """Leader done (artifact stored, or the attempt failed): wake
+        every waiter and free the lease."""
+        with self._lock:
+            ev = self._events.pop(fp, None)
+        if ev is not None:
+            ev.set()
+
+    @property
+    def n_inflight(self) -> int:
+        with self._lock:
+            return len(self._events)

@@ -97,6 +97,14 @@ def _predict(predictor: str, X, job_kwargs: Dict) -> Dict:
 #: O(rows^2)-ish through the LS scans; specs override via characters_rows)
 DEFAULT_CHARACTERS_ROWS = 512
 
+#: process-wide count of sweeps actually *computed* (cache hits and
+#: dedup-follower waits don't increment) — tests and the service bench
+#: read it to prove single-flight dedup executes exactly one sweep
+SWEEP_COMPUTES = 0
+
+#: process-wide single-flight table for `run_sweep(dedup=True)` callers
+_INFLIGHT = artifact_cache.InFlightTable()
+
 
 def curves_by_m(job_result: Dict) -> Dict[int, List[float]]:
     """{worker count: convergence curve} view of a job result."""
@@ -183,7 +191,8 @@ def run_sweep(spec: SweepSpec, *, use_cache: bool = True, force: bool = False,
               cache_dir: Optional[str] = None, use_vmap: bool = True,
               verbose: bool = False, mesh: "dist_mesh.MeshLike" = None,
               journal: bool = True, max_retries: int = 1,
-              retry_backoff_s: float = 0.25) -> Dict:
+              retry_backoff_s: float = 0.25, dedup: bool = False,
+              cache_cap: Optional[int] = None) -> Dict:
     """Execute (or fetch) the full sweep a spec describes.
 
     ``mesh`` (or, when absent, the spec's execution-only ``devices``
@@ -199,14 +208,27 @@ def run_sweep(spec: SweepSpec, *, use_cache: bool = True, force: bool = False,
     artifact is byte-identical to an uninterrupted run's.  ``max_retries``
     bounds the retry-with-backoff loop for jobs that raise or produce
     non-finite curves (see `_run_job_with_retries`).
+
+    ``dedup=True`` (with ``use_cache``) routes the call through a
+    process-wide single-flight table: concurrent callers sharing this
+    spec's fingerprint elect one *leader* that computes and stores the
+    artifact while the rest block, then load the leader's bytes from the
+    cache — N identical concurrent requests execute exactly one sweep
+    (`SWEEP_COMPUTES` counts real executions; `repro.service` sets this
+    for every escalation).  ``cache_cap`` forwards to
+    `cache.store(max_artifacts=...)` for LRU-bounded artifact dirs.
     """
+    global SWEEP_COMPUTES
     spec.validate()
     cache_dir = cache_dir or artifact_cache.DEFAULT_CACHE_DIR
     fp = spec_mod.fingerprint(spec)
 
-    if use_cache and not force:
+    leased = False
+    while use_cache and not force:
         hit = artifact_cache.load(cache_dir, spec.name, fp)
         if hit is not None:
+            if leased:
+                _INFLIGHT.release(fp)
             hit["cache"] = {"hit": True,
                             "path": artifact_cache.artifact_path(
                                 cache_dir, spec.name, fp)}
@@ -217,6 +239,41 @@ def run_sweep(spec: SweepSpec, *, use_cache: bool = True, force: bool = False,
                                 "sharded": False,
                                 "backend": jax.default_backend()}
             return hit
+        if not dedup or leased:
+            break
+        if _INFLIGHT.lease(fp):
+            # leader: re-check the cache once (a prior leader may have
+            # stored between our miss and the lease), then compute
+            leased = True
+            continue
+        # follower: block until the leader releases, then re-check the
+        # cache — on leader success that's a hit; on leader failure the
+        # loop retries the lease (one follower takes over)
+        _INFLIGHT.wait(fp)
+
+    try:
+        return _compute_sweep(
+            spec, fp, cache_dir, use_cache=use_cache, force=force,
+            use_vmap=use_vmap, verbose=verbose, mesh=mesh, journal=journal,
+            max_retries=max_retries, retry_backoff_s=retry_backoff_s,
+            cache_cap=cache_cap)
+    finally:
+        if leased:
+            # success or failure, wake every dedup waiter: on success
+            # they hit the stored artifact; on failure one takes over
+            _INFLIGHT.release(fp)
+
+
+def _compute_sweep(spec: SweepSpec, fp: str, cache_dir: str, *,
+                   use_cache: bool, force: bool, use_vmap: bool,
+                   verbose: bool, mesh, journal: bool, max_retries: int,
+                   retry_backoff_s: float,
+                   cache_cap: Optional[int]) -> Dict:
+    """The cache-miss path of `run_sweep`: journal replay, job execution,
+    readouts, artifact store.  Split out so the dedup lease in
+    `run_sweep` wraps exactly one compute in try/finally."""
+    global SWEEP_COMPUTES
+    SWEEP_COMPUTES += 1
 
     jpath = journal_mod.journal_path(cache_dir, spec.name, fp)
     journaled: Dict[str, Dict] = {}
@@ -312,7 +369,8 @@ def run_sweep(spec: SweepSpec, *, use_cache: bool = True, force: bool = False,
     result["elapsed_s"] = time.time() - t0
     path = None
     if use_cache:
-        path = artifact_cache.store(cache_dir, spec.name, fp, result)
+        path = artifact_cache.store(cache_dir, spec.name, fp, result,
+                                    max_artifacts=cache_cap)
         if journal:
             # the artifact now supersedes the journal
             journal_mod.consume(jpath)

@@ -1,4 +1,9 @@
 """repro.serve — the serving tier: `engine.greedy_generate` implements
 batched greedy decoding against a preallocated KV cache, shared by the
-`repro.launch.serve` CLI and the serve tests/benchmarks.
+`repro.launch.serve` CLI and the serve tests/benchmarks, and
+`engine.SlotDriver` is the batched request driver (continuous-batching-
+lite: fixed slots, per-slot active flags) that `repro.service` layers
+its probe batching on.
 """
+
+from repro.serve.engine import SlotDriver, mask_tree  # noqa: F401

@@ -1,15 +1,158 @@
-"""Serving: prefill + single-token decode steps, and a batched request
-driver (continuous-batching-lite: fixed slots, per-slot position/active
-flags) used by the serving example.
+"""Serving: prefill + single-token decode steps, and the batched request
+driver (:class:`SlotDriver` — continuous-batching-lite: fixed slots,
+per-slot position/active flags).
+
+The driver is deliberately generic: the step function owns the compute,
+the driver owns slot bookkeeping and the masking contract that makes
+mixed-traffic batching safe.  `repro.service.batcher` layers the
+scalability-advisor probe batching on it (one vmapped characters call
+for a slot group of concurrent requests); the LM serving loop is the
+other natural consumer.
 """
 
 from __future__ import annotations
 
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import model as M
+
+
+def mask_tree(active, new, old):
+    """Per-slot select over a slots-batched pytree: where ``active[i]``,
+    take ``new``'s slot ``i``, else keep ``old``'s — the masking primitive
+    behind the driver's isolation guarantee.  ``active`` is ``(n_slots,)``
+    bool; every leaf's leading axis is the slot axis."""
+    def sel(n, o):
+        a = active.reshape((active.shape[0],) + (1,) * (n.ndim - 1))
+        return jnp.where(a, n, o)
+    return jax.tree.map(sel, new, old)
+
+
+def _default_writer(state, slot: int, payload):
+    """Write a payload pytree (one slot's worth, no slot axis) into slot
+    ``slot`` of the slots-batched state.  Leaves missing from the payload
+    keep their current slot contents."""
+    def put(leaf, p):
+        return leaf if p is None else leaf.at[slot].set(p)
+    if not isinstance(payload, dict) or not isinstance(state, dict):
+        return jax.tree.map(lambda l, p: l.at[slot].set(p), state, payload)
+    return {k: (put(v, payload.get(k)) if k in payload else v)
+            if not isinstance(v, dict)
+            else _default_writer(v, slot, payload.get(k, {}))
+            for k, v in state.items()}
+
+
+class SlotDriver:
+    """Continuous-batching-lite request driver: ``n_slots`` fixed slots,
+    per-slot active flags and positions, masked step application.
+
+    ``step_fn(state, active) -> (new_state, done)`` computes one step for
+    every slot at once (``state`` is a pytree whose leaves all carry the
+    slot axis first; ``active``/``done`` are ``(n_slots,)`` bool).  The
+    driver jits a wrapper that re-selects the OLD state wherever a slot is
+    inactive and zeroes ``done`` there, so:
+
+      * an inactive slot's state is bit-frozen between requests (slot
+        recycling can never leak a neighbor's stale compute), and
+      * a request's output stream is a pure function of its own slot —
+        neighbors joining, stepping, or finishing mid-flight cannot
+        perturb it (pinned in tests/test_serve.py).
+
+    One jitted dispatch per :meth:`step` regardless of how many requests
+    are in flight — the continuous-batching idiom `repro.service` builds
+    its probe batcher on.
+    """
+
+    def __init__(self, step_fn: Callable, init_state, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"n_slots={n_slots} must be >= 1")
+        lead = {int(x.shape[0]) for x in jax.tree.leaves(init_state)}
+        if lead and lead != {n_slots}:
+            raise ValueError(f"every state leaf needs leading slot axis "
+                             f"{n_slots}, got {sorted(lead)}")
+        self.n_slots = int(n_slots)
+        self._state = init_state
+        self._active = np.zeros(self.n_slots, dtype=bool)
+        self._positions = np.zeros(self.n_slots, dtype=np.int64)
+        self._requests: List[Optional[Any]] = [None] * self.n_slots
+
+        def wrapped(state, active):
+            new_state, done = step_fn(state, active)
+            return (mask_tree(active, new_state, state),
+                    jnp.logical_and(done, active))
+
+        self._step = jax.jit(wrapped)
+
+    # -- bookkeeping views --------------------------------------------------
+    @property
+    def active(self) -> np.ndarray:
+        return self._active.copy()
+
+    @property
+    def positions(self) -> np.ndarray:
+        return self._positions.copy()
+
+    @property
+    def n_active(self) -> int:
+        return int(self._active.sum())
+
+    @property
+    def state(self):
+        return self._state
+
+    # -- admission ----------------------------------------------------------
+    def admit(self, request_id, payload,
+              writer: Optional[Callable] = None) -> Optional[int]:
+        """Place a request into a free slot; returns the slot index, or
+        None when every slot is busy (the caller queues or sheds — the
+        driver itself never blocks).  ``writer(state, slot, payload)``
+        customizes how the payload lands in the state (default: per-leaf
+        ``.at[slot].set``)."""
+        free = np.flatnonzero(~self._active)
+        if free.size == 0:
+            return None
+        slot = int(free[0])
+        self._state = (writer or _default_writer)(self._state, slot, payload)
+        self._active[slot] = True
+        self._positions[slot] = 0
+        self._requests[slot] = request_id
+        return slot
+
+    # -- stepping -----------------------------------------------------------
+    def step(self) -> List[Tuple[Any, Dict]]:
+        """Advance every active slot one step (one jitted dispatch).
+        Returns ``[(request_id, slot_state_slice), ...]`` for requests
+        that finished this step; their slots are freed for recycling."""
+        if not self._active.any():
+            return []
+        active = jnp.asarray(self._active)
+        self._state, done = self._step(self._state, active)
+        done_host = np.asarray(jax.device_get(done))
+        self._positions[self._active] += 1
+        finished = []
+        for slot in np.flatnonzero(done_host):
+            slot = int(slot)
+            out = jax.device_get(
+                jax.tree.map(lambda x: x[slot], self._state))
+            finished.append((self._requests[slot], out))
+            self._active[slot] = False
+            self._requests[slot] = None
+        return finished
+
+    def run_to_completion(self, max_steps: int = 10_000) -> List:
+        """Step until every slot drains (admissions between steps are the
+        caller's loop); convenience for one-shot batch usage."""
+        outs: List = []
+        for _ in range(max_steps):
+            if not self._active.any():
+                return outs
+            outs.extend(self.step())
+        raise RuntimeError(f"slots still active after {max_steps} steps")
 
 
 def make_prefill_step(cfg: ArchConfig, attention_impl="reference",

@@ -1,0 +1,28 @@
+"""repro.service — the scalability advisor as a long-lived service.
+
+The paper's deliverable (`core.advisor.ScalabilityAdvisor`) answers one
+probe at a time; this package turns it into a front end that batches,
+gates, and dedups concurrent probes:
+
+  * :mod:`repro.service.batcher` coalesces concurrent dataset-character
+    probes into ONE masked-batch jitted call on a `serve.SlotDriver`
+    (pad-to-slot, per-slot validity masks — the continuous-batching-lite
+    idiom of the serving tier),
+  * :mod:`repro.service.tiers` is the early-exit escalation path: the
+    cheap analytic tier (the `analysis.fit` predictors) answers
+    immediately with a residual-derived confidence; low-confidence
+    probes escalate to a measured sweep through `experiments.runner`,
+  * :mod:`repro.service.queue` bounds admission — overflow sheds load
+    with structured ``overloaded`` responses instead of queueing
+    unboundedly,
+  * escalations sharing a `SweepSpec` fingerprint collapse into one
+    in-flight sweep (`runner.run_sweep(dedup=True)`) whose stored
+    artifact fans out to every waiter.
+
+`repro.service.api.AdvisorService` wires the three together; run
+``python -m repro.service`` for the CLI.  docs/service.md documents the
+tier semantics, the confidence gate, and the dedup/overload contracts.
+"""
+
+from repro.service.api import (AdvisorService, ProbeRequest,  # noqa: F401
+                               ProbeResponse)

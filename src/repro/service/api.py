@@ -1,0 +1,230 @@
+"""The advisor service facade: request/response types + `AdvisorService`.
+
+One public entry point, two shapes:
+
+  * :meth:`AdvisorService.probe` — one request, full path (admission ->
+    batched character measurement -> tier routing -> response).  Safe to
+    call from many threads at once; concurrent escalations sharing a
+    spec fingerprint collapse into one sweep (`tiers.TierRouter`).
+  * :meth:`AdvisorService.probe_batch` — N requests coalesced so their
+    character measurements ride ONE masked-batch jitted call
+    (`batcher.ProbeBatcher`), then each routes through the tiers
+    independently.
+
+Every response is a `ProbeResponse`; nothing raises for bad probes —
+invalid inputs come back ``status="invalid"`` with the advisor's
+structured low-confidence report, and admission overflow comes back
+``status="overloaded"`` (see `queue.AdmissionQueue`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import advisor as advisor_mod
+from repro.experiments import runner as runner_mod
+from repro.experiments import spec as spec_mod
+from repro.experiments.spec import DatasetSpec, SweepSpec
+from repro.service.batcher import ProbeBatcher
+from repro.service.queue import AdmissionQueue
+from repro.service.tiers import DEFAULT_CONFIDENCE_THRESHOLD, TierRouter
+
+_REQUEST_IDS = itertools.count()
+
+
+@dataclasses.dataclass
+class ProbeRequest:
+    """One scalability probe.
+
+    Exactly one of ``X`` (raw dataset), ``grads`` (per-shard gradient
+    pytrees), ``dataset`` (a reproducible `DatasetSpec`), or ``sweep``
+    (a full `SweepSpec` — its first dataset is probed) should be set.
+    Only the spec-carrying shapes can escalate to a measured sweep: raw
+    arrays have no fingerprintable identity (see docs/service.md).
+
+    ``escalate``: None = confidence-gated (the default), True = force
+    the measured tier, False = never escalate.
+    """
+    X: Optional[Any] = None
+    grads: Optional[List] = None
+    dataset: Optional[DatasetSpec] = None
+    sweep: Optional[SweepSpec] = None
+    algorithm: str = "hogwild"
+    escalate: Optional[bool] = None
+    kwargs: Dict = dataclasses.field(default_factory=dict)
+    request_id: str = dataclasses.field(
+        default_factory=lambda: f"probe-{next(_REQUEST_IDS)}")
+
+    @property
+    def kind(self) -> str:
+        return "grads" if self.grads is not None else "dataset"
+
+    def materialize_X(self, rows_cap: int) -> Optional[np.ndarray]:
+        """The dataset the analytic tier measures: the raw ``X``, or the
+        (deterministically generated) spec dataset, row-capped like the
+        runner's characters report."""
+        if self.X is not None:
+            return np.asarray(self.X)
+        ds = self.dataset
+        if ds is None and self.sweep is not None and self.sweep.datasets:
+            ds = next(iter(self.sweep.datasets.values()))
+        if ds is None:
+            return None
+        X = np.asarray(spec_mod.build_dataset(ds).X)
+        return X[:rows_cap] if rows_cap else X
+
+
+@dataclasses.dataclass
+class ProbeResponse:
+    """status: "ok" | "invalid" | "overloaded"; tier: "analytic" |
+    "measured" | None (shed/invalid requests never reach a tier)."""
+    request_id: str
+    status: str
+    tier: Optional[str]
+    confidence: float
+    confidence_detail: Dict
+    report: Dict
+    escalation: Optional[Dict] = None
+    note: Optional[str] = None
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+class AdvisorService:
+    """Batching + tiering + admission in front of `ScalabilityAdvisor`."""
+
+    def __init__(self, *, n_slots: int = 8, max_rows: int = 512,
+                 max_cols: int = 64, queue_depth: int = 32,
+                 confidence_threshold: float = DEFAULT_CONFIDENCE_THRESHOLD,
+                 cache_dir: Optional[str] = None,
+                 cache_cap: Optional[int] = None,
+                 parallel_cost: float = 1e-3,
+                 sweep_ms=(1, 2, 4), sweep_iters: int = 200,
+                 sweep_eval_every: int = 20,
+                 characters_rows: int = runner_mod.DEFAULT_CHARACTERS_ROWS):
+        self.queue = AdmissionQueue(queue_depth)
+        self.batcher = ProbeBatcher(n_slots=n_slots, max_rows=max_rows,
+                                    max_cols=max_cols)
+        self.tiers = TierRouter(
+            confidence_threshold=confidence_threshold, cache_dir=cache_dir,
+            cache_cap=cache_cap, parallel_cost=parallel_cost,
+            sweep_ms=sweep_ms, sweep_iters=sweep_iters,
+            sweep_eval_every=sweep_eval_every)
+        self.characters_rows = int(characters_rows)
+        self._batch_lock = threading.Lock()
+
+    # -- the front door -----------------------------------------------------
+    def probe(self, request: ProbeRequest) -> ProbeResponse:
+        return self.probe_batch([request])[0]
+
+    def probe_batch(self, requests: List[ProbeRequest]
+                    ) -> List[ProbeResponse]:
+        responses: Dict[str, ProbeResponse] = {}
+        admitted: List[ProbeRequest] = []
+        for r in requests:
+            if self.queue.try_admit():
+                admitted.append(r)
+            else:
+                responses[r.request_id] = ProbeResponse(
+                    request_id=r.request_id, status="overloaded",
+                    tier=None, confidence=0.0, confidence_detail={},
+                    report={}, note=f"admission queue full (depth "
+                                    f"{self.queue.depth}); shed — retry "
+                                    f"after in-flight probes drain")
+        try:
+            characters = self._measure(admitted)
+            for r in admitted:
+                responses[r.request_id] = self._respond(
+                    r, characters.get(r.request_id))
+        finally:
+            for _ in admitted:
+                self.queue.release()
+        return [responses[r.request_id] for r in requests]
+
+    # -- stage 1: batched character measurement -----------------------------
+    def _measure(self, requests: List[ProbeRequest]
+                 ) -> Dict[str, Optional[Dict]]:
+        """One masked-batch call for the dataset probes (slot driver) and
+        one for the gradient probes; the lock serializes driver state,
+        NOT escalation — concurrent `probe()` callers still overlap in
+        the measured tier, which is what the dedup table collapses."""
+        ds_items, grad_items = [], []
+        for r in requests:
+            if r.kind == "grads":
+                grad_items.append(r)
+            else:
+                ds_items.append(
+                    (r.request_id, r.materialize_X(self.characters_rows)))
+        out: Dict[str, Optional[Dict]] = {}
+        with self._batch_lock:
+            if ds_items:
+                out.update(self.batcher.measure(ds_items))
+            if grad_items:
+                chs = self.batcher._advisor.grad_characters_batch(
+                    [r.grads for r in grad_items],
+                    n_slots=self.batcher.n_slots)
+                out.update({r.request_id: ch
+                            for r, ch in zip(grad_items, chs)})
+        return out
+
+    # -- stage 2: per-request tier routing ----------------------------------
+    def _respond(self, request: ProbeRequest,
+                 ch: Optional[Dict]) -> ProbeResponse:
+        adv = self.batcher._advisor
+        if ch is None:
+            if request.kind == "grads":
+                reason = adv.validate_grads(request.grads) or \
+                    "unmeasurable gradient probe"
+            else:
+                X = request.materialize_X(self.characters_rows)
+                reason = adv.validate_dataset(X) or "unmeasurable dataset"
+            return ProbeResponse(
+                request_id=request.request_id, status="invalid", tier=None,
+                confidence=0.0, confidence_detail={},
+                report=adv.invalid_report(request.kind, reason))
+
+        conf = self.tiers.confidence(
+            ch, "dataset" if request.kind == "dataset" else "grads")
+        if request.kind == "grads":
+            report = self.tiers.analytic_grad_report(ch)
+        else:
+            report = self.tiers.analytic_dataset_report(ch, request.kwargs)
+
+        wants_sweep = (request.escalate is True or
+                       (request.escalate is None and
+                        conf["confidence"] < self.tiers.threshold))
+        if not wants_sweep:
+            return ProbeResponse(
+                request_id=request.request_id, status="ok", tier="analytic",
+                confidence=float(conf["confidence"]),
+                confidence_detail=conf, report=report)
+
+        if self.tiers.escalation_spec(request) is None:
+            return ProbeResponse(
+                request_id=request.request_id, status="ok", tier="analytic",
+                confidence=float(conf["confidence"]),
+                confidence_detail=conf, report=report,
+                note="escalation unavailable: raw in-memory probes carry "
+                     "no reproducible dataset identity — pass a "
+                     "DatasetSpec or SweepSpec to enable the measured "
+                     "tier")
+        esc = self.tiers.escalate(request)
+        return ProbeResponse(
+            request_id=request.request_id, status="ok", tier="measured",
+            confidence=1.0 if esc["healthy"] else 0.0,
+            confidence_detail={"source": "measured",
+                               "analytic": conf,
+                               "job_status": esc["status"]},
+            report=report, escalation=esc)
+
+    def stats(self) -> Dict:
+        return {"queue": self.queue.stats(),
+                "batcher": self.batcher.stats(),
+                "tiers": self.tiers.stats(),
+                "sweep_computes": runner_mod.SWEEP_COMPUTES}

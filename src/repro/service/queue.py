@@ -1,0 +1,58 @@
+"""Bounded admission for the advisor service.
+
+A long-lived service in front of real sweep execution needs back
+pressure: an escalated probe holds device time for seconds, and an
+unbounded queue just converts overload into unbounded latency.
+`AdmissionQueue` is a counting-semaphore admission gate — ``try_admit``
+never blocks; a ``False`` means the caller must answer with a structured
+``overloaded`` response *now* (see `api.AdvisorService.probe_batch`),
+and under-capacity requests are never affected by the shed ones.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict
+
+
+class AdmissionQueue:
+    """Non-blocking admission gate with a fixed depth.
+
+    ``try_admit`` takes a slot if one is free (and counts the request);
+    ``release`` returns it.  Shed requests are counted but never queued —
+    load shedding is the contract, not buffering."""
+
+    def __init__(self, depth: int):
+        if depth < 1:
+            raise ValueError(f"queue depth {depth} must be >= 1")
+        self.depth = int(depth)
+        self._sem = threading.BoundedSemaphore(self.depth)
+        self._lock = threading.Lock()
+        self._in_service = 0
+        self.admitted = 0
+        self.shed = 0
+
+    def try_admit(self) -> bool:
+        ok = self._sem.acquire(blocking=False)
+        with self._lock:
+            if ok:
+                self.admitted += 1
+                self._in_service += 1
+            else:
+                self.shed += 1
+        return ok
+
+    def release(self) -> None:
+        with self._lock:
+            self._in_service -= 1
+        self._sem.release()
+
+    @property
+    def in_service(self) -> int:
+        with self._lock:
+            return self._in_service
+
+    def stats(self) -> Dict:
+        with self._lock:
+            return {"depth": self.depth, "in_service": self._in_service,
+                    "admitted": self.admitted, "shed": self.shed}

@@ -250,3 +250,59 @@ def test_iterations_to_epsilon():
     losses = np.array([0.9, 0.7, 0.5, 0.3])
     assert SC.iterations_to_epsilon(losses, 100, 0.5) == 300
     assert SC.iterations_to_epsilon(losses, 100, 0.1) == np.inf
+
+
+def test_advisor_invalid_probes_are_structured():
+    """Edge-case probes return a structured low-confidence report (valid
+    False + reason + conservative m_max 1) — never NaN, never a raise."""
+    adv = ScalabilityAdvisor()
+    cases = [
+        (adv.from_grads([]), "empty shard list"),
+        (adv.from_grads(None), "empty shard list"),
+        (adv.from_grads([{"w": jnp.ones(3)}]), "single gradient shard"),
+        (adv.from_grads([{"w": jnp.ones(3)},
+                         {"w": jnp.array([1.0, np.nan, 0.0])}]),
+         "non-finite gradient"),
+        (adv.from_dataset(None), "no dataset"),
+        (adv.from_dataset(jnp.ones(5)), "matrix"),
+        (adv.from_dataset(jnp.ones((1, 4))), "too small"),
+        (adv.from_dataset(jnp.full((6, 3), np.inf)), "non-finite"),
+    ]
+    for rep, frag in cases:
+        assert rep["valid"] is False, frag
+        assert frag in rep["reason"], rep["reason"]
+        assert rep["confidence"] == 0.0
+        assert rep["predicted_m_max_conservative"] == 1
+        assert "recommendation" in rep
+        assert all(np.isfinite(v) for v in rep.values()
+                   if isinstance(v, float))
+
+
+def test_advisor_valid_reports_flagged_valid():
+    adv = ScalabilityAdvisor()
+    data = synth.make_higgs_like(KEY, n=80, d=6)
+    assert adv.from_dataset(data.X)["valid"] is True
+    grads = [{"w": jnp.ones(4) * i} for i in (1, 2)]
+    assert adv.from_grads(grads)["valid"] is True
+
+
+def test_advisor_batched_characters_match_scalar():
+    """The masked-batch probe paths agree with the scalar paths and mark
+    invalid entries None."""
+    adv = ScalabilityAdvisor()
+    X_ok = np.asarray(synth.make_realsim_like(KEY, n=60, d=40).X)
+    X_bad = np.full((4, 2), np.nan)
+    out = adv.dataset_characters_batch([X_ok, X_bad, X_ok[:30, :10]])
+    assert out[1] is None
+    seq = adv.from_dataset(X_ok)
+    for k in ("mean_feature_variance", "sparsity", "omega_frac",
+              "delta", "rho"):
+        assert out[0][k] == pytest.approx(seq[k], abs=1e-6), k
+    assert out[0]["diversity"] == seq["diversity"]
+
+    g_ok = [{"w": jnp.arange(4.0)}, {"w": jnp.arange(4.0) * 2}]
+    gout = adv.grad_characters_batch([g_ok, [], g_ok])
+    assert gout[1] is None
+    gseq = adv.grad_characters(g_ok)
+    for k in gseq:
+        assert gout[0][k] == pytest.approx(gseq[k], abs=1e-5), k

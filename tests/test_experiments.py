@@ -358,3 +358,118 @@ def test_cli_smoke_quick(tmp_path, capsys):
     assert set(payload["jobs"]) == {
         f"{a}/{d}" for d in ("higgs_like", "realsim_like")
         for a in ("minibatch", "ecd_psgd", "hogwild")}
+
+
+# ---------------------------------------------------------------------------
+# cache size cap (LRU) + single-flight dedup
+# ---------------------------------------------------------------------------
+
+def test_cache_cap_evicts_lru_and_warns_once(tmp_path):
+    """The cap keeps the most-recently-USED artifacts (load bumps
+    recency), evicts the rest, and warns exactly once per process."""
+    import os
+    import time
+    import warnings
+    from repro.experiments import cache as C
+
+    cache_dir = str(tmp_path)
+    for i in range(3):
+        C.store(cache_dir, f"s{i}", f"fp{i:016d}", {"v": i})
+        os.utime(C.artifact_path(cache_dir, f"s{i}", f"fp{i:016d}"),
+                 (time.time() - 100 + i, time.time() - 100 + i))
+    # touch s0: now s1 is the least recently used
+    assert C.load(cache_dir, "s0", "fp" + "0" * 14 + "00") is not None
+
+    C._EVICTION_WARNED = False
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        C.store(cache_dir, "s3", "fp" + "0" * 13 + "003", {"v": 3},
+                max_artifacts=3)
+        first = [x for x in w if issubclass(x.category, RuntimeWarning)]
+        assert len(first) == 1 and "cap" in str(first[0].message)
+    assert len(C.list_artifacts(cache_dir)) == 3
+    assert C.load(cache_dir, "s1", "fp" + "0" * 14 + "01") is None   # evicted
+    assert C.load(cache_dir, "s0", "fp" + "0" * 14 + "00") is not None
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        C.store(cache_dir, "s4", "fp" + "0" * 13 + "004", {"v": 4},
+                max_artifacts=3)
+        assert not [x for x in w if issubclass(x.category, RuntimeWarning)]
+
+
+def test_evicted_artifact_recomputes_byte_identical(tmp_path):
+    """An evicted sweep that gets requested again recomputes into the
+    SAME bytes (content-addressed determinism), checksum verified."""
+    spec = tiny_spec(name="lru-refetch", epsilon=EpsilonSpec(probe_m=2))
+    run_sweep(spec, cache_dir=str(tmp_path))
+    from repro.experiments import cache as C
+    from repro.experiments.spec import fingerprint as fp_fn
+    path = C.artifact_path(str(tmp_path), spec.name, fp_fn(spec))
+    first = open(path, "rb").read()
+    C.enforce_cap(str(tmp_path), 0)                # evict everything
+    assert C.list_artifacts(str(tmp_path)) == []
+    result = run_sweep(spec, cache_dir=str(tmp_path))
+    assert result["cache"]["hit"] is False         # really recomputed
+    assert open(path, "rb").read() == first        # byte-identical
+    assert C.load(str(tmp_path), spec.name, fp_fn(spec)) is not None
+
+
+def test_inflight_table_single_leader():
+    import threading
+    from repro.experiments.cache import InFlightTable
+
+    table = InFlightTable()
+    grants = []
+    start = threading.Barrier(8)
+
+    def race():
+        start.wait()
+        grants.append(table.lease("fp-x"))
+
+    ts = [threading.Thread(target=race) for _ in range(8)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert sum(grants) == 1                        # exactly one leader
+    assert table.n_inflight == 1
+    table.release("fp-x")
+    assert table.n_inflight == 0
+    assert table.wait("fp-x", timeout=0.01)        # nothing in flight
+    assert table.lease("fp-x")                     # leasable again
+    table.release("fp-x")
+
+
+def test_run_sweep_dedup_concurrent_single_compute(tmp_path):
+    """N concurrent run_sweep(dedup=True) calls on one fingerprint:
+    exactly one compute; every caller gets the same computational
+    payload."""
+    import threading
+    from repro.experiments import cache as C
+    from repro.experiments import runner as R
+
+    spec = tiny_spec(name="dedup-conc", iters=40)
+    results = []
+    lock = threading.Lock()
+
+    def go():
+        r = run_sweep(spec, cache_dir=str(tmp_path), dedup=True)
+        with lock:
+            results.append(r)
+
+    before = R.SWEEP_COMPUTES
+    ts = [threading.Thread(target=go) for _ in range(5)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert R.SWEEP_COMPUTES - before == 1
+    assert sorted(r["cache"]["hit"] for r in results) == \
+        [False, True, True, True, True]
+    payloads = set()
+    for r in results:
+        body = {k: v for k, v in r.items()
+                if k not in C.VOLATILE_KEYS + ("fingerprint", "checksum")}
+        payloads.add(json.dumps(body, sort_keys=True, default=float))
+    assert len(payloads) == 1

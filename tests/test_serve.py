@@ -8,7 +8,8 @@ import pytest
 from repro.configs.registry import get_arch
 from repro.models import model as M
 from repro.models.attention import KVCache, init_kv_cache, gqa_decode, init_gqa
-from repro.serve.engine import greedy_generate, init_serve_state, make_serve_step
+from repro.serve.engine import (SlotDriver, greedy_generate, init_serve_state,
+                               make_serve_step, mask_tree)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -77,3 +78,115 @@ def test_whisper_serve_uses_encoder():
                            enc_out=enc * 5.0)
     # different audio -> (almost surely) different transcript
     assert not np.array_equal(np.asarray(out1), np.asarray(out2))
+
+
+# ---------------------------------------------------------------------------
+# SlotDriver: the batched request driver (continuous-batching-lite)
+# ---------------------------------------------------------------------------
+
+def _counter_driver(n_slots):
+    """Toy workload: slot i counts up by its own increment until it
+    reaches its target — per-slot state that makes any cross-slot leak
+    immediately visible."""
+    init = {"x": jnp.zeros((n_slots,), jnp.float32),
+            "inc": jnp.ones((n_slots,), jnp.float32),
+            "target": jnp.full((n_slots,), 1e9, jnp.float32)}
+
+    def step(state, active):
+        new = dict(state, x=state["x"] + state["inc"])
+        return new, new["x"] >= new["target"]
+
+    return SlotDriver(step, init, n_slots)
+
+
+def test_slot_driver_admit_step_finish():
+    drv = _counter_driver(4)
+    assert drv.n_active == 0 and drv.step() == []
+    slot = drv.admit("a", {"x": 0.0, "inc": 2.0, "target": 6.0})
+    assert slot == 0 and drv.n_active == 1
+    finished = []
+    for _ in range(5):
+        finished.extend(drv.step())
+        if finished:
+            break
+    (rid, out), = finished
+    assert rid == "a"
+    assert float(out["x"]) == 6.0                  # 3 steps of +2
+    assert drv.n_active == 0                       # slot freed
+
+
+def test_slot_driver_positions_and_active_masking():
+    """Positions advance only for active slots; inactive slot state is
+    bit-frozen across steps."""
+    drv = _counter_driver(3)
+    drv.admit("a", {"x": 0.0, "inc": 1.0, "target": 10.0})
+    frozen_before = np.asarray(jax.device_get(drv.state["x"]))[1:]
+    drv.step()
+    drv.step()
+    assert list(drv.positions) == [2, 0, 0]
+    assert list(drv.active) == [True, False, False]
+    frozen_after = np.asarray(jax.device_get(drv.state["x"]))[1:]
+    np.testing.assert_array_equal(frozen_before, frozen_after)
+
+
+def test_slot_driver_recycles_slots():
+    """A freed slot is reused by the next admission and carries no state
+    from its previous occupant."""
+    drv = _counter_driver(2)
+    drv.admit("short", {"x": 0.0, "inc": 5.0, "target": 5.0})
+    (rid, out), = drv.step()
+    assert rid == "short"
+    slot = drv.admit("next", {"x": 0.0, "inc": 1.0, "target": 2.0})
+    assert slot == 0                               # recycled
+    outs = drv.run_to_completion()
+    assert outs[0][0] == "next" and float(outs[0][1]["x"]) == 2.0
+
+
+def test_slot_driver_neighbor_isolation():
+    """A request's result is identical whether it runs alone or with
+    neighbors admitted/finishing mid-flight — the PR's masking contract."""
+    def run(with_neighbors):
+        drv = _counter_driver(4)
+        drv.admit("a", {"x": 1.0, "inc": 0.5, "target": 4.0})
+        results = {}
+        step_i = 0
+        while drv.n_active or step_i == 0:
+            if with_neighbors and step_i == 1:
+                drv.admit("b", {"x": 0.0, "inc": 3.0, "target": 3.0})
+                drv.admit("c", {"x": -2.0, "inc": 1.0, "target": 0.0})
+            for rid, out in drv.step():
+                results[rid] = np.asarray(out["x"])
+            step_i += 1
+            if step_i > 50:
+                raise AssertionError("did not drain")
+        return results
+
+    alone = run(False)
+    crowded = run(True)
+    np.testing.assert_array_equal(alone["a"], crowded["a"])
+    assert set(crowded) == {"a", "b", "c"}
+    assert float(crowded["b"]) == 3.0
+    assert float(crowded["c"]) == 0.0
+
+
+def test_slot_driver_admit_when_full_returns_none():
+    drv = _counter_driver(1)
+    assert drv.admit("a", {"x": 0.0, "inc": 1.0, "target": 3.0}) == 0
+    assert drv.admit("b", {"x": 0.0, "inc": 1.0, "target": 3.0}) is None
+
+
+def test_slot_driver_validates_state_shape():
+    with pytest.raises(ValueError):
+        SlotDriver(lambda s, a: (s, a), {"x": jnp.zeros((3,))}, n_slots=4)
+    with pytest.raises(ValueError):
+        SlotDriver(lambda s, a: (s, a), {"x": jnp.zeros((1,))}, n_slots=0)
+
+
+def test_mask_tree_selects_per_slot():
+    active = jnp.asarray([True, False, True])
+    new = {"a": jnp.arange(3.0), "b": jnp.ones((3, 2))}
+    old = {"a": jnp.full((3,), -1.0), "b": jnp.zeros((3, 2))}
+    out = mask_tree(active, new, old)
+    np.testing.assert_array_equal(np.asarray(out["a"]), [0.0, -1.0, 2.0])
+    np.testing.assert_array_equal(np.asarray(out["b"]),
+                                  [[1, 1], [0, 0], [1, 1]])

@@ -1,0 +1,294 @@
+"""repro.service: batched-vs-sequential character parity, tier gating,
+single-flight escalation dedup, admission overflow, and the CLI."""
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.advisor import ScalabilityAdvisor
+from repro.experiments import runner as runner_mod
+from repro.experiments.spec import DatasetSpec
+from repro.service.api import AdvisorService, ProbeRequest
+from repro.service.batcher import ProbeBatcher
+from repro.service.queue import AdmissionQueue
+from repro.service.tiers import TierRouter
+from repro.service import __main__ as cli
+
+RNG = np.random.default_rng(7)
+
+
+def make_service(tmp_path, **kw):
+    kw.setdefault("cache_dir", str(tmp_path / "cache"))
+    kw.setdefault("sweep_iters", 50)
+    kw.setdefault("sweep_eval_every", 10)
+    kw.setdefault("n_slots", 4)
+    return AdvisorService(**kw)
+
+
+def small_ds(n=64, d=8, seed=0):
+    return DatasetSpec("higgs_like", {"n": n, "d": d}, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# batched front end == sequential advisor
+# ---------------------------------------------------------------------------
+
+def test_batched_characters_match_sequential():
+    """N mixed-shape probes through the slot batcher produce the same
+    characters and the same integer m_max predictions as N sequential
+    `from_dataset` calls."""
+    adv = ScalabilityAdvisor()
+    Xs = [RNG.normal(size=(30, 5)),
+          (RNG.random(size=(44, 9)) > 0.8) * RNG.normal(size=(44, 9)),
+          np.repeat(RNG.normal(size=(4, 6)), 10, axis=0)]   # duplicated rows
+    batcher = ProbeBatcher(n_slots=2, max_rows=64, max_cols=16)
+    measured = batcher.measure(list(enumerate(Xs)))
+    for i, X in enumerate(Xs):
+        seq = adv.from_dataset(X)
+        ch = measured[i]
+        for k in ("mean_feature_variance", "sparsity", "density",
+                  "omega_frac", "delta", "rho"):
+            assert abs(ch[k] - seq[k]) <= 1e-6, (i, k)
+        for k in ("n", "d", "diversity"):
+            assert ch[k] == seq[k], (i, k)
+
+
+def test_batched_predictions_match_sequential_exactly():
+    """Integer m_max per strategy must be EXACTLY the sequential answer —
+    the analytic tier shares the from_characters formulas."""
+    adv = ScalabilityAdvisor()
+    X = (RNG.random(size=(50, 12)) > 0.7) * RNG.normal(size=(50, 12))
+    router = TierRouter(cache_dir="/nonexistent-cache-dir")
+    ch = ProbeBatcher(n_slots=1, max_rows=64, max_cols=16).measure(
+        [("r", X)])["r"]
+    report = router.analytic_dataset_report(ch, {})
+    seq = adv.from_dataset(X)
+    for strat in ("hogwild", "sync", "dadm", "momentum", "local_sgd",
+                  "svrg"):
+        assert report[strat]["predicted_m_max"] == \
+            seq[strat]["predicted_m_max"], strat
+
+
+def test_batcher_slot_recycling_beyond_capacity():
+    """More probes than slots drain correctly across extra steps."""
+    batcher = ProbeBatcher(n_slots=2, max_rows=32, max_cols=8)
+    items = [(i, RNG.normal(size=(10 + i, 4))) for i in range(5)]
+    out = batcher.measure(items)
+    assert set(out) == set(range(5))
+    assert all(out[i] is not None for i in range(5))
+    assert out[3]["n"] == 13
+    assert batcher.stats()["steps"] >= 3          # 5 probes / 2 slots
+
+
+def test_batcher_oversize_fallback_matches():
+    """Probes beyond the slot envelope fall back to the group-envelope
+    masked batch and still match the sequential characters."""
+    batcher = ProbeBatcher(n_slots=2, max_rows=16, max_cols=4)
+    X = RNG.normal(size=(40, 10))                  # exceeds both dims
+    out = batcher.measure([("big", X)])
+    seq = ScalabilityAdvisor().from_dataset(X)
+    assert abs(out["big"]["mean_feature_variance"] -
+               seq["mean_feature_variance"]) <= 1e-6
+    assert batcher.stats()["fallback"] == 1
+
+
+# ---------------------------------------------------------------------------
+# tier gating
+# ---------------------------------------------------------------------------
+
+def test_analytic_tier_answers_without_sweeps(tmp_path):
+    """High-confidence probes exit at tier 1: zero sweeps executed."""
+    svc = make_service(tmp_path)
+    before = runner_mod.SWEEP_COMPUTES
+    resp = svc.probe(ProbeRequest(X=RNG.normal(size=(40, 6))))
+    assert resp.status == "ok" and resp.tier == "analytic"
+    assert resp.confidence == pytest.approx(0.75)  # CONFIDENCE_PRIOR
+    assert resp.confidence_detail["source"] == "prior"
+    assert resp.escalation is None
+    assert runner_mod.SWEEP_COMPUTES == before
+
+
+def test_low_confidence_escalates_to_measured(tmp_path):
+    """A threshold above the prior forces spec-carrying probes into the
+    measured tier; the response carries the sweep readout."""
+    svc = make_service(tmp_path, confidence_threshold=0.9)
+    resp = svc.probe(ProbeRequest(dataset=small_ds()))
+    assert resp.tier == "measured"
+    assert resp.escalation["measured_m_max"] >= 1
+    assert resp.escalation["healthy"]
+    assert resp.escalation["status"] == "ok"
+    # the measured artifact exists on disk where the response says
+    with open(resp.escalation["artifact_path"]) as f:
+        art = json.load(f)
+    assert art["fingerprint"] == resp.escalation["fingerprint"]
+
+
+def test_raw_probe_cannot_escalate_gets_note(tmp_path):
+    """Raw arrays carry no reproducible identity: forced escalation
+    returns the analytic answer plus a structured note, no sweep."""
+    svc = make_service(tmp_path)
+    before = runner_mod.SWEEP_COMPUTES
+    resp = svc.probe(ProbeRequest(X=RNG.normal(size=(30, 4)),
+                                  escalate=True))
+    assert resp.tier == "analytic"
+    assert "escalation unavailable" in resp.note
+    assert runner_mod.SWEEP_COMPUTES == before
+
+
+def test_escalate_false_never_sweeps(tmp_path):
+    svc = make_service(tmp_path, confidence_threshold=0.99)
+    before = runner_mod.SWEEP_COMPUTES
+    resp = svc.probe(ProbeRequest(dataset=small_ds(), escalate=False))
+    assert resp.tier == "analytic"
+    assert runner_mod.SWEEP_COMPUTES == before
+
+
+def test_invalid_probes_get_structured_reports(tmp_path):
+    svc = make_service(tmp_path)
+    for req, frag in [
+            (ProbeRequest(X=np.full((4, 3), np.nan)), "non-finite"),
+            (ProbeRequest(X=np.zeros((1, 3))), "too small"),
+            (ProbeRequest(grads=[]), "empty shard list"),
+            (ProbeRequest(grads=[[np.ones(3)]]), "single gradient shard")]:
+        resp = svc.probe(req)
+        assert resp.status == "invalid"
+        assert resp.report["valid"] is False
+        assert frag in resp.report["reason"]
+        assert resp.report["predicted_m_max_conservative"] == 1
+
+
+def test_grads_probe_analytic(tmp_path):
+    svc = make_service(tmp_path)
+    grads = [[RNG.normal(size=(6,))] for _ in range(4)]
+    resp = svc.probe(ProbeRequest(grads=grads))
+    assert resp.status == "ok" and resp.tier == "analytic"
+    seq = ScalabilityAdvisor().from_grads(grads)
+    assert resp.report["predicted_m_max_sync"] == \
+        seq["predicted_m_max_sync"]
+    assert abs(resp.report["grad_variance"] - seq["grad_variance"]) <= 1e-6
+
+
+# ---------------------------------------------------------------------------
+# E2E: concurrent escalations collapse into ONE sweep
+# ---------------------------------------------------------------------------
+
+def test_concurrent_shared_fingerprint_runs_one_sweep(tmp_path):
+    """The PR's acceptance test: N concurrent probes sharing a SweepSpec
+    fingerprint execute exactly one sweep, and every waiter receives the
+    identical artifact."""
+    svc = make_service(tmp_path)
+    ds = small_ds(seed=3)
+    before = runner_mod.SWEEP_COMPUTES
+    responses = []
+    lock = threading.Lock()
+
+    def go():
+        r = svc.probe(ProbeRequest(dataset=ds, escalate=True))
+        with lock:
+            responses.append(r)
+
+    threads = [threading.Thread(target=go) for _ in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+
+    assert len(responses) == 6
+    assert all(r.tier == "measured" for r in responses)
+    assert runner_mod.SWEEP_COMPUTES - before == 1     # exactly one sweep
+    blobs = {json.dumps(r.escalation["artifact"], sort_keys=True,
+                        default=float) for r in responses}
+    assert len(blobs) == 1                             # identical artifact
+    fps = {r.escalation["fingerprint"] for r in responses}
+    assert len(fps) == 1
+
+
+def test_batched_requests_one_sweep_via_cache(tmp_path):
+    """probe_batch: identical escalated requests in one batch execute one
+    sweep (leader) and the rest are cache hits."""
+    svc = make_service(tmp_path)
+    ds = small_ds(seed=5)
+    before = runner_mod.SWEEP_COMPUTES
+    reqs = [ProbeRequest(dataset=ds, escalate=True) for _ in range(3)]
+    resp = svc.probe_batch(reqs)
+    assert [r.tier for r in resp] == ["measured"] * 3
+    assert runner_mod.SWEEP_COMPUTES - before == 1
+    assert [r.escalation["cache_hit"] for r in resp] == [False, True, True]
+
+
+# ---------------------------------------------------------------------------
+# admission / overload
+# ---------------------------------------------------------------------------
+
+def test_queue_overflow_sheds_with_structured_response(tmp_path):
+    """Requests beyond the depth get ``overloaded``; under-capacity
+    requests in the same batch are still answered."""
+    svc = make_service(tmp_path, queue_depth=2)
+    reqs = [ProbeRequest(X=RNG.normal(size=(20, 4))) for _ in range(5)]
+    responses = svc.probe_batch(reqs)
+    by_status = {}
+    for r in responses:
+        by_status.setdefault(r.status, []).append(r)
+    assert len(by_status["ok"]) == 2
+    assert len(by_status["overloaded"]) == 3
+    for r in by_status["overloaded"]:
+        assert r.tier is None
+        assert "admission queue full" in r.note
+    for r in by_status["ok"]:
+        assert r.report["valid"]
+    # slots were released: the next probe is admitted again
+    assert svc.probe(ProbeRequest(X=RNG.normal(size=(20, 4)))).status == "ok"
+    assert svc.queue.stats()["shed"] == 3
+
+
+def test_admission_queue_contract():
+    q = AdmissionQueue(2)
+    assert q.try_admit() and q.try_admit()
+    assert not q.try_admit()
+    q.release()
+    assert q.try_admit()
+    assert q.stats()["shed"] == 1
+    with pytest.raises(ValueError):
+        AdmissionQueue(0)
+
+
+# ---------------------------------------------------------------------------
+# confidence model over measured history
+# ---------------------------------------------------------------------------
+
+def test_confidence_moves_from_prior_to_regression(tmp_path):
+    """After enough measured sweeps land in the cache, the analytic tier's
+    confidence is regression-derived, not the prior."""
+    svc = make_service(tmp_path)
+    # 6 escalations over distinct datasets = 6 (characters, m_max) points
+    for i in range(6):
+        svc.probe(ProbeRequest(dataset=small_ds(n=48 + 8 * i, seed=i),
+                               escalate=True))
+    resp = svc.probe(ProbeRequest(dataset=small_ds(n=56, seed=1),
+                                  escalate=False))
+    assert resp.confidence_detail["source"] == "regression"
+    assert 0.0 <= resp.confidence <= 1.0
+    assert resp.confidence_detail["n_points"] >= 6
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_analytic_and_escalated(tmp_path, capsys):
+    cache = str(tmp_path / "cli-cache")
+    rc = cli.main(["--generator", "higgs_like", "--n", "64", "--d", "8",
+                   "--cache-dir", cache, "--sweep-iters", "50"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "tier=analytic" in out
+    rc = cli.main(["--generator", "higgs_like", "--n", "64", "--d", "8",
+                   "--cache-dir", cache, "--sweep-iters", "50",
+                   "--requests", "2", "--escalate", "--json"])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 0
+    tiers = [r["tier"] for r in payload["responses"]]
+    assert tiers == ["measured", "measured"]
+    assert payload["stats"]["tiers"]["escalations"] >= 2
