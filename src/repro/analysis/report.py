@@ -32,6 +32,11 @@ Sections:
      across all cached sweeps (anything `run_sweep` ever stored in the
      cache dir contributes points; diverged/failed jobs are excluded by
      their ``status``).
+  6. **where the time went** — the report's own sweep executions run
+     under the span tracer (`repro.telemetry`), and the last computed
+     sweep's phase breakdown (datasets / per-bucket lower-compile-execute
+     / journal / cache IO) is rendered as a table.  All-cache-hit renders
+     have nothing to attribute and say so.
 
 Results come from the artifact cache when fingerprints match (a report
 re-render is then pure formatting) or from a fresh run; ``--quick``,
@@ -55,6 +60,7 @@ from repro.analysis import fit, stats
 from repro.experiments import cache as artifact_cache
 from repro.experiments import registry, runner
 from repro.experiments.spec import ENGINE_VERSION
+from repro.telemetry import trace
 
 #: specs the report runs; upper_bound ships single-seed, so the report
 #: replicates it with this many seeds unless --seeds overrides
@@ -321,6 +327,29 @@ def render_regression(results: List[Dict]) -> List[str]:
     return lines + _table(head, rows) + [""]
 
 
+def render_telemetry(events: List[Dict]) -> List[str]:
+    """Section 6: phase breakdown of the report's last *computed* sweep
+    (cache hits execute nothing, so an all-hit render has no phases)."""
+    lines = ["## 6. where the time went (span trace)", ""]
+    bd = trace.phase_breakdown(events, root="sweep")
+    if bd["root"] is None:
+        return lines + ["every sweep above was served from the artifact "
+                        "cache — nothing was computed, so there is no "
+                        "compute to attribute (`--force` recomputes and "
+                        "fills this section).", ""]
+    lines += [f"last computed sweep: **{bd['wall_us'] / 1e6:.2f} s** "
+              f"wall-clock, {bd['coverage']:.0%} attributed to child "
+              f"phases (`repro.telemetry.trace`; re-run any spec with "
+              f"`repro.experiments.run --trace` for the full "
+              f"Perfetto-loadable timeline).", ""]
+    head = ["phase", "total (s)", "spans", "% of sweep"]
+    rows = [[name, f"{p['total_us'] / 1e6:.3f}", p["count"],
+             f"{p['frac_of_wall']:.1%}"]
+            for name, p in sorted(bd["phases"].items(),
+                                  key=lambda kv: -kv[1]["total_us"])]
+    return lines + _table(head, rows) + [""]
+
+
 def _table(head: List[str], rows: List[List[str]]) -> List[str]:
     out = ["| " + " | ".join(head) + " |",
            "|" + "|".join("---" for _ in head) + "|"]
@@ -373,15 +402,22 @@ def main(argv=None) -> int:
     seeds = args.seeds or DEFAULT_SEEDS["quick" if args.quick else "full"]
 
     results = {}
-    for name in REPORT_SPECS:
-        spec = registry.get_spec(name, quick=args.quick, iters=args.iters,
-                                 n=args.n, seeds=seeds)
-        if args.verbose:
-            print(f"[report] running {name} "
-                  f"(n_seeds={spec.n_seeds}) ...", flush=True)
-        results[name] = runner.run_sweep(spec, cache_dir=cache_dir,
-                                         force=args.force,
-                                         verbose=args.verbose)
+    # the report traces its own sweep executions; section 6 renders the
+    # phase breakdown of the last computed one (hits trace only lookups)
+    tracer = trace.start()
+    try:
+        for name in REPORT_SPECS:
+            spec = registry.get_spec(name, quick=args.quick,
+                                     iters=args.iters, n=args.n,
+                                     seeds=seeds)
+            if args.verbose:
+                print(f"[report] running {name} "
+                      f"(n_seeds={spec.n_seeds}) ...", flush=True)
+            results[name] = runner.run_sweep(spec, cache_dir=cache_dir,
+                                             force=args.force,
+                                             verbose=args.verbose)
+    finally:
+        trace.stop()
 
     lines = ["# Scalability report — seed-replicated statistics",
              "",
@@ -394,6 +430,7 @@ def main(argv=None) -> int:
     lines += render_critical_params(results["critical_params"])
     lines += render_fault_tolerance(results["fault_tolerance"])
     lines += render_regression(load_cached_results(cache_dir))
+    lines += render_telemetry(tracer.events)
 
     md = "\n".join(lines) + "\n"
     out_dir = os.path.dirname(args.out)

@@ -43,11 +43,31 @@ from jax.sharding import PartitionSpec as P
 from repro.core.algorithms.lr import LAMBDA, lr_grad, test_logloss
 from repro.distributed import mesh as mesh_mod
 from repro.resilience import faults
+from repro.telemetry import instrument, metrics
 
 #: compile counter for the sharded racing mode — `scripts/bench_engine.py
 #: dist_worker` snapshots it around the race timing (the engine's own
-#: `JIT_CALLS` only counts grid-path compiles)
-JIT_CALLS = 0
+#: `JIT_CALLS` only counts grid-path compiles).  Registry-backed (PR 9);
+#: the module-level ``JIT_CALLS`` read stays source-compatible via
+#: ``__getattr__`` below.
+_JIT_CALLS = metrics.counter(
+    "repro_distributed_race_jit_compiles_total",
+    help="racing-mode shard_map pipelines compiled")
+
+#: host-side communication accounting for the racing mode: every psum
+#: reconcile (scheduled sync rounds plus the forced per-eval sync) is one
+#: cross-device collective round — the comm-cost axis ROADMAP item 3
+#: models (wider sync_every trades staleness for fewer rounds)
+_PSUM_ROUNDS = metrics.counter(
+    "repro_distributed_psum_rounds_total",
+    help="psum reconcile rounds executed by the racing mode")
+
+
+def __getattr__(name):
+    # PEP 562 read alias for the legacy module global (see engine.py)
+    if name == "JIT_CALLS":
+        return _JIT_CALLS.value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def _build_race(X, y, Xte, yte, dmesh, *, w, gamma, lam, sync_every,
@@ -68,7 +88,6 @@ def _build_race(X, y, Xte, yte, dmesh, *, w, gamma, lam, sync_every,
     stale); corruption rewrites the gradient payload.  Zero-rate streams
     are bit-exact with the unfaulted pipeline.
     """
-    global JIT_CALLS
     axis = mesh_mod.SHARD_AXIS
 
     def shard_fn(x0, samples, mask):
@@ -181,7 +200,7 @@ def _build_race(X, y, Xte, yte, dmesh, *, w, gamma, lam, sync_every,
                       P(mesh_mod.SHARD_AXIS, None),
                       P(None, None, mesh_mod.SHARD_AXIS, None)),
             out_specs=(P(), P()), check_rep=False)
-    JIT_CALLS += 1
+    _JIT_CALLS.inc()
     return jax.jit(mapped, donate_argnums=(0,))
 
 
@@ -235,11 +254,22 @@ def run_hogwild_sharded(train, test, *, m: int = 8, iters: int = 4000,
                        fspec=fspec)
     x0 = jnp.zeros((train.X.shape[1],))
     if fspec is None:
-        x, losses = race(x0, samples, mask)
+        x, losses = instrument.dispatch(
+            race, x0, samples, mask, span_name="race",
+            m=m, devices=D, sync_every=sync_every)
     else:
         fstream = faults.make_stream(
             fspec, (n_evals, rounds_per_eval, D, w))
-        x, losses = race(x0, samples, mask, fstream)
+        x, losses = instrument.dispatch(
+            race, x0, samples, mask, fstream, span_name="race",
+            m=m, devices=D, sync_every=sync_every, faulted=True)
+    # host-side mirror of the pipeline's sync schedule: the global round
+    # counter r hits (r % sync_every == sync_every - 1) exactly
+    # R_total // sync_every times over R_total rounds, and every eval
+    # block forces one extra reconcile at its boundary
+    r_total = n_evals * rounds_per_eval
+    psum_rounds = r_total // sync_every + n_evals
+    _PSUM_ROUNDS.inc(psum_rounds)
     out = {
         "algorithm": "hogwild_sharded",
         "m": m,
@@ -250,6 +280,7 @@ def run_hogwild_sharded(train, test, *, m: int = 8, iters: int = 4000,
         "losses": jax.device_get(losses),
         "x": x,
         "iters_per_worker": iters / m,
+        "psum_rounds": psum_rounds,
     }
     if fspec is not None:
         out["fault"] = fspec.to_dict()

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.distributed.mesh import DeviceMesh
+from repro.telemetry import instrument, trace
 
 
 def pad_to_multiple(n: int, k: int) -> int:
@@ -85,10 +86,16 @@ def run_grid_sharded(make_sim_elem: Callable, ms: Sequence[int],
     for pos, m_pad in buckets:
         m_idx, s_idx, n_real = element_plan(pos, ms, n_seeds,
                                             dmesh.n_devices)
-        m_arr = jax.device_put(m_idx, sharded)
-        s_arr = jax.device_put(s_idx, sharded)
-        out = jit_fn(jax.vmap(make_sim_elem(m_pad)))(m_arr, s_arr)
-        out = np.asarray(jax.device_get(out))[:n_real]
+        with trace.span("shard_put", devices=dmesh.n_devices,
+                        elements=len(m_idx)):
+            m_arr = jax.device_put(m_idx, sharded)
+            s_arr = jax.device_put(s_idx, sharded)
+        out = instrument.dispatch(
+            jit_fn(jax.vmap(make_sim_elem(m_pad))), m_arr, s_arr,
+            span_name="mesh_bucket", devices=dmesh.n_devices,
+            elements=len(m_idx), m_pad=m_pad)
+        with trace.span("gather", elements=n_real):
+            out = np.asarray(jax.device_get(out))[:n_real]
         out = out.reshape(len(pos), n_seeds, -1)
         for k, i in enumerate(pos):
             rows[i] = out[k] if n_seeds > 1 else out[k, 0]

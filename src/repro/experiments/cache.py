@@ -53,8 +53,22 @@ import threading
 import warnings
 from typing import Dict, List, Optional
 
+from repro.telemetry import metrics
+
 DEFAULT_CACHE_DIR = os.environ.get(
     "REPRO_SWEEP_CACHE", os.path.join("results", "sweep_cache"))
+
+_HITS = metrics.counter("repro_cache_hits_total",
+                        help="artifact cache lookups served from disk")
+_MISSES = metrics.counter("repro_cache_misses_total",
+                          help="artifact cache lookups that missed")
+_EVICTIONS = metrics.counter("repro_cache_evictions_total",
+                             help="artifacts evicted by the LRU cap")
+_QUARANTINES = metrics.counter(
+    "repro_cache_quarantines_total",
+    help="artifacts quarantined after failing integrity verification")
+_STORES = metrics.counter("repro_cache_stores_total",
+                          help="artifacts written (atomic replace)")
 
 #: default artifact-count cap applied by `store` (0 / unset = unbounded,
 #: the pre-cap behavior; long-lived services should set a cap)
@@ -82,6 +96,7 @@ def _payload_checksum(payload: Dict) -> str:
 
 def _quarantine(path: str, reason: str) -> None:
     corrupt = path + ".corrupt"
+    _QUARANTINES.inc()
     try:
         os.replace(path, corrupt)
     except OSError:
@@ -102,23 +117,28 @@ def load(cache_dir: str, name: str, fp: str) -> Optional[Dict]:
         with open(path) as f:
             raw = f.read()
     except OSError:
+        _MISSES.inc()
         return None
     try:
         payload = json.loads(raw)
     except json.JSONDecodeError:
         _quarantine(path, "not parseable as JSON — truncated write?")
+        _MISSES.inc()
         return None
     if payload.get("fingerprint") != fp:      # foreign / stale artifact
+        _MISSES.inc()
         return None
     if "checksum" in payload and (
             payload["checksum"] != _payload_checksum(payload)):
         _quarantine(path, "payload checksum mismatch — bit rot or a "
                           "hand-edited artifact")
+        _MISSES.inc()
         return None
     try:
         os.utime(path, None)                  # recency = last use
     except OSError:
         pass
+    _HITS.inc()
     return payload
 
 
@@ -164,6 +184,7 @@ def enforce_cap(cache_dir: str, max_artifacts: int,
         except OSError:
             continue
         evicted.append(path)
+        _EVICTIONS.inc()
         excess -= 1
     if evicted and not _EVICTION_WARNED:
         _EVICTION_WARNED = True
@@ -200,6 +221,7 @@ def store(cache_dir: str, name: str, fp: str, payload: Dict,
         if os.path.exists(tmp):
             os.unlink(tmp)
         raise
+    _STORES.inc()
     cap = max_artifacts if max_artifacts is not None else DEFAULT_CACHE_CAP
     if cap is not None and cap > 0:
         enforce_cap(cache_dir, cap, keep=path)

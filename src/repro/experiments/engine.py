@@ -83,6 +83,7 @@ from repro.core.algorithms import run_hogwild
 from repro.core.algorithms.lr import LAMBDA
 from repro.distributed import mesh as dist_mesh
 from repro.distributed import partition as dist_partition
+from repro.telemetry import instrument, metrics, trace
 
 #: Pad-waste bound for `_buckets`: within a bucket, the padded worker axis
 #: is at most this multiple of the smallest member.
@@ -90,14 +91,41 @@ MAX_PAD_RATIO = 2.0
 
 #: Counts `jax.jit` wrappers actually dispatched by `_run_grid` — each one
 #: is traced and compiled exactly once here, so this is the engine's
-#: compile count.  `scripts/bench_engine.py` snapshots it around runs.
-JIT_CALLS = 0
+#: compile count.  Registry-backed (PR 9): increments are locked so the
+#: multi-threaded service counts exactly; the module-level ``JIT_CALLS``
+#: read (`scripts/bench_engine.py` snapshots, tests) stays source-
+#: compatible via ``__getattr__`` below.
+_JIT_CALLS = metrics.counter(
+    "repro_engine_jit_compiles_total",
+    help="jax.jit wrappers dispatched by the engine (one XLA compile each)")
+
+#: Fraction of the last vmapped grid's padded worker-axis FLOPs that were
+#: padding waste: 1 - sum(m) / sum(m_pad per member).  0 for a perfectly
+#: bucketed grid, approaching (1 - 1/MAX_PAD_RATIO) at the bound.
+_PAD_WASTE = metrics.gauge(
+    "repro_engine_pad_waste_ratio",
+    help="pad-waste fraction of the last grid: 1 - sum(m)/sum(m_pad)")
+
+
+def __getattr__(name):
+    # PEP 562 read alias: `engine.JIT_CALLS` was a racy module global;
+    # every external usage is a read, so it now reflects the registry
+    # counter (writes go through `_JIT_CALLS.inc()`).
+    if name == "JIT_CALLS":
+        return _JIT_CALLS.value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def _jit(fn):
-    global JIT_CALLS
-    JIT_CALLS += 1
+    _JIT_CALLS.inc()
     return jax.jit(fn)
+
+
+def _note_pad_waste(assignments) -> None:
+    """Record the grid's pad waste from ``(m, m_pad)`` member pairs."""
+    total = sum(pad for _, pad in assignments)
+    if total:
+        _PAD_WASTE.set(1.0 - sum(m for m, _ in assignments) / total)
 
 
 def _losses_dict(algorithm: str, ms, losses, iters: int, eval_every: int,
@@ -161,14 +189,25 @@ def _run_grid(make_sim, ms, use_vmap: bool, bucketed: bool = True):
     """
     m_top = max(ms)
     if not use_vmap:
+        _note_pad_waste([(m, m_top) for m in ms])
         jsim = _jit(make_sim(m_top))      # one compile serves every m
-        return jnp.stack([jsim(m) for m in jnp.asarray(ms, jnp.int32)])
+        return jnp.stack([
+            instrument.timed_call(jsim, m, span_name="grid_member",
+                                  m=int(m), m_pad=m_top)
+            for m in jnp.asarray(ms, jnp.int32)])
     if not bucketed:
-        return _jit(jax.vmap(make_sim(m_top)))(jnp.asarray(ms, jnp.int32))
+        _note_pad_waste([(m, m_top) for m in ms])
+        return instrument.dispatch(
+            _jit(jax.vmap(make_sim(m_top))), jnp.asarray(ms, jnp.int32),
+            span_name="bucket", m_pad=m_top, members=len(ms))
+    buckets = _buckets(ms)
+    _note_pad_waste([(ms[i], m_pad) for pos, m_pad in buckets for i in pos])
     rows = [None] * len(ms)
-    for pos, m_pad in _buckets(ms):
+    for pos, m_pad in buckets:
         sub = jnp.asarray([ms[i] for i in pos], jnp.int32)
-        out = _jit(jax.vmap(make_sim(m_pad)))(sub)
+        out = instrument.dispatch(
+            _jit(jax.vmap(make_sim(m_pad))), sub,
+            span_name="bucket", m_pad=m_pad, members=len(pos))
         for k, i in enumerate(pos):
             rows[i] = out[k]
     return jnp.stack(rows)
@@ -287,13 +326,17 @@ def sweep(algorithm: Union[str, alg_base.Algorithm], train, test,
     if alg.force_flat:
         bucketed = False
     dmesh = dist_mesh.resolve(mesh)
-    if dmesh is not None and dmesh.n_devices > 1 and use_vmap:
-        buckets = (_buckets(ms) if bucketed
-                   else [(tuple(range(len(ms))), m_top)])
-        losses = dist_partition.run_grid_sharded(
-            make_sim_elem, ms, n_seeds, dmesh, buckets, jit_fn=_jit)
-    else:
-        losses = _run_grid(make_sim, ms, use_vmap, bucketed)
+    with trace.span("grid", algorithm=alg.name, problem=prob.name,
+                    members=len(ms), n_seeds=n_seeds):
+        if dmesh is not None and dmesh.n_devices > 1 and use_vmap:
+            buckets = (_buckets(ms) if bucketed
+                       else [(tuple(range(len(ms))), m_top)])
+            _note_pad_waste([(ms[i], m_pad)
+                             for pos, m_pad in buckets for i in pos])
+            losses = dist_partition.run_grid_sharded(
+                make_sim_elem, ms, n_seeds, dmesh, buckets, jit_fn=_jit)
+        else:
+            losses = _run_grid(make_sim, ms, use_vmap, bucketed)
     return _losses_dict(alg.name, ms, losses, iters, eval_every,
                         problem=prob.name, n_seeds=n_seeds)
 
@@ -365,11 +408,13 @@ def sweep_hogwild(train, test, ms: Sequence[int], *, iters: int,
         # Legacy per-m reference path (re-jits per m): the vmapped grid is
         # equivalence-tested against this, i.e. against the original
         # recurrence rather than against another padded kernel.
-        global JIT_CALLS
-        JIT_CALLS += len(ms)
-        curves = [run_hogwild(train, test, m=int(m), iters=iters, gamma=gamma,
-                              lam=lam, eval_every=eval_every, key=key)["losses"]
-                  for m in ms]
+        _JIT_CALLS.inc(len(ms))
+        curves = []
+        for m in ms:
+            with trace.span("grid_member", m=int(m), legacy=True):
+                curves.append(run_hogwild(
+                    train, test, m=int(m), iters=iters, gamma=gamma,
+                    lam=lam, eval_every=eval_every, key=key)["losses"])
         return _losses_dict("hogwild", ms,
                             jnp.stack([jnp.asarray(c) for c in curves]),
                             iters, eval_every)

@@ -25,6 +25,15 @@ Repeated runs of an unchanged spec are served from the artifact cache
 (--force recomputes, --no-cache bypasses it).  --json writes the full
 result payload; the stdout report ends with the measured-vs-predicted
 m_max comparison whenever the spec produces both sides.
+
+``--trace out.json`` records the run as nested spans (sweep -> job ->
+bucket -> lower/compile/execute, journal and cache IO) and writes
+Chrome-trace / Perfetto JSON — load it at https://ui.perfetto.dev or
+summarize with ``python -m repro.telemetry --summarize out.json``.
+``--metrics`` dumps the process metrics registry (Prometheus text) after
+the run.  Both are observational: the sweep executes the same code and
+the artifact bytes are identical with or without them
+(docs/observability.md).
 """
 
 from __future__ import annotations
@@ -39,6 +48,8 @@ from repro.core.algorithms import base as alg_base
 from repro.data import synth
 from repro.distributed import get_mesh
 from repro.experiments import registry, runner
+from repro.telemetry import metrics as metrics_mod
+from repro.telemetry import trace
 
 
 def _print_report(result: dict) -> None:
@@ -161,6 +172,13 @@ def main(argv=None) -> int:
                     help="sequential per-m loop instead of the vmapped grid "
                          "(never sharded)")
     ap.add_argument("--json", help="also write the full result to this path")
+    ap.add_argument("--trace", metavar="TRACE_JSON",
+                    help="record the run as spans and write Chrome-trace / "
+                         "Perfetto JSON here (observational only — "
+                         "artifact bytes are unchanged)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="dump the process metrics registry (Prometheus "
+                         "text) after the run")
     ap.add_argument("-v", "--verbose", action="store_true")
     args = ap.parse_args(argv)
 
@@ -192,15 +210,32 @@ def main(argv=None) -> int:
     except ValueError as e:
         print(f"mesh: not resolvable here ({e}); cached artifacts still "
               f"serve, a fresh compute will fail")
-    result = runner.run_sweep(spec, use_cache=not args.no_cache,
-                              force=args.force, cache_dir=args.cache_dir,
-                              use_vmap=not args.seq, verbose=args.verbose,
-                              mesh=devices)
+    # the tracer brackets run_sweep tightly, so the root "sweep" span
+    # attributes ~all of the traced wall-clock (the >=95% coverage gate
+    # in CI's traced smoke); a cache hit traces only the lookup
+    if args.trace:
+        trace.start()
+    try:
+        result = runner.run_sweep(spec, use_cache=not args.no_cache,
+                                  force=args.force, cache_dir=args.cache_dir,
+                                  use_vmap=not args.seq, verbose=args.verbose,
+                                  mesh=devices)
+    finally:
+        if args.trace:
+            trace.stop()
+            trace.export(args.trace)
+            print(f"wrote trace {args.trace} (load at "
+                  f"https://ui.perfetto.dev, or: python -m repro.telemetry "
+                  f"--summarize {args.trace})")
     _print_report(result)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(result, f, indent=1, default=float)
         print(f"wrote {args.json}")
+    if args.metrics:
+        print()
+        print(metrics_mod.REGISTRY.render_prometheus(prefix="repro_"),
+              end="")
     return 0
 
 

@@ -69,6 +69,7 @@ from repro.experiments import engine
 from repro.experiments import spec as spec_mod
 from repro.experiments.spec import SweepSpec
 from repro.resilience import journal as journal_mod
+from repro.telemetry import metrics, trace
 
 #: theory-side m_max predictor per Algorithm.predictor kind — the
 #: vectorized `repro.analysis.fit` scans (the scalar while-loops in
@@ -99,8 +100,36 @@ DEFAULT_CHARACTERS_ROWS = 512
 
 #: process-wide count of sweeps actually *computed* (cache hits and
 #: dedup-follower waits don't increment) — tests and the service bench
-#: read it to prove single-flight dedup executes exactly one sweep
-SWEEP_COMPUTES = 0
+#: read it to prove single-flight dedup executes exactly one sweep.
+#: Registry-backed (PR 9): increments are locked, so exact deltas hold
+#: under the service's concurrent probes; the module-level
+#: ``SWEEP_COMPUTES`` read stays source-compatible via ``__getattr__``.
+_SWEEP_COMPUTES = metrics.counter(
+    "repro_sweep_computes_total",
+    help="sweeps actually computed (cache hits / dedup waits excluded)")
+_DEDUP_LEADER = metrics.counter(
+    "repro_sweep_dedup_leader_total",
+    help="single-flight leases won (this caller computed for the group)")
+_DEDUP_WAITER = metrics.counter(
+    "repro_sweep_dedup_waiter_total",
+    help="single-flight waits (this caller blocked on a leader's compute)")
+_JOB_RETRIES = metrics.counter(
+    "repro_sweep_job_retries_total",
+    help="job attempts beyond the first (raised or non-finite curves)")
+_JOURNAL_APPENDS = metrics.counter(
+    "repro_journal_appends_total",
+    help="finished jobs appended to a crash journal")
+_JOURNAL_REPLAYS = metrics.counter(
+    "repro_journal_replays_total",
+    help="jobs replayed from a crash journal instead of recomputed")
+
+
+def __getattr__(name):
+    # PEP 562 read alias for the legacy module global (see engine.py)
+    if name == "SWEEP_COMPUTES":
+        return _SWEEP_COMPUTES.value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
 
 #: process-wide single-flight table for `run_sweep(dedup=True)` callers
 _INFLIGHT = artifact_cache.InFlightTable()
@@ -149,8 +178,10 @@ def _run_job_with_retries(spec: SweepSpec, job, tr, te, dmesh, use_vmap: bool,
     last_exc: Optional[BaseException] = None
     jr: Optional[Dict] = None
     for attempt in range(max_retries + 1):
-        if attempt and retry_backoff_s > 0:
-            time.sleep(retry_backoff_s * (2 ** (attempt - 1)))
+        if attempt:
+            _JOB_RETRIES.inc()
+            if retry_backoff_s > 0:
+                time.sleep(retry_backoff_s * (2 ** (attempt - 1)))
         try:
             jr = engine.run_algorithm_sweep(
                 job.algorithm, tr, te, spec.ms, iters=spec.iters,
@@ -218,7 +249,6 @@ def run_sweep(spec: SweepSpec, *, use_cache: bool = True, force: bool = False,
     for every escalation).  ``cache_cap`` forwards to
     `cache.store(max_artifacts=...)` for LRU-bounded artifact dirs.
     """
-    global SWEEP_COMPUTES
     spec.validate()
     cache_dir = cache_dir or artifact_cache.DEFAULT_CACHE_DIR
     fp = spec_mod.fingerprint(spec)
@@ -245,11 +275,14 @@ def run_sweep(spec: SweepSpec, *, use_cache: bool = True, force: bool = False,
             # leader: re-check the cache once (a prior leader may have
             # stored between our miss and the lease), then compute
             leased = True
+            _DEDUP_LEADER.inc()
             continue
         # follower: block until the leader releases, then re-check the
         # cache — on leader success that's a hit; on leader failure the
         # loop retries the lease (one follower takes over)
-        _INFLIGHT.wait(fp)
+        _DEDUP_WAITER.inc()
+        with trace.span("dedup_wait", fingerprint=fp[:12]):
+            _INFLIGHT.wait(fp)
 
     try:
         return _compute_sweep(
@@ -271,14 +304,31 @@ def _compute_sweep(spec: SweepSpec, fp: str, cache_dir: str, *,
                    cache_cap: Optional[int]) -> Dict:
     """The cache-miss path of `run_sweep`: journal replay, job execution,
     readouts, artifact store.  Split out so the dedup lease in
-    `run_sweep` wraps exactly one compute in try/finally."""
-    global SWEEP_COMPUTES
-    SWEEP_COMPUTES += 1
+    `run_sweep` wraps exactly one compute in try/finally.  The whole
+    compute runs under a root ``sweep`` span — its children (datasets,
+    per-job grids, journal/cache IO) are the phase breakdown the report
+    and ``--trace`` surface."""
+    with trace.span("sweep", spec=spec.name, fingerprint=fp[:12],
+                    jobs=len(spec.jobs)):
+        return _compute_sweep_inner(
+            spec, fp, cache_dir, use_cache=use_cache, force=force,
+            use_vmap=use_vmap, verbose=verbose, mesh=mesh, journal=journal,
+            max_retries=max_retries, retry_backoff_s=retry_backoff_s,
+            cache_cap=cache_cap)
+
+
+def _compute_sweep_inner(spec: SweepSpec, fp: str, cache_dir: str, *,
+                         use_cache: bool, force: bool, use_vmap: bool,
+                         verbose: bool, mesh, journal: bool,
+                         max_retries: int, retry_backoff_s: float,
+                         cache_cap: Optional[int]) -> Dict:
+    _SWEEP_COMPUTES.inc()
 
     jpath = journal_mod.journal_path(cache_dir, spec.name, fp)
     journaled: Dict[str, Dict] = {}
     if use_cache and journal and not force:
-        journaled = journal_mod.read_entries(jpath, fp)
+        with trace.span("journal_read"):
+            journaled = journal_mod.read_entries(jpath, fp)
         if verbose and journaled:
             print(f"[{spec.name}] resuming: {len(journaled)} job(s) "
                   f"replayed from crash journal {jpath}")
@@ -290,7 +340,10 @@ def _compute_sweep(spec: SweepSpec, fp: str, cache_dir: str, *,
         "backend": jax.default_backend(),
     }
 
-    t0 = time.time()
+    # perf_counter is monotonic — wall-clock (time.time) steps under NTP
+    # corrections and corrupted elapsed_s; the value is volatile
+    # (cache.VOLATILE_KEYS) so the switch cannot change artifact bytes
+    t0 = time.perf_counter()
     # the persisted spec dict is exactly the fingerprinted one: two
     # requests differing only in execution fields share a fingerprint,
     # so the artifact they race to write must be byte-identical too
@@ -298,21 +351,23 @@ def _compute_sweep(spec: SweepSpec, fp: str, cache_dir: str, *,
                     "spec": spec_mod.computational_dict(spec),
                     "datasets": {}, "jobs": {}}
 
-    datasets = {name: spec_mod.build_dataset(ds)
-                for name, ds in spec.datasets.items()}
-    splits = {name: spec_mod.split_dataset(spec.datasets[name], data,
-                                           spec.split_seed)
-              for name, data in datasets.items()}
+    with trace.span("datasets", count=len(spec.datasets)):
+        datasets = {name: spec_mod.build_dataset(ds)
+                    for name, ds in spec.datasets.items()}
+        splits = {name: spec_mod.split_dataset(spec.datasets[name], data,
+                                               spec.split_seed)
+                  for name, data in datasets.items()}
 
-    for name, data in datasets.items():
-        info: Dict = {"n": int(data.X.shape[0]), "d": int(data.X.shape[1])}
-        if spec.measure_csim > 0:
-            info["csim"] = MX.csim(data.X[:spec.csim_rows],
-                                   spec.measure_csim)
-        # every dataset self-reports its §IV characters into the result
-        rows = spec.characters_rows or DEFAULT_CHARACTERS_ROWS
-        info["characters"] = MX.summarize(data.X[:rows])
-        result["datasets"][name] = info
+        for name, data in datasets.items():
+            info: Dict = {"n": int(data.X.shape[0]),
+                          "d": int(data.X.shape[1])}
+            if spec.measure_csim > 0:
+                info["csim"] = MX.csim(data.X[:spec.csim_rows],
+                                       spec.measure_csim)
+            # every dataset self-reports its §IV characters into the result
+            rows = spec.characters_rows or DEFAULT_CHARACTERS_ROWS
+            info["characters"] = MX.summarize(data.X[:rows])
+            result["datasets"][name] = info
 
     for job in spec.jobs:
         if job.key in journaled:
@@ -321,15 +376,18 @@ def _compute_sweep(spec: SweepSpec, fp: str, cache_dir: str, *,
             # an uninterrupted run would have put here
             if verbose:
                 print(f"[{spec.name}] {job.key}: resumed from journal")
+            _JOURNAL_REPLAYS.inc()
             result["jobs"][job.key] = journaled[job.key]
             continue
         if verbose:
             print(f"[{spec.name}] sweep {job.key} over m={list(spec.ms)}")
         alg_cls = alg_base.get_algorithm(job.algorithm)
         tr, te = splits[job.dataset]
-        jr, status = _run_job_with_retries(
-            spec, job, tr, te, dmesh, use_vmap,
-            max_retries, retry_backoff_s, verbose)
+        with trace.span("job", key=job.key, algorithm=job.algorithm,
+                        dataset=job.dataset):
+            jr, status = _run_job_with_retries(
+                spec, job, tr, te, dmesh, use_vmap,
+                max_retries, retry_backoff_s, verbose)
         jr["dataset"] = job.dataset
         jr["status"] = status
         if status == "diverged":
@@ -349,31 +407,35 @@ def _compute_sweep(spec: SweepSpec, fp: str, cache_dir: str, *,
                 f"in its place", RuntimeWarning, stacklevel=2)
         healthy = job_is_healthy(jr)
 
-        if spec.epsilon is not None and healthy:
-            eps = _epsilon_from_probe(jr, spec.epsilon)
-            costs, gg, bound = _cost_readout(
-                jr, eps, asynchronous=alg_cls.asynchronous)
-            jr.update(epsilon=eps, costs=costs, gain_growth=gg,
-                      measured_m_max=int(bound))
+        with trace.span("readout", key=job.key):
+            if spec.epsilon is not None and healthy:
+                eps = _epsilon_from_probe(jr, spec.epsilon)
+                costs, gg, bound = _cost_readout(
+                    jr, eps, asynchronous=alg_cls.asynchronous)
+                jr.update(epsilon=eps, costs=costs, gain_growth=gg,
+                          measured_m_max=int(bound))
 
-        if job.predict and healthy:
-            X = datasets[job.dataset].X
-            if job.predict_rows > 0:
-                X = X[:job.predict_rows]
-            jr["predicted"] = _predict(alg_cls.predictor, X, job.kwargs)
+            if job.predict and healthy:
+                X = datasets[job.dataset].X
+                if job.predict_rows > 0:
+                    X = X[:job.predict_rows]
+                jr["predicted"] = _predict(alg_cls.predictor, X, job.kwargs)
 
         result["jobs"][job.key] = jr
         if use_cache and journal:
-            journal_mod.append_entry(jpath, fp, job.key, jr)
+            with trace.span("journal_append", key=job.key):
+                journal_mod.append_entry(jpath, fp, job.key, jr)
+            _JOURNAL_APPENDS.inc()
 
-    result["elapsed_s"] = time.time() - t0
+    result["elapsed_s"] = time.perf_counter() - t0
     path = None
     if use_cache:
-        path = artifact_cache.store(cache_dir, spec.name, fp, result,
-                                    max_artifacts=cache_cap)
-        if journal:
-            # the artifact now supersedes the journal
-            journal_mod.consume(jpath)
+        with trace.span("store"):
+            path = artifact_cache.store(cache_dir, spec.name, fp, result,
+                                        max_artifacts=cache_cap)
+            if journal:
+                # the artifact now supersedes the journal
+                journal_mod.consume(jpath)
     result["cache"] = {"hit": False, "path": path}
     result["execution"] = execution
     return result

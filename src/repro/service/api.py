@@ -22,6 +22,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import threading
+import time
 from typing import Any, Dict, List, Optional
 
 import numpy as np
@@ -33,8 +34,27 @@ from repro.experiments.spec import DatasetSpec, SweepSpec
 from repro.service.batcher import ProbeBatcher
 from repro.service.queue import AdmissionQueue
 from repro.service.tiers import DEFAULT_CONFIDENCE_THRESHOLD, TierRouter
+from repro.telemetry import metrics, trace
 
 _REQUEST_IDS = itertools.count()
+
+#: per-tier routing latency (seconds), labeled by the tier that answered:
+#: "analytic" is sub-ms formula evaluation, "measured" includes the
+#: escalated sweep (or its cache/dedup hit) — the split IS the service's
+#: latency story
+_TIER_LATENCY = {
+    t: metrics.histogram("repro_service_tier_latency_seconds",
+                         help="probe routing latency by answering tier",
+                         labels={"tier": t})
+    for t in ("analytic", "measured", "invalid")
+}
+
+#: distribution of analytic confidences at routing time — mass below the
+#: escalation threshold is the fraction of traffic buying measurements
+_CONFIDENCE = metrics.histogram(
+    "repro_service_confidence",
+    help="analytic confidence observed per routed probe",
+    buckets=(0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0))
 
 
 @dataclasses.dataclass
@@ -138,10 +158,22 @@ class AdvisorService:
                                     f"{self.queue.depth}); shed — retry "
                                     f"after in-flight probes drain")
         try:
-            characters = self._measure(admitted)
+            with trace.span("measure_batch", n=len(admitted)):
+                characters = self._measure(admitted)
             for r in admitted:
-                responses[r.request_id] = self._respond(
-                    r, characters.get(r.request_id))
+                t0 = time.perf_counter()
+                with trace.span("respond", request_id=r.request_id):
+                    resp = self._respond(r, characters.get(r.request_id))
+                tier = resp.tier if resp.tier is not None else "invalid"
+                _TIER_LATENCY[tier].observe(time.perf_counter() - t0)
+                if resp.tier is not None:
+                    # the analytic confidence that routed the probe — for
+                    # measured answers that's the pre-escalation one
+                    conf = resp.confidence_detail
+                    if resp.tier == "measured":
+                        conf = conf.get("analytic", {})
+                    _CONFIDENCE.observe(float(conf.get("confidence", 0.0)))
+                responses[r.request_id] = resp
         finally:
             for _ in admitted:
                 self.queue.release()
@@ -227,4 +259,9 @@ class AdvisorService:
         return {"queue": self.queue.stats(),
                 "batcher": self.batcher.stats(),
                 "tiers": self.tiers.stats(),
-                "sweep_computes": runner_mod.SWEEP_COMPUTES}
+                "sweep_computes": runner_mod.SWEEP_COMPUTES,
+                # registry-backed observability block: service counters /
+                # gauges / latency+confidence histograms, JSON-shaped
+                # exactly like `python -m repro.telemetry --format json`
+                "telemetry": metrics.REGISTRY.to_dict(
+                    prefix="repro_service")}

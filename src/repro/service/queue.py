@@ -14,13 +14,28 @@ from __future__ import annotations
 import threading
 from typing import Dict
 
+from repro.telemetry import metrics
+
+_ADMITTED = metrics.counter("repro_service_admitted_total",
+                            help="probe requests admitted past the gate")
+_SHED = metrics.counter("repro_service_shed_total",
+                        help="probe requests shed at admission (overload)")
+_DEPTH = metrics.gauge("repro_service_queue_depth",
+                       help="probes currently holding an admission slot")
+_HIGH_WATER = metrics.gauge(
+    "repro_service_queue_high_water",
+    help="max concurrent in-service probes since process start")
+
 
 class AdmissionQueue:
     """Non-blocking admission gate with a fixed depth.
 
     ``try_admit`` takes a slot if one is free (and counts the request);
     ``release`` returns it.  Shed requests are counted but never queued —
-    load shedding is the contract, not buffering."""
+    load shedding is the contract, not buffering.  ``high_water`` is the
+    deepest concurrent occupancy seen — the capacity-planning number: a
+    high-water mark at ``depth`` with nonzero ``shed`` means the gate is
+    actually clipping load, not just sized generously."""
 
     def __init__(self, depth: int):
         if depth < 1:
@@ -31,6 +46,7 @@ class AdmissionQueue:
         self._in_service = 0
         self.admitted = 0
         self.shed = 0
+        self.high_water = 0
 
     def try_admit(self) -> bool:
         ok = self._sem.acquire(blocking=False)
@@ -38,13 +54,22 @@ class AdmissionQueue:
             if ok:
                 self.admitted += 1
                 self._in_service += 1
+                if self._in_service > self.high_water:
+                    self.high_water = self._in_service
+                _DEPTH.set(self._in_service)
             else:
                 self.shed += 1
+        if ok:
+            _ADMITTED.inc()
+            _HIGH_WATER.set_max(self.high_water)
+        else:
+            _SHED.inc()
         return ok
 
     def release(self) -> None:
         with self._lock:
             self._in_service -= 1
+            _DEPTH.set(self._in_service)
         self._sem.release()
 
     @property
@@ -55,4 +80,5 @@ class AdmissionQueue:
     def stats(self) -> Dict:
         with self._lock:
             return {"depth": self.depth, "in_service": self._in_service,
-                    "admitted": self.admitted, "shed": self.shed}
+                    "admitted": self.admitted, "shed": self.shed,
+                    "high_water": self.high_water}

@@ -33,6 +33,12 @@ from repro.experiments import cache as artifact_cache
 from repro.experiments import runner as runner_mod
 from repro.experiments import spec as spec_mod
 from repro.experiments.spec import EpsilonSpec, JobSpec, SweepSpec
+from repro.telemetry import metrics, trace
+
+_ANALYTIC = metrics.counter("repro_service_analytic_answers_total",
+                            help="probes answered by the analytic tier")
+_ESCALATIONS = metrics.counter("repro_service_escalations_total",
+                               help="probes escalated to a measured sweep")
 
 #: default analytic-tier confidence gate — sits below
 #: `fit.CONFIDENCE_PRIOR` (0.75) on purpose: a fresh service with no
@@ -134,6 +140,7 @@ class TierRouter:
         report["valid"] = True
         with self._lock:
             self.analytic_answers += 1
+        _ANALYTIC.inc()
         return report
 
     def analytic_grad_report(self, ch: Dict) -> Dict:
@@ -142,6 +149,7 @@ class TierRouter:
         report = self.advisor._grad_report(dict(ch))
         with self._lock:
             self.analytic_answers += 1
+        _ANALYTIC.inc()
         return report
 
     # -- tier 2: the measured sweep -----------------------------------------
@@ -173,13 +181,15 @@ class TierRouter:
         sp = self.escalation_spec(request)
         assert sp is not None, "escalate() requires an escalatable request"
         fp = spec_mod.fingerprint(sp)
-        result = runner_mod.run_sweep(
-            sp, cache_dir=self.cache_dir, dedup=True,
-            cache_cap=self.cache_cap)
-        art = artifact_cache.load(self.cache_dir, sp.name, fp) or result
+        with trace.span("escalate", spec=sp.name, fingerprint=fp[:12]):
+            result = runner_mod.run_sweep(
+                sp, cache_dir=self.cache_dir, dedup=True,
+                cache_cap=self.cache_cap)
+            art = artifact_cache.load(self.cache_dir, sp.name, fp) or result
         with self._lock:
             self.escalations += 1
             self._model_stale = True          # new measured history
+        _ESCALATIONS.inc()
         job_key = next(iter(art.get("jobs", {})), None)
         for key in art.get("jobs", {}):
             if key.startswith(f"{request.algorithm}/"):

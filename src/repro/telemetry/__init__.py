@@ -1,0 +1,40 @@
+"""repro.telemetry — spans, metrics, and profiling for the sweep stack.
+
+Three pieces (docs/observability.md):
+
+  * `repro.telemetry.trace` — a context-var span tracer.  Off by
+    default; `trace.start()` installs it, instrumented hot paths then
+    emit nested spans (sweep -> job -> bucket -> lower/compile/execute,
+    journal/cache IO, service tiers), and `trace.export(path)` writes
+    Chrome-trace / Perfetto JSON.  With tracing off every `span()` is a
+    shared no-op — the observational contract: the sweep path executes
+    the same code and produces byte-identical artifacts either way.
+  * `repro.telemetry.metrics` — an always-on, thread-safe registry of
+    named counters / gauges / histograms with JSON and Prometheus text
+    exposition.  It absorbs the legacy racy module globals:
+    ``engine.JIT_CALLS`` and ``runner.SWEEP_COMPUTES`` are now
+    registry-backed read aliases (existing reads stay source-
+    compatible; increments are locked).
+  * `repro.telemetry.instrument` — jax-aware helpers, notably the
+    per-bucket compile-vs-execute dispatch split (AOT lower/compile,
+    bit-identical results).
+
+CLI: ``python -m repro.telemetry`` dumps the process registry;
+``--summarize trace.json`` validates + phase-breaks a saved trace.
+
+This package deliberately has **no repro-internal imports** (and jax
+only inside `instrument`), so any module — core, experiments,
+distributed, service — can instrument itself without cycles.
+"""
+
+from repro.telemetry import trace
+from repro.telemetry.metrics import (REGISTRY, Counter, Gauge, Histogram,
+                                     MetricsRegistry, counter, gauge,
+                                     histogram)
+from repro.telemetry.trace import span
+
+__all__ = [
+    "trace", "span",
+    "REGISTRY", "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "counter", "gauge", "histogram",
+]

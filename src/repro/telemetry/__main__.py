@@ -1,0 +1,113 @@
+"""``python -m repro.telemetry`` — registry dump + trace summarizer.
+
+  PYTHONPATH=src python -m repro.telemetry                 # registry (prom text)
+  PYTHONPATH=src python -m repro.telemetry --format json   # registry (JSON)
+  PYTHONPATH=src python -m repro.telemetry \\
+      --summarize results/trace.json                       # trace phase report
+
+``--summarize`` loads a Chrome-trace JSON produced by
+``repro.experiments.run --trace`` (or `telemetry.trace.export`),
+validates the event schema, and prints the span-coverage + per-phase
+breakdown — the same aggregation the analysis report renders
+(`trace.phase_breakdown`).  The exit code is non-zero if ``--min-
+coverage`` is given and the trace's top-level spans attribute less than
+that fraction of its wall-clock (CI's traced-sweep smoke gate).
+
+The bare registry dump shows *this process's* metrics — mostly zeros
+from a fresh CLI process; its real consumers are in-process
+(`AdvisorService.stats`, the run CLI's ``--metrics`` flag) or a future
+HTTP exposition endpoint (ROADMAP).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.telemetry import REGISTRY, trace
+
+_REQUIRED_EVENT_KEYS = ("name", "ph", "ts", "dur", "pid", "tid")
+
+
+def summarize(path: str, root: str = "sweep") -> dict:
+    """Load + validate a Chrome-trace JSON; return the phase breakdown."""
+    with open(path) as f:
+        payload = json.load(f)
+    events = payload.get("traceEvents", payload if isinstance(payload, list)
+                         else [])
+    bad = [e for e in events
+           if not all(k in e for k in _REQUIRED_EVENT_KEYS)]
+    if bad:
+        raise ValueError(
+            f"{path}: {len(bad)} event(s) missing required keys "
+            f"{_REQUIRED_EVENT_KEYS} (first: {bad[0]!r})")
+    overall = trace.phase_breakdown(events)
+    scoped = trace.phase_breakdown(events, root=root)
+    return {"path": path, "n_events": len(events),
+            "overall": overall, "last_" + root: scoped}
+
+
+def _print_summary(s: dict, root: str) -> None:
+    ov = s["overall"]
+    print(f"{s['path']}: {s['n_events']} span(s), "
+          f"wall {ov['wall_us'] / 1e6:.3f} s, top-level coverage "
+          f"{ov['coverage']:.1%}")
+    scoped = s["last_" + root]
+    if scoped["root"]:
+        print(f"last '{root}' span: {scoped['wall_us'] / 1e6:.3f} s, "
+              f"child coverage {scoped['coverage']:.1%}")
+        phases = scoped["phases"]
+    else:
+        phases = ov["phases"]
+    width = max((len(n) for n in phases), default=4)
+    for name, p in sorted(phases.items(),
+                          key=lambda kv: -kv[1]["total_us"]):
+        print(f"  {name:<{width}}  {p['total_us'] / 1e6:9.3f} s  "
+              f"x{p['count']:<5d} {p['frac_of_wall']:6.1%}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.telemetry",
+        description="dump the metrics registry / summarize a trace")
+    ap.add_argument("--summarize", metavar="TRACE_JSON",
+                    help="validate + phase-break a Chrome-trace JSON")
+    ap.add_argument("--root", default="sweep",
+                    help="span name to scope the phase breakdown to "
+                         "(default: sweep)")
+    ap.add_argument("--min-coverage", type=float, default=None,
+                    help="exit non-zero if top-level span coverage of the "
+                         "trace wall-clock is below this fraction")
+    ap.add_argument("--format", choices=("prom", "json"), default="prom",
+                    help="registry dump format (default: prom text)")
+    ap.add_argument("--prefix", default="",
+                    help="only dump metrics whose name starts with this")
+    args = ap.parse_args(argv)
+
+    if args.summarize:
+        try:
+            s = summarize(args.summarize, root=args.root)
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+        _print_summary(s, args.root)
+        if args.min_coverage is not None and \
+                s["overall"]["coverage"] < args.min_coverage:
+            print(f"FAIL: coverage {s['overall']['coverage']:.1%} < "
+                  f"{args.min_coverage:.1%}", file=sys.stderr)
+            return 1
+        return 0
+
+    if args.format == "json":
+        json.dump(REGISTRY.to_dict(prefix=args.prefix), sys.stdout,
+                  indent=2, default=float)
+        print()
+    else:
+        out = REGISTRY.render_prometheus(prefix=args.prefix)
+        sys.stdout.write(out or "# (registry empty)\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

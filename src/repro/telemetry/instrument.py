@@ -1,0 +1,62 @@
+"""jax-aware tracing helpers: the per-dispatch compile-vs-execute split.
+
+A jitted grid function called through plain ``jfn(args)`` hides its cost
+structure: the first call pays trace + lower + XLA compile + execute in
+one opaque interval.  :func:`dispatch` splits that interval when (and
+only when) a tracer is installed, using jax's AOT path —
+``jfn.lower(*args)`` (trace + StableHLO lowering), ``lowered.compile()``
+(XLA), ``compiled(*args)`` (device execution, with a
+``block_until_ready`` so the execute span measures compute, not async
+dispatch) — which produces the *same executable from the same lowering*
+as the plain call, so results are bit-identical (pinned by the
+disabled-vs-enabled artifact byte-equality test).
+
+With tracing disabled, :func:`dispatch` is exactly ``jfn(*args)`` — no
+AOT, no blocking, no clock reads; the engine's hot path is the
+pre-telemetry code.
+
+Only use this for calls that run **once per jit wrapper** (the engine's
+per-bucket vmaps, the racing-mode pipeline): ``.lower()`` bypasses the
+jit call cache, so wrapping a warm repeated call would re-trace and
+re-compile every time.  Repeated-call sites (the sequential reference
+path) should use plain `trace.span` around the call instead.
+
+This is the one telemetry module that imports jax; `trace` and
+`metrics` stay stdlib-only so the dump CLI works anywhere.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.telemetry import trace
+
+
+def dispatch(jfn, *args, span_name: str = "bucket", **attrs):
+    """Call jitted ``jfn(*args)``; under an active tracer, emit a
+    ``span_name`` span with ``lower`` / ``compile`` / ``execute``
+    children (see module docs for the exactness contract)."""
+    if trace.active() is None:
+        return jfn(*args)
+    with trace.span(span_name, **attrs):
+        with trace.span("lower"):
+            lowered = jfn.lower(*args)
+        with trace.span("compile"):
+            compiled = lowered.compile()
+        with trace.span("execute"):
+            out = compiled(*args)
+            jax.block_until_ready(out)
+    return out
+
+
+def timed_call(fn, *args, span_name: str = "execute", **attrs):
+    """Plain-span twin of :func:`dispatch` for repeated-call sites: one
+    span around the call, blocked until ready so the duration is the
+    compute (first call includes its compile — attributed, not split,
+    because splitting would defeat the jit call cache)."""
+    if trace.active() is None:
+        return fn(*args)
+    with trace.span(span_name, **attrs):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return out

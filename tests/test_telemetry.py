@@ -1,0 +1,401 @@
+"""repro.telemetry: span schema/nesting, Perfetto export, registry
+thread-safety, legacy-counter parity, and the observational contract
+(artifact bytes identical with telemetry on or off)."""
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.data import synth
+from repro.experiments import cache as artifact_cache
+from repro.experiments import engine
+from repro.experiments import runner
+from repro.experiments import run as run_cli
+from repro.experiments import spec as spec_mod
+from repro.experiments.spec import (DatasetSpec, EpsilonSpec, JobSpec,
+                                    SweepSpec)
+from repro.service.api import AdvisorService, ProbeRequest
+from repro.service.queue import AdmissionQueue
+from repro.telemetry import MetricsRegistry, metrics, trace
+from repro.telemetry import __main__ as telemetry_cli
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_tracer():
+    """Every test starts and ends with tracing disabled — a leaked active
+    tracer would silently put every later test on the traced path."""
+    trace.stop()
+    yield
+    trace.stop()
+
+
+def tiny_spec(name, **kw):
+    kw.setdefault("ms", (1, 2))
+    kw.setdefault("iters", 40)
+    kw.setdefault("eval_every", 20)
+    kw.setdefault("datasets",
+                  {"d0": DatasetSpec("higgs_like", {"n": 96, "d": 8})})
+    kw.setdefault("jobs", (JobSpec("minibatch", "d0"),))
+    return SweepSpec(name=name, **kw).validate()
+
+
+# ---------------------------------------------------------------------------
+# span tracer: schema, nesting, export
+# ---------------------------------------------------------------------------
+
+def test_span_schema_nesting_and_export(tmp_path):
+    """Spans export as Chrome-trace "X" events with the required keys;
+    children are contained in their parent's interval and carry depth."""
+    trace.start()
+    with trace.span("sweep", spec="demo"):
+        with trace.span("bucket", m_pad=4):
+            with trace.span("compile"):
+                pass
+            with trace.span("execute"):
+                pass
+        with trace.span("store"):
+            pass
+    trace.stop()
+    path = trace.export(str(tmp_path / "t.json"))
+    payload = json.load(open(path))          # Perfetto-loadable JSON object
+    evs = payload["traceEvents"]
+    assert len(evs) == 5
+    for e in evs:
+        for k in ("name", "ph", "ts", "dur", "pid", "tid"):
+            assert k in e, (k, e)
+        assert e["ph"] == "X"
+    by = {e["name"]: e for e in evs}
+    assert by["sweep"]["args"]["depth"] == 0
+    assert by["bucket"]["args"]["depth"] == 1
+    assert by["compile"]["args"]["depth"] == 2
+    assert by["bucket"]["args"]["m_pad"] == 4
+    # containment: child interval inside parent interval
+    for child, parent in (("bucket", "sweep"), ("compile", "bucket"),
+                          ("execute", "bucket"), ("store", "sweep")):
+        c, p = by[child], by[parent]
+        assert c["ts"] >= p["ts"] - 1e-6
+        assert c["ts"] + c["dur"] <= p["ts"] + p["dur"] + 1e-6
+    # the CLI validator accepts it and scopes to the sweep root
+    s = telemetry_cli.summarize(path, root="sweep")
+    assert s["n_events"] == 5
+    assert s["last_sweep"]["root"] == "sweep"
+    assert set(s["last_sweep"]["phases"]) == {"bucket", "compile",
+                                             "execute", "store"}
+
+
+def test_disabled_spans_are_shared_noops():
+    """With no tracer installed, span() returns one shared no-op object:
+    nothing is allocated or recorded on the disabled hot path."""
+    assert trace.active() is None and not trace.enabled()
+    s1, s2 = trace.span("a", x=1), trace.span("b")
+    assert s1 is s2
+    with s1 as s:
+        s.set(anything=True)
+
+
+def test_spans_nest_per_thread():
+    """Concurrent threads carry independent span stacks (contextvars):
+    each thread's spans sit at depth 0/1 on its own tid."""
+    trace.start()
+
+    def work(i):
+        with trace.span("outer", thread=i):
+            with trace.span("inner", thread=i):
+                pass
+
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    tracer = trace.stop()
+    evs = tracer.events
+    assert len(evs) == 8
+    for i in range(4):
+        mine = [e for e in evs if e["args"]["thread"] == i]
+        assert sorted(e["args"]["depth"] for e in mine) == [0, 1]
+        assert len({e["tid"] for e in mine}) == 1
+
+
+def test_phase_breakdown_coverage_math():
+    """Union coverage merges overlaps; the root's own span is excluded
+    from the phase table."""
+    mk = lambda name, ts, dur, depth: {
+        "name": name, "ph": "X", "ts": ts, "dur": dur, "pid": 1, "tid": 1,
+        "args": {"depth": depth}}
+    evs = [mk("sweep", 0.0, 100.0, 0),
+           mk("job", 0.0, 60.0, 1), mk("job", 50.0, 40.0, 1)]
+    bd = trace.phase_breakdown(evs, root="sweep")
+    assert bd["root"] == "sweep"
+    assert bd["coverage"] == pytest.approx(0.9)      # [0,60)+[50,90) = 90
+    assert set(bd["phases"]) == {"job"}
+    assert bd["phases"]["job"]["count"] == 2
+    # without a root: depth-0 coverage over the trace wall
+    bd0 = trace.phase_breakdown(evs)
+    assert bd0["coverage"] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_counter_exact_under_threads():
+    """6 threads x 2000 increments land exactly 12000 — the locked
+    registry fixes the legacy racy `+= 1` module globals."""
+    reg = MetricsRegistry()
+    c = reg.counter("race_total")
+
+    def hammer():
+        for _ in range(2000):
+            c.inc()
+
+    threads = [threading.Thread(target=hammer) for _ in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert c.value == 12000
+
+
+def test_registry_kinds_labels_and_exposition():
+    reg = MetricsRegistry()
+    c = reg.counter("reqs_total", help="requests")
+    c.inc(3)
+    assert reg.counter("reqs_total") is c            # get-or-create
+    with pytest.raises(TypeError):                   # kind clash
+        reg.gauge("reqs_total")
+    with pytest.raises(ValueError):                  # counters are monotone
+        c.inc(-1)
+    g = reg.gauge("depth")
+    g.set(5); g.set_max(3)
+    assert g.value == 5
+    g.set_max(9)
+    assert g.value == 9
+    h = reg.histogram("lat_seconds", buckets=(0.01, 0.1, 1.0),
+                      labels={"tier": "analytic"})
+    for v in (0.005, 0.05, 0.5, 5.0):
+        h.observe(v)
+    snap = h.snapshot()
+    assert snap["buckets"] == {"0.01": 1, "0.1": 2, "1.0": 3}  # cumulative
+    assert snap["+inf"] == 4 and snap["count"] == 4
+    txt = reg.render_prometheus()
+    assert "# TYPE reqs_total counter" in txt
+    assert "reqs_total 3" in txt
+    assert 'lat_seconds_bucket{le="0.1",tier="analytic"} 2' in txt
+    assert 'lat_seconds_count{tier="analytic"} 4' in txt
+    d = reg.to_dict(prefix="reqs")
+    assert d == {"reqs_total": 3}
+
+
+# ---------------------------------------------------------------------------
+# legacy counter parity (engine.JIT_CALLS / runner.SWEEP_COMPUTES aliases)
+# ---------------------------------------------------------------------------
+
+def test_jit_calls_alias_counts_cold_vs_cached(tmp_path):
+    """The registry-backed engine.JIT_CALLS counts exactly what the
+    legacy global did: one compile per bucket on a cold sweep, zero on a
+    cache hit — traced or not."""
+    spec = tiny_spec("tel_parity", ms=(1, 2, 4, 8))   # 2 buckets @ ratio 2
+    cd = str(tmp_path / "cache")
+
+    j0, s0 = engine.JIT_CALLS, runner.SWEEP_COMPUTES
+    runner.run_sweep(spec, cache_dir=cd)
+    assert engine.JIT_CALLS - j0 == 2
+    assert runner.SWEEP_COMPUTES - s0 == 1
+
+    # cache hit: nothing executes, neither counter moves
+    j0, s0 = engine.JIT_CALLS, runner.SWEEP_COMPUTES
+    runner.run_sweep(spec, cache_dir=cd)
+    assert engine.JIT_CALLS - j0 == 0
+    assert runner.SWEEP_COMPUTES - s0 == 0
+
+    # tracing ON changes neither count (dispatch AOT is still one
+    # wrapper, counted at jit-wrap time)
+    trace.start()
+    j0 = engine.JIT_CALLS
+    runner.run_sweep(spec, cache_dir=str(tmp_path / "cache2"))
+    trace.stop()
+    assert engine.JIT_CALLS - j0 == 2
+
+
+def test_module_getattr_raises_for_unknown():
+    with pytest.raises(AttributeError):
+        engine.NO_SUCH_COUNTER
+    with pytest.raises(AttributeError):
+        runner.NO_SUCH_COUNTER
+
+
+# ---------------------------------------------------------------------------
+# the observational contract
+# ---------------------------------------------------------------------------
+
+def test_artifact_bytes_identical_with_tracing(tmp_path):
+    """Acceptance: artifacts are byte-identical with telemetry on vs off
+    — the AOT lower/compile/execute split produces the same executable
+    from the same lowering, and no telemetry state enters the payload."""
+    spec = tiny_spec("tel_bytes", ms=(1, 2, 4),
+                     epsilon=EpsilonSpec(probe_m=2))
+    fp = spec_mod.fingerprint(spec)
+
+    runner.run_sweep(spec, cache_dir=str(tmp_path / "off"))
+    trace.start()
+    runner.run_sweep(spec, cache_dir=str(tmp_path / "on"))
+    trace.stop()
+
+    raw_off = open(artifact_cache.artifact_path(
+        str(tmp_path / "off"), spec.name, fp), "rb").read()
+    raw_on = open(artifact_cache.artifact_path(
+        str(tmp_path / "on"), spec.name, fp), "rb").read()
+    assert raw_on == raw_off
+
+
+def test_trace_covers_sweep_with_bucket_split(tmp_path):
+    """Acceptance: a traced sweep's root span attributes >=95% of the
+    traced wall-clock, with per-bucket compile/execute children."""
+    spec = tiny_spec("tel_cov", ms=(1, 2, 4))
+    trace.start()
+    runner.run_sweep(spec, cache_dir=str(tmp_path / "c"))
+    trace.stop()
+    path = trace.export(str(tmp_path / "trace.json"))
+    evs = json.load(open(path))["traceEvents"]
+    names = {e["name"] for e in evs}
+    assert {"sweep", "job", "grid", "bucket", "lower", "compile",
+            "execute", "store"} <= names
+    overall = trace.phase_breakdown(evs)
+    assert overall["coverage"] >= 0.95
+    scoped = trace.phase_breakdown(evs, root="sweep")
+    assert scoped["root"] == "sweep"
+    # every bucket span has compile+execute children inside its interval
+    buckets = [e for e in evs if e["name"] == "bucket"]
+    assert buckets
+    for b in buckets:
+        inside = [e["name"] for e in evs
+                  if e["ts"] >= b["ts"] - 1e-6
+                  and e["ts"] + e["dur"] <= b["ts"] + b["dur"] + 1e-6
+                  and e["args"]["depth"] == b["args"]["depth"] + 1]
+        assert "compile" in inside and "execute" in inside
+
+
+def test_sequential_path_identical_traced(tmp_path):
+    """use_vmap=False (repeated jit calls) takes the plain-span path —
+    same losses traced or not, and no per-call recompiles."""
+    ds = synth.make_higgs_like(KEY, n=96, d=8)
+    tr, te = ds.split(key=KEY)
+    kw = dict(iters=40, eval_every=20, use_vmap=False)
+    j0 = engine.JIT_CALLS
+    r_off = engine.sweep("minibatch", tr, te, [1, 2, 4], **kw)
+    assert engine.JIT_CALLS - j0 == 1      # one jit serves every m
+    trace.start()
+    j0 = engine.JIT_CALLS
+    r_on = engine.sweep("minibatch", tr, te, [1, 2, 4], **kw)
+    tracer = trace.stop()
+    assert engine.JIT_CALLS - j0 == 1
+    np.testing.assert_array_equal(np.asarray(r_off["losses"]),
+                                  np.asarray(r_on["losses"]))
+    assert sum(e["name"] == "grid_member" for e in tracer.events) == 3
+
+
+# ---------------------------------------------------------------------------
+# instrumented subsystems
+# ---------------------------------------------------------------------------
+
+def test_queue_high_water_and_shed():
+    q = AdmissionQueue(depth=3)
+    assert q.try_admit() and q.try_admit()
+    assert q.stats()["high_water"] == 2
+    q.release()
+    assert q.try_admit()                    # back to 2 in service
+    assert q.stats()["high_water"] == 2     # high water holds the max
+    assert q.try_admit()                    # 3/3
+    assert not q.try_admit()                # shed
+    st = q.stats()
+    assert st == {"depth": 3, "in_service": 3, "admitted": 4, "shed": 1,
+                  "high_water": 3}
+    for _ in range(3):
+        q.release()
+    assert q.stats()["in_service"] == 0
+    assert q.stats()["high_water"] == 3
+
+
+def test_psum_round_accounting():
+    """Racing-mode comm accounting: psum_rounds = scheduled syncs
+    (R_total // sync_every) + one forced reconcile per eval block."""
+    from repro.distributed import hogwild_shards
+
+    ds = synth.make_higgs_like(KEY, n=96, d=8)
+    tr, te = ds.split(key=KEY)
+    kw = dict(m=4, iters=240, gamma=0.05, eval_every=40)
+    # n_evals=6, rounds_per_eval=10, R_total=60
+    c0 = metrics.REGISTRY.counter(
+        "repro_distributed_psum_rounds_total").value
+    r1 = hogwild_shards.run_hogwild_sharded(tr, te, sync_every=1, **kw)
+    assert r1["psum_rounds"] == 60 + 6
+    r4 = hogwild_shards.run_hogwild_sharded(tr, te, sync_every=4, **kw)
+    assert r4["psum_rounds"] == 15 + 6
+    delta = metrics.REGISTRY.counter(
+        "repro_distributed_psum_rounds_total").value - c0
+    assert delta == 66 + 21
+    # the compile-counter alias works here too
+    assert isinstance(hogwild_shards.JIT_CALLS, int)
+
+
+def test_service_stats_telemetry_block(tmp_path):
+    """AdvisorService.stats() carries the registry-backed telemetry
+    block: queue gauges/counters and the tier latency + confidence
+    histograms observed by probe_batch."""
+    svc = AdvisorService(cache_dir=str(tmp_path / "cache"), sweep_iters=50,
+                         sweep_eval_every=10, n_slots=4)
+    lat = metrics.REGISTRY.histogram("repro_service_tier_latency_seconds",
+                                     labels={"tier": "analytic"})
+    n0 = lat.count
+    resp = svc.probe(ProbeRequest(X=np.random.default_rng(0)
+                                  .normal(size=(40, 6)),
+                                  escalate=False))
+    assert resp.tier == "analytic"
+    assert lat.count - n0 == 1
+    st = svc.stats()
+    assert st["queue"]["high_water"] >= 1
+    tel = st["telemetry"]
+    assert any(k.startswith("repro_service_tier_latency_seconds")
+               for k in tel)
+    assert tel["repro_service_queue_high_water"] >= 1
+    conf = metrics.REGISTRY.histogram(
+        "repro_service_confidence",
+        buckets=(0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0))
+    assert conf.count >= 1
+
+
+# ---------------------------------------------------------------------------
+# CLI surfacing
+# ---------------------------------------------------------------------------
+
+def test_run_cli_trace_flag(tmp_path, capsys):
+    """--trace writes a validating Chrome-trace JSON whose root sweep
+    span clears the CI coverage gate; --metrics dumps Prometheus text."""
+    out = str(tmp_path / "cli_trace.json")
+    rc = run_cli.main(["--spec", "upper_bound", "--quick", "--iters", "40",
+                       "--n", "96", "--cache-dir",
+                       str(tmp_path / "cache"), "--trace", out,
+                       "--metrics"])
+    assert rc == 0
+    stdout = capsys.readouterr().out
+    assert "repro_sweep_computes_total" in stdout
+    assert telemetry_cli.main(
+        ["--summarize", out, "--min-coverage", "0.95"]) == 0
+    # re-validate the payload shape end to end
+    s = telemetry_cli.summarize(out, root="sweep")
+    assert s["last_sweep"]["root"] == "sweep"
+    assert s["overall"]["coverage"] >= 0.95
+
+
+def test_telemetry_cli_rejects_bad_trace(tmp_path, capsys):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"traceEvents": [{"name": "x", "ph": "X"}]}))
+    assert telemetry_cli.main(["--summarize", str(bad)]) == 2
+    assert "missing required keys" in capsys.readouterr().err
