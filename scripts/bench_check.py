@@ -1,0 +1,65 @@
+"""Bench-trajectory regression gate (CI: every push).
+
+Parses every BENCH_N.json in the repo root into one time series
+(`repro.analysis.trajectory`), applies the trajectory gates (newest
+engine_default and telemetry tax within a noise band of the last anchor
+that measured them), rewrites docs/bench_history.md, and exits non-zero
+on regression.
+
+  PYTHONPATH=src python scripts/bench_check.py
+  PYTHONPATH=src python scripts/bench_check.py --band 1.5 --no-write
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+
+from repro.analysis import trajectory  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="gate on the BENCH_*.json perf trajectory")
+    ap.add_argument("--root", default=REPO_ROOT,
+                    help="directory holding BENCH_N.json (default: repo "
+                         "root)")
+    ap.add_argument("--band", type=float, default=2.0,
+                    help="regression gate: newest/previous anchor ratio "
+                         "limit (default 2.0 — the shared-container noise "
+                         "band, see docs/observability.md)")
+    ap.add_argument("--out", default=os.path.join(REPO_ROOT, "docs",
+                                                  "bench_history.md"),
+                    help="markdown history to (re)write")
+    ap.add_argument("--no-write", action="store_true",
+                    help="check only; leave the history file untouched")
+    args = ap.parse_args(argv)
+
+    points = trajectory.load_trajectory(args.root)
+    if not points:
+        print(f"error: no BENCH_N.json under {args.root}", file=sys.stderr)
+        return 2
+    verdict = trajectory.check_regression(points, band=args.band)
+
+    print(f"bench trajectory: {len(points)} anchor(s), "
+          f"BENCH_{points[0]['pr']}..BENCH_{points[-1]['pr']}")
+    for c in verdict["checks"]:
+        mark = "PASS" if c["ok"] else "FAIL"
+        print(f"  [{mark}] {c['name']}: {c['detail']}")
+
+    if not args.no_write:
+        md = trajectory.render_history(points, verdict)
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(md)
+        print(f"wrote {args.out}")
+
+    return 0 if verdict["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

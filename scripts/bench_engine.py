@@ -1,5 +1,24 @@
 #!/usr/bin/env python
-"""Engine wall-clock benchmark — emits BENCH_9.json (perf-trajectory anchor).
+"""Engine wall-clock benchmark — emits BENCH_10.json (perf-trajectory anchor).
+
+PR 10 adds the live observability plane (`repro.service.http`,
+docs/observability.md): an HTTP transport serving the advisor plus
+``GET /metrics`` / ``/healthz`` / ``/flight`` / ``/trace``, and the
+always-on flight recorder the sweep publishes per-job progress events
+into.  The **observability** section measures its costs: the per-publish
+flight-recorder cost in isolation (a lock + deque append — the only new
+always-on work on the sweep path, a handful per sweep), the
+``/metrics`` and ``/flight`` scrape latencies against a live server, and
+the end-to-end tax of running the full engine_default sweep *while a
+scraper polls both endpoints* vs unobserved (warm jit caches, fresh
+cache dir per run, interleaved and min-reduced — same protocol as the
+resilience/telemetry sections).  The claim: the plane is observational —
+scraping reads registry/recorder state beside the sweep, so the
+concurrent-scrape tax stays within noise, and artifact bytes are
+identical either way (tests/test_http.py).  The **vs_bench9** block
+embeds BENCH_9's engine_default wall-clock for the non-regression
+comparison; `scripts/bench_check.py` additionally gates the whole
+BENCH_2..10 trajectory (docs/bench_history.md).
 
 PR 9 adds `repro.telemetry` (docs/observability.md): span tracing plus a
 process metrics registry, instrumented through the engine, runner,
@@ -120,7 +139,7 @@ changed relative to PR 1 (all still tracked):
    crossover honestly.
 
 jit caches are cleared between configurations so every timing includes
-its own compiles, as a cold run would.  Results land in BENCH_9.json at
+its own compiles, as a cold run would.  Results land in BENCH_10.json at
 the repo root so the perf trajectory is tracked from this PR onward.
 
 Usage:  PYTHONPATH=src python scripts/bench_engine.py [--quick]
@@ -488,6 +507,90 @@ def time_telemetry(ms, iters, eval_every, n, d, repeats=5):
     return out
 
 
+def time_observability(ms, iters, eval_every, n, d, repeats=3):
+    """PR-10 live observability plane: publish cost, scrape latencies,
+    and the concurrent-scrape tax on a real sweep.
+
+    Three numbers: (a) the per-event flight-recorder publish cost in
+    isolation — the only new always-on work on the sweep path (a lock +
+    deque append, a handful per sweep); (b) ``GET /metrics`` and
+    ``GET /flight`` latency against a live `ServiceServer` (warm, min
+    over 50 requests — what one scrape costs an operator); (c) the full
+    engine_default sweep through `run_sweep` unobserved vs with a
+    scraper thread polling both endpoints every 50 ms, interleaved and
+    min-reduced over ``repeats`` — the observational claim at sweep
+    granularity (scrapes read registry/recorder state beside the sweep,
+    never in it)."""
+    import threading
+    import urllib.request
+
+    from repro.service.http import ServiceServer
+    from repro.telemetry.recorder import FlightRecorder
+
+    out = {}
+    rec = FlightRecorder()
+    t0 = time.perf_counter()
+    for i in range(10000):
+        rec.publish("bench", i=i, job="probe")
+    out["publish_us"] = (time.perf_counter() - t0) / 10000 * 1e6
+
+    spec = SweepSpec(
+        name="bench_observability", description="scrape tax probe",
+        ms=tuple(ms), iters=iters, eval_every=eval_every,
+        datasets={"d0": DatasetSpec("higgs_like", {"n": n, "d": d})},
+        jobs=tuple(JobSpec(a, "d0") for a in ALGOS)).validate()
+
+    with ServiceServer(None) as server:
+        for path in ("/metrics", "/flight"):
+            url = server.url + path
+            urllib.request.urlopen(url).read()      # warm
+            best = float("inf")
+            for _ in range(50):
+                t0 = time.perf_counter()
+                urllib.request.urlopen(url).read()
+                best = min(best, time.perf_counter() - t0)
+            out[path.strip("/") + "_scrape_ms"] = best * 1000
+
+        with tempfile.TemporaryDirectory() as root:
+            run_sweep(spec, cache_dir=os.path.join(root, "warm"))
+            out["sweep_unobserved_s"] = float("inf")
+            out["sweep_scraped_s"] = float("inf")
+            for r in range(repeats):
+                for label, scraped in (("sweep_unobserved", False),
+                                       ("sweep_scraped", True)):
+                    stop = threading.Event()
+
+                    def _scraper():
+                        # a real poller: full /metrics per scrape (how
+                        # Prometheus reads it), /flight tailed by cursor
+                        # (how --watch reads it)
+                        since = 0
+                        while not stop.wait(0.05):
+                            urllib.request.urlopen(
+                                server.url + "/metrics").read()
+                            snap = json.load(urllib.request.urlopen(
+                                f"{server.url}/flight?since={since}"))
+                            since = snap.get("seq", since)
+
+                    t = threading.Thread(target=_scraper, daemon=True)
+                    if scraped:
+                        t.start()
+                    try:
+                        t0 = time.perf_counter()
+                        run_sweep(spec, cache_dir=os.path.join(
+                            root, f"{label}{r}"))
+                        out[label + "_s"] = min(out[label + "_s"],
+                                                time.perf_counter() - t0)
+                    finally:
+                        stop.set()
+                        if scraped:
+                            t.join()
+    out["scrape_overhead_frac"] = (out["sweep_scraped_s"]
+                                   / max(out["sweep_unobserved_s"], 1e-9)
+                                   - 1.0)
+    return out
+
+
 def time_cache_roundtrip(ms, iters, eval_every, n, d):
     """Fresh vs cached `run_sweep` through the artifact cache."""
     spec = SweepSpec(
@@ -624,7 +727,7 @@ def main(argv=None):
                    help="internal: run the distributed-section worker "
                         "under this forced host device count and exit")
     p.add_argument("--out", default=None,
-                   help="output path (default: BENCH_9.json at the repo "
+                   help="output path (default: BENCH_10.json at the repo "
                         "root; quick mode defaults elsewhere so a smoke "
                         "never overwrites the committed perf anchor)")
     args = p.parse_args(argv)
@@ -635,8 +738,8 @@ def main(argv=None):
         args.m_max = 8
         args.seeds = min(args.seeds, 4)
     if args.out is None:
-        args.out = (os.path.join(tempfile.gettempdir(), "BENCH_9.quick.json")
-                    if args.quick else os.path.join(ROOT, "BENCH_9.json"))
+        args.out = (os.path.join(tempfile.gettempdir(), "BENCH_10.quick.json")
+                    if args.quick else os.path.join(ROOT, "BENCH_10.json"))
     ms = list(range(1, args.m_max + 1))
 
     ds = synth.make_higgs_like(jax.random.PRNGKey(0), n=args.n, d=args.d)
@@ -707,6 +810,15 @@ def main(argv=None):
           f"{tel['spans_per_traced_sweep']} spans, "
           f"{tel['span_record_us']:.1f} us/span recorded, "
           f"{tel['noop_span_us']:.2f} us/span disabled)")
+
+    obs = time_observability(ms, args.iters, args.eval_every,
+                             args.n, args.d)
+    print(f"{'obs publish':>15}: {obs['publish_us']:7.2f} us/event")
+    print(f"{'obs scrape':>15}: /metrics {obs['metrics_scrape_ms']:.2f} ms "
+          f"/flight {obs['flight_scrape_ms']:.2f} ms")
+    print(f"{'obs sweep':>15}: unobserved {obs['sweep_unobserved_s']:.2f} s "
+          f"scraped {obs['sweep_scraped_s']:.2f} s "
+          f"({obs['scrape_overhead_frac'] * 100:+.2f}% tax)")
 
     if args.quick:
         svc_cfg = dict(n_probes=6, n=192, d=12, sweep_iters=120,
@@ -814,6 +926,21 @@ def main(argv=None):
             "bench8_wall_clock_s": b8,
             "ratio_engine_default": timings["engine_default"]
             / max(b8["engine_default"], 1e-9),
+        }
+    # PR-10 non-regression: the observability plane is read-side only —
+    # the sweep gained a handful of flight-recorder publishes (measured
+    # in isolation as publish_us), so the original sweep must stay
+    # within noise of the PR-9 anchor; bench_check.py additionally
+    # gates the whole BENCH_2..10 trajectory
+    vs_bench9 = None
+    b9_path = os.path.join(ROOT, "BENCH_9.json")
+    if not args.quick and os.path.exists(b9_path):
+        with open(b9_path) as f:
+            b9 = json.load(f)["main"]["wall_clock_s"]
+        vs_bench9 = {
+            "bench9_wall_clock_s": b9,
+            "ratio_engine_default": timings["engine_default"]
+            / max(b9["engine_default"], 1e-9),
         }
 
     payload = {
@@ -926,11 +1053,30 @@ def main(argv=None):
                                "span_record_us / noop_span_us)"},
             "results": tel,
         },
+        "observability": {
+            "config": {"dataset": "higgs_like", "n": args.n, "d": args.d,
+                       "iters": args.iters, "ms": f"1..{args.m_max}",
+                       "note": "PR-10 live observability plane: flight-"
+                               "recorder publish cost isolated "
+                               "(publish_us — the only new always-on "
+                               "sweep-path work, a handful per sweep), "
+                               "GET /metrics and /flight scrape latency "
+                               "against a live ServiceServer (min over "
+                               "50 warm requests), and the full "
+                               "engine_default sweep unobserved vs with "
+                               "a 50 ms scraper thread polling both "
+                               "endpoints (warm jit caches, fresh cache "
+                               "dir per run, interleaved, min over 3 "
+                               "repeats) — the observational claim at "
+                               "sweep granularity"},
+            "results": obs,
+        },
         "vs_bench4": vs_bench4,
         "vs_bench5": vs_bench5,
         "vs_bench6": vs_bench6,
         "vs_bench7": vs_bench7,
         "vs_bench8": vs_bench8,
+        "vs_bench9": vs_bench9,
     }
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2)

@@ -126,6 +126,51 @@ def svg_cost_curve(ms, mean, lo, hi, *, title: str) -> str:
         f'</svg>')
 
 
+def svg_timeseries(labels, values, *, title: str,
+                   fmt: str = "{:.1f}") -> str:
+    """Minimal inline SVG for an ordered series (one point per label,
+    e.g. wall-clock per bench anchor).  Same visual language as
+    `svg_cost_curve`: one neutral ink line, muted ticks, no chart junk.
+    ``None`` values are skipped (a bench that predates the measurement);
+    the last point is annotated with ``fmt``."""
+    w, h, pad = 380, 140, 34
+    pts = [(i, float(v)) for i, v in enumerate(values) if v is not None]
+    if not pts:
+        return ""
+    ymin = min(v for _, v in pts)
+    ymax = max(v for _, v in pts)
+    yspan = (ymax - ymin) or 1.0
+    x1 = max(len(labels) - 1, 1)
+
+    def X(i):
+        return pad + i / x1 * (w - 2 * pad)
+
+    def Y(v):
+        return h - pad - (v - ymin) / yspan * (h - 2 * pad)
+
+    line = " ".join(f"{X(i):.1f},{Y(v):.1f}" for i, v in pts)
+    dots = "".join(f'<circle cx="{X(i):.1f}" cy="{Y(v):.1f}" r="2.5" '
+                   f'fill="#1f2937"/>' for i, v in pts)
+    ticks = "".join(
+        f'<text x="{X(i):.1f}" y="{h - pad + 14}" font-size="9" '
+        f'fill="#6b7280" text-anchor="middle">{lab}</text>'
+        for i, lab in enumerate(labels))
+    last_i, last_v = pts[-1]
+    return (
+        f'<svg xmlns="http://www.w3.org/2000/svg" width="{w}" height="{h}" '
+        f'viewBox="0 0 {w} {h}" role="img" aria-label="{title}">'
+        f'<text x="{pad}" y="14" font-size="10" fill="#374151">{title}'
+        f'</text>'
+        f'<line x1="{pad}" y1="{h - pad}" x2="{w - pad}" y2="{h - pad}" '
+        f'stroke="#e5e7eb" stroke-width="1"/>'
+        f'<polyline points="{line}" fill="none" stroke="#1f2937" '
+        f'stroke-width="2" stroke-linejoin="round"/>'
+        f'{dots}{ticks}'
+        f'<text x="{X(last_i):.1f}" y="{Y(last_v) - 6:.1f}" font-size="9" '
+        f'fill="#374151" text-anchor="end">{fmt.format(last_v)}</text>'
+        f'</svg>')
+
+
 # ---------------------------------------------------------------------------
 # section renderers
 # ---------------------------------------------------------------------------

@@ -43,7 +43,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core.algorithms.lr import LAMBDA, lr_grad, test_logloss
 from repro.distributed import mesh as mesh_mod
 from repro.resilience import faults
-from repro.telemetry import instrument, metrics
+from repro.telemetry import instrument, metrics, recorder
 
 #: compile counter for the sharded racing mode — `scripts/bench_engine.py
 #: dist_worker` snapshots it around the race timing (the engine's own
@@ -270,6 +270,9 @@ def run_hogwild_sharded(train, test, *, m: int = 8, iters: int = 4000,
     r_total = n_evals * rounds_per_eval
     psum_rounds = r_total // sync_every + n_evals
     _PSUM_ROUNDS.inc(psum_rounds)
+    recorder.publish("race", m=m, devices=D, sync_every=sync_every,
+                     psum_rounds=psum_rounds,
+                     faulted=fspec is not None)
     out = {
         "algorithm": "hogwild_sharded",
         "m": m,

@@ -83,7 +83,7 @@ from repro.core.algorithms import run_hogwild
 from repro.core.algorithms.lr import LAMBDA
 from repro.distributed import mesh as dist_mesh
 from repro.distributed import partition as dist_partition
-from repro.telemetry import instrument, metrics, trace
+from repro.telemetry import instrument, metrics, recorder, trace
 
 #: Pad-waste bound for `_buckets`: within a bucket, the padded worker axis
 #: is at most this multiple of the smallest member.
@@ -125,7 +125,10 @@ def _note_pad_waste(assignments) -> None:
     """Record the grid's pad waste from ``(m, m_pad)`` member pairs."""
     total = sum(pad for _, pad in assignments)
     if total:
-        _PAD_WASTE.set(1.0 - sum(m for m, _ in assignments) / total)
+        waste = 1.0 - sum(m for m, _ in assignments) / total
+        _PAD_WASTE.set(waste)
+        recorder.publish("grid", members=len(assignments),
+                         pad_waste=round(waste, 4))
 
 
 def _losses_dict(algorithm: str, ms, losses, iters: int, eval_every: int,

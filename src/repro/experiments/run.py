@@ -31,9 +31,13 @@ bucket -> lower/compile/execute, journal and cache IO) and writes
 Chrome-trace / Perfetto JSON — load it at https://ui.perfetto.dev or
 summarize with ``python -m repro.telemetry --summarize out.json``.
 ``--metrics`` dumps the process metrics registry (Prometheus text) after
-the run.  Both are observational: the sweep executes the same code and
-the artifact bytes are identical with or without them
-(docs/observability.md).
+the run.  ``--serve PORT`` additionally exposes the run's telemetry over
+HTTP *while it executes* — ``GET /metrics`` (Prometheus text),
+``/healthz``, ``/flight`` (the flight recorder's per-job progress
+events; tail it with ``python -m repro.telemetry --watch URL``), and
+``/trace`` (live span JSON when ``--trace`` is also on).  All three are
+observational: the sweep executes the same code and the artifact bytes
+are identical with or without them (docs/observability.md).
 """
 
 from __future__ import annotations
@@ -179,6 +183,11 @@ def main(argv=None) -> int:
     ap.add_argument("--metrics", action="store_true",
                     help="dump the process metrics registry (Prometheus "
                          "text) after the run")
+    ap.add_argument("--serve", metavar="PORT", type=int, default=None,
+                    help="expose /metrics /healthz /flight /trace over HTTP "
+                         "on this port while the sweep runs (0 = ephemeral; "
+                         "observational only — artifact bytes are "
+                         "unchanged)")
     ap.add_argument("-v", "--verbose", action="store_true")
     args = ap.parse_args(argv)
 
@@ -215,12 +224,24 @@ def main(argv=None) -> int:
     # in CI's traced smoke); a cache hit traces only the lookup
     if args.trace:
         trace.start()
+    server = None
+    if args.serve is not None:
+        # metrics-only observability plane: no advisor behind it, so
+        # probe endpoints answer 503; /metrics /flight /trace watch THIS
+        # process's sweep (import here keeps the plain CLI http-free)
+        from repro.service.http import ServiceServer
+        server = ServiceServer(None, port=args.serve).start()
+        print(f"observability plane at {server.url} (GET /metrics "
+              f"/healthz /flight /trace; watch: python -m repro.telemetry "
+              f"--watch {server.url})", flush=True)
     try:
         result = runner.run_sweep(spec, use_cache=not args.no_cache,
                                   force=args.force, cache_dir=args.cache_dir,
                                   use_vmap=not args.seq, verbose=args.verbose,
                                   mesh=devices)
     finally:
+        if server is not None:
+            server.stop()
         if args.trace:
             trace.stop()
             trace.export(args.trace)

@@ -70,6 +70,7 @@ from repro.experiments import spec as spec_mod
 from repro.experiments.spec import SweepSpec
 from repro.resilience import journal as journal_mod
 from repro.telemetry import metrics, trace
+from repro.telemetry.recorder import publish as _flight
 
 #: theory-side m_max predictor per Algorithm.predictor kind — the
 #: vectorized `repro.analysis.fit` scans (the scalar while-loops in
@@ -180,6 +181,8 @@ def _run_job_with_retries(spec: SweepSpec, job, tr, te, dmesh, use_vmap: bool,
     for attempt in range(max_retries + 1):
         if attempt:
             _JOB_RETRIES.inc()
+            _flight("job_retried", sweep=spec.name, job=job.key,
+                    attempt=attempt + 1)
             if retry_backoff_s > 0:
                 time.sleep(retry_backoff_s * (2 ** (attempt - 1)))
         try:
@@ -333,6 +336,12 @@ def _compute_sweep_inner(spec: SweepSpec, fp: str, cache_dir: str, *,
             print(f"[{spec.name}] resuming: {len(journaled)} job(s) "
                   f"replayed from crash journal {jpath}")
 
+    # flight-recorder progress events (docs/observability.md): in-memory
+    # only, so a mid-sweep GET /flight shows per-job progress without
+    # touching the computation or the artifact bytes
+    _flight("sweep_started", sweep=spec.name, fingerprint=fp[:12],
+            jobs=len(spec.jobs), replayed=len(journaled))
+
     dmesh = dist_mesh.resolve(mesh if mesh is not None else spec.devices)
     execution = {
         "devices": dmesh.n_devices if dmesh is not None else 1,
@@ -377,12 +386,15 @@ def _compute_sweep_inner(spec: SweepSpec, fp: str, cache_dir: str, *,
             if verbose:
                 print(f"[{spec.name}] {job.key}: resumed from journal")
             _JOURNAL_REPLAYS.inc()
+            _flight("job_replayed", sweep=spec.name, job=job.key)
             result["jobs"][job.key] = journaled[job.key]
             continue
         if verbose:
             print(f"[{spec.name}] sweep {job.key} over m={list(spec.ms)}")
         alg_cls = alg_base.get_algorithm(job.algorithm)
         tr, te = splits[job.dataset]
+        _flight("job_started", sweep=spec.name, job=job.key,
+                algorithm=job.algorithm, dataset=job.dataset)
         with trace.span("job", key=job.key, algorithm=job.algorithm,
                         dataset=job.dataset):
             jr, status = _run_job_with_retries(
@@ -390,6 +402,11 @@ def _compute_sweep_inner(spec: SweepSpec, fp: str, cache_dir: str, *,
                 max_retries, retry_backoff_s, verbose)
         jr["dataset"] = job.dataset
         jr["status"] = status
+        if status != "ok":
+            # "retried:N" -> job_retried already fired per attempt; the
+            # terminal unhealthy states get their own event kinds
+            if status in ("diverged", "failed"):
+                _flight(f"job_{status}", sweep=spec.name, job=job.key)
         if status == "diverged":
             # usually a step size tuned for another objective's curvature
             # (e.g. logistic gamma on ridge); surface it loudly — the
@@ -422,6 +439,8 @@ def _compute_sweep_inner(spec: SweepSpec, fp: str, cache_dir: str, *,
                 jr["predicted"] = _predict(alg_cls.predictor, X, job.kwargs)
 
         result["jobs"][job.key] = jr
+        _flight("job_stored", sweep=spec.name, job=job.key, status=status,
+                healthy=healthy)
         if use_cache and journal:
             with trace.span("journal_append", key=job.key):
                 journal_mod.append_entry(jpath, fp, job.key, jr)
@@ -438,4 +457,6 @@ def _compute_sweep_inner(spec: SweepSpec, fp: str, cache_dir: str, *,
                 journal_mod.consume(jpath)
     result["cache"] = {"hit": False, "path": path}
     result["execution"] = execution
+    _flight("sweep_stored", sweep=spec.name, fingerprint=fp[:12],
+            elapsed_s=round(result["elapsed_s"], 3), path=path)
     return result

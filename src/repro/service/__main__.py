@@ -7,6 +7,8 @@
   PYTHONPATH=src python -m repro.service --generator higgs_like \\
       --n 128 --d 16 --requests 4 --escalate   # 4 probes, ONE sweep
                                                # (single-flight dedup)
+  PYTHONPATH=src python -m repro.service --serve 8787
+                                               # HTTP advisor + /metrics
 
 ``--requests K`` issues K probes of the SAME dataset spec through
 `AdvisorService.probe_batch`: their character measurements coalesce into
@@ -14,6 +16,15 @@ one masked-batch call, and — with ``--escalate`` — their sweeps share a
 fingerprint, so exactly one executes (the stats line reports
 ``sweep_computes``).  ``--json`` prints the full response payloads;
 default output is a per-probe summary plus the service stats.
+
+``--serve PORT`` skips the one-shot probe and instead serves the advisor
+over HTTP until interrupted (`repro.service.http.ServiceServer`):
+``POST /probe`` and ``/probe_batch`` take the JSON shapes in
+docs/service.md; ``GET /metrics`` / ``/healthz`` / ``/flight`` /
+``/trace`` expose the process's telemetry.  Every service knob
+(``--queue-depth``, ``--cache-dir``, ``--threshold``, ...) applies to
+the served instance.  ``--host`` binds elsewhere than 127.0.0.1;
+PORT 0 picks an ephemeral port (printed at startup).
 """
 
 from __future__ import annotations
@@ -21,9 +32,11 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import time
 
 from repro.experiments.spec import DatasetSpec
 from repro.service.api import AdvisorService, ProbeRequest
+from repro.service.http import ServiceServer
 
 
 def _summary(resp) -> str:
@@ -70,6 +83,12 @@ def main(argv=None) -> int:
                    help="iterations of an escalated probe sweep")
     p.add_argument("--json", action="store_true",
                    help="print full response payloads as JSON")
+    p.add_argument("--serve", metavar="PORT", type=int, default=None,
+                   help="serve the advisor over HTTP on this port until "
+                        "interrupted (0 = ephemeral port, printed at "
+                        "startup) instead of running a one-shot probe")
+    p.add_argument("--host", default="127.0.0.1",
+                   help="--serve bind address (default 127.0.0.1)")
     args = p.parse_args(argv)
 
     kw = {}
@@ -79,6 +98,21 @@ def main(argv=None) -> int:
         n_slots=args.n_slots, queue_depth=args.queue_depth,
         cache_dir=args.cache_dir, cache_cap=args.cache_cap,
         sweep_iters=args.sweep_iters, **kw)
+
+    if args.serve is not None:
+        server = ServiceServer(service, host=args.host,
+                               port=args.serve).start()
+        print(f"advisor serving at {server.url} "
+              f"(POST /probe /probe_batch; GET /metrics /healthz "
+              f"/flight /trace) — ^C to stop", flush=True)
+        try:
+            while True:
+                time.sleep(3600)
+        except KeyboardInterrupt:
+            pass
+        finally:
+            server.stop()
+        return 0
 
     escalate = True if args.escalate else (False if args.no_escalate
                                            else None)

@@ -147,9 +147,12 @@ class AdvisorService:
                     ) -> List[ProbeResponse]:
         responses: Dict[str, ProbeResponse] = {}
         admitted: List[ProbeRequest] = []
+        stamps: List[float] = []
         for r in requests:
-            if self.queue.try_admit():
+            stamp = self.queue.try_admit()
+            if stamp is not None:
                 admitted.append(r)
+                stamps.append(stamp)
             else:
                 responses[r.request_id] = ProbeResponse(
                     request_id=r.request_id, status="overloaded",
@@ -175,8 +178,8 @@ class AdvisorService:
                     _CONFIDENCE.observe(float(conf.get("confidence", 0.0)))
                 responses[r.request_id] = resp
         finally:
-            for _ in admitted:
-                self.queue.release()
+            for stamp in stamps:
+                self.queue.release(admitted_at=stamp)
         return [responses[r.request_id] for r in requests]
 
     # -- stage 1: batched character measurement -----------------------------

@@ -12,7 +12,8 @@ and under-capacity requests are never affected by the shed ones.
 from __future__ import annotations
 
 import threading
-from typing import Dict
+import time
+from typing import Dict, Optional
 
 from repro.telemetry import metrics
 
@@ -24,7 +25,14 @@ _DEPTH = metrics.gauge("repro_service_queue_depth",
                        help="probes currently holding an admission slot")
 _HIGH_WATER = metrics.gauge(
     "repro_service_queue_high_water",
-    help="max concurrent in-service probes since process start")
+    help="max concurrent in-service probes since last reset")
+#: slot-hold durations: how long each admitted probe kept its admission
+#: slot (analytic answers are sub-ms, escalations hold for a whole
+#: sweep) — paired with shed_total this is the shedding-pressure story a
+#: scrape window sees: long holds + a full gate = clipped load
+_WAIT = metrics.histogram(
+    "repro_service_queue_wait_seconds",
+    help="seconds an admitted probe held its admission slot")
 
 
 class AdmissionQueue:
@@ -48,7 +56,12 @@ class AdmissionQueue:
         self.shed = 0
         self.high_water = 0
 
-    def try_admit(self) -> bool:
+    def try_admit(self) -> Optional[float]:
+        """Take a slot; returns an admission stamp (monotonic seconds, to
+        hand back to :meth:`release` for the wait histogram) or None when
+        the gate is full.  Truthiness is unchanged from the old bool
+        return — ``if queue.try_admit():`` still reads correctly, since a
+        perf_counter stamp is always > 0."""
         ok = self._sem.acquire(blocking=False)
         with self._lock:
             if ok:
@@ -62,11 +75,16 @@ class AdmissionQueue:
         if ok:
             _ADMITTED.inc()
             _HIGH_WATER.set_max(self.high_water)
-        else:
-            _SHED.inc()
-        return ok
+            return time.perf_counter()
+        _SHED.inc()
+        return None
 
-    def release(self) -> None:
+    def release(self, admitted_at: Optional[float] = None) -> None:
+        """Return a slot; passing the stamp :meth:`try_admit` returned
+        records the slot-hold duration in
+        ``repro_service_queue_wait_seconds``."""
+        if admitted_at is not None:
+            _WAIT.observe(time.perf_counter() - admitted_at)
         with self._lock:
             self._in_service -= 1
             _DEPTH.set(self._in_service)
@@ -77,8 +95,17 @@ class AdmissionQueue:
         with self._lock:
             return self._in_service
 
-    def stats(self) -> Dict:
+    def stats(self, reset: bool = False) -> Dict:
+        """Queue counters; ``reset=True`` additionally re-arms the
+        ``high_water`` mark to the *current* occupancy after reading, so
+        a scraper polling ``stats(reset=True)`` per window sees the
+        per-window peak instead of the since-start one.  The returned
+        dict is always the pre-reset view."""
         with self._lock:
-            return {"depth": self.depth, "in_service": self._in_service,
-                    "admitted": self.admitted, "shed": self.shed,
-                    "high_water": self.high_water}
+            out = {"depth": self.depth, "in_service": self._in_service,
+                   "admitted": self.admitted, "shed": self.shed,
+                   "high_water": self.high_water}
+            if reset:
+                self.high_water = self._in_service
+                _HIGH_WATER.set(self._in_service)
+        return out

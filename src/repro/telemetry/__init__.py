@@ -27,14 +27,21 @@ only inside `instrument`), so any module — core, experiments,
 distributed, service — can instrument itself without cycles.
 """
 
-from repro.telemetry import trace
+from repro.telemetry import recorder, trace
 from repro.telemetry.metrics import (REGISTRY, Counter, Gauge, Histogram,
                                      MetricsRegistry, counter, gauge,
                                      histogram)
+from repro.telemetry.recorder import RECORDER
 from repro.telemetry.trace import span
+
+# the flight recorder mirrors completed spans whenever a tracer runs, so
+# recent span history is scrapeable (GET /flight) without draining the
+# tracer itself
+trace.add_span_sink(RECORDER.record_span)
 
 __all__ = [
     "trace", "span",
     "REGISTRY", "MetricsRegistry", "Counter", "Gauge", "Histogram",
     "counter", "gauge", "histogram",
+    "recorder", "RECORDER",
 ]

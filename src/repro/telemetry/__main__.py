@@ -1,9 +1,12 @@
-"""``python -m repro.telemetry`` — registry dump + trace summarizer.
+"""``python -m repro.telemetry`` — registry dump, trace summarizer, and
+live flight-recorder watcher.
 
   PYTHONPATH=src python -m repro.telemetry                 # registry (prom text)
   PYTHONPATH=src python -m repro.telemetry --format json   # registry (JSON)
   PYTHONPATH=src python -m repro.telemetry \\
       --summarize results/trace.json                       # trace phase report
+  PYTHONPATH=src python -m repro.telemetry \\
+      --watch http://127.0.0.1:8787                        # tail /flight
 
 ``--summarize`` loads a Chrome-trace JSON produced by
 ``repro.experiments.run --trace`` (or `telemetry.trace.export`),
@@ -13,10 +16,18 @@ breakdown — the same aggregation the analysis report renders
 coverage`` is given and the trace's top-level spans attribute less than
 that fraction of its wall-clock (CI's traced-sweep smoke gate).
 
+``--watch URL`` tails a live observability plane (`run.py --serve PORT`
+or ``python -m repro.service --serve PORT``): it polls
+``URL/flight?since=CURSOR`` and prints each new flight-recorder event
+(sweep/job progress, grid pad waste, race psum rounds) as a one-line
+record — a text-mode "what is the sweep doing right now".  Stdlib
+urllib; ``--interval`` sets the poll period and ``--max-polls`` bounds
+the watch (0 = until interrupted).
+
 The bare registry dump shows *this process's* metrics — mostly zeros
 from a fresh CLI process; its real consumers are in-process
-(`AdvisorService.stats`, the run CLI's ``--metrics`` flag) or a future
-HTTP exposition endpoint (ROADMAP).
+(`AdvisorService.stats`, the run CLI's ``--metrics`` flag) or the HTTP
+``GET /metrics`` endpoint (`repro.service.http`).
 """
 
 from __future__ import annotations
@@ -24,6 +35,9 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+import time
+import urllib.error
+import urllib.request
 
 from repro.telemetry import REGISTRY, trace
 
@@ -67,10 +81,50 @@ def _print_summary(s: dict, root: str) -> None:
               f"x{p['count']:<5d} {p['frac_of_wall']:6.1%}")
 
 
+def _format_event(ev: dict) -> str:
+    """One flight event -> one log line: time, kind, then the payload
+    fields in insertion order."""
+    ts = time.strftime("%H:%M:%S", time.localtime(ev.get("t", 0)))
+    fields = " ".join(f"{k}={v}" for k, v in ev.items()
+                      if k not in ("seq", "t", "kind"))
+    return f"{ts} #{ev.get('seq', '?'):<6} {ev.get('kind', '?'):<14} {fields}"
+
+
+def watch(url: str, interval: float = 1.0, max_polls: int = 0,
+          out=None) -> int:
+    """Tail ``url``'s ``/flight`` endpoint; returns an exit code."""
+    out = out or sys.stdout
+    base = url.rstrip("/")
+    since, polls = 0, 0
+    while True:
+        try:
+            with urllib.request.urlopen(
+                    f"{base}/flight?since={since}", timeout=10) as r:
+                snap = json.load(r)
+        except (urllib.error.URLError, OSError, json.JSONDecodeError) as e:
+            print(f"error: {base}/flight unreachable: {e}", file=sys.stderr)
+            return 2
+        for ev in snap.get("events", []):
+            print(_format_event(ev), file=out)
+        for sp in snap.get("spans", []):
+            print(f"         #{sp.get('seq', '?'):<6} span:{sp['name']:<9} "
+                  f"dur={sp['dur'] / 1e3:.1f}ms", file=out)
+        out.flush()
+        since = snap.get("seq", since)
+        polls += 1
+        if max_polls and polls >= max_polls:
+            return 0
+        try:
+            time.sleep(interval)
+        except KeyboardInterrupt:
+            return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.telemetry",
-        description="dump the metrics registry / summarize a trace")
+        description="dump the metrics registry / summarize a trace / "
+                    "watch a live flight recorder")
     ap.add_argument("--summarize", metavar="TRACE_JSON",
                     help="validate + phase-break a Chrome-trace JSON")
     ap.add_argument("--root", default="sweep",
@@ -83,7 +137,18 @@ def main(argv=None) -> int:
                     help="registry dump format (default: prom text)")
     ap.add_argument("--prefix", default="",
                     help="only dump metrics whose name starts with this")
+    ap.add_argument("--watch", metavar="URL",
+                    help="tail URL/flight (a run.py --serve or repro.service "
+                         "--serve plane), printing new events per poll")
+    ap.add_argument("--interval", type=float, default=1.0,
+                    help="--watch poll period in seconds (default 1)")
+    ap.add_argument("--max-polls", type=int, default=0,
+                    help="--watch: stop after N polls (0 = until ^C)")
     args = ap.parse_args(argv)
+
+    if args.watch:
+        return watch(args.watch, interval=args.interval,
+                     max_polls=args.max_polls)
 
     if args.summarize:
         try:

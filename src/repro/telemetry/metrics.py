@@ -39,6 +39,7 @@ The process-default registry is :data:`REGISTRY`; the module-level
 
 from __future__ import annotations
 
+import re
 import threading
 from typing import Dict, Iterable, List, Optional, Tuple
 
@@ -48,23 +49,45 @@ DEFAULT_BUCKETS = (0.001, 0.005, 0.02, 0.1, 0.5, 2.0, 10.0, 60.0)
 
 LabelItems = Tuple[Tuple[str, str], ...]
 
+#: Prometheus data-model identifiers (text format v0.0.4): metric names
+#: may carry colons (recording rules), label names may not
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+_LABEL_NAME_RE = re.compile(r"^[a-zA-Z_][a-zA-Z0-9_]*$")
+
 
 def _label_key(labels: Optional[Dict[str, str]]) -> LabelItems:
     if not labels:
         return ()
-    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+    items = tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+    for k, _ in items:
+        if not _LABEL_NAME_RE.match(k):
+            raise ValueError(f"invalid Prometheus label name {k!r}")
+    return items
+
+
+def _escape_label_value(v: str) -> str:
+    # text-format escaping for quoted label values: backslash, quote, LF
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _escape_help(text: str) -> str:
+    # HELP lines escape backslash and LF only (quotes are legal there)
+    return text.replace("\\", "\\\\").replace("\n", "\\n")
 
 
 def _label_str(items: LabelItems) -> str:
     if not items:
         return ""
-    return "{" + ",".join(f'{k}="{v}"' for k, v in items) + "}"
+    return "{" + ",".join(f'{k}="{_escape_label_value(v)}"'
+                          for k, v in items) + "}"
 
 
 class _Metric:
     kind = "untyped"
 
     def __init__(self, name: str, labels: LabelItems, help: str):
+        if not _NAME_RE.match(name):
+            raise ValueError(f"invalid Prometheus metric name {name!r}")
         self.name = name
         self.labels = labels
         self.help = help
@@ -229,7 +252,21 @@ class MetricsRegistry:
         return out
 
     def render_prometheus(self, prefix: str = "") -> str:
-        """Prometheus text exposition format v0.0.4."""
+        """Prometheus text exposition format v0.0.4.
+
+        Conformance details real scrapers depend on (pinned by the
+        strict-parser test in tests/test_telemetry.py): one ``# TYPE``
+        (and ``# HELP``, taken from any series that carries one) per
+        metric family, emitted before its samples; label values escaped
+        (backslash/quote/newline); histograms expose cumulative
+        ``_bucket`` series including the ``+Inf`` bucket plus ``_sum``
+        and ``_count``; a trailing newline ends the exposition."""
+        # HELP can live on any series of a family (get-or-create sites
+        # may pass it only once); resolve it family-wide first
+        helps: Dict[str, str] = {}
+        for (name, _), m in self._items():
+            if m.help and name not in helps:
+                helps[name] = m.help
         lines: List[str] = []
         seen_header = set()
         for (name, labels), m in self._items():
@@ -237,8 +274,9 @@ class MetricsRegistry:
                 continue
             if name not in seen_header:
                 seen_header.add(name)
-                if m.help:
-                    lines.append(f"# HELP {name} {m.help}")
+                if helps.get(name):
+                    lines.append(
+                        f"# HELP {name} {_escape_help(helps[name])}")
                 lines.append(f"# TYPE {name} {m.kind}")
             ls = _label_str(labels)
             if isinstance(m, Histogram):
@@ -264,6 +302,148 @@ class MetricsRegistry:
         delta assertions over reset in anything but isolated tests."""
         with self._lock:
             self._metrics.clear()
+
+
+# ---------------------------------------------------------------------------
+# strict text-format parser (conformance checking; the scrape-side dual
+# of render_prometheus, used by the exposition tests and CI smoke)
+# ---------------------------------------------------------------------------
+
+_SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?"
+    r" (?P<value>NaN|[+-]?Inf|[+-]?\d+(?:\.\d+)?(?:[eE][+-]?\d+)?)"
+    r"(?: \d+)?$")                      # optional timestamp (ms)
+_LABEL_PAIR_RE = re.compile(
+    r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+def _unescape_label_value(v: str) -> str:
+    return (v.replace("\\n", "\n").replace('\\"', '"')
+             .replace("\\\\", "\\"))
+
+
+def _parse_labels(block: Optional[str]) -> Dict[str, str]:
+    if not block:
+        return {}
+    pairs = _LABEL_PAIR_RE.findall(block)
+    # the pairs must tile the whole block (separated by commas) — a
+    # malformed remainder means a non-conformant line
+    rebuilt = ",".join(f'{k}="{v}"' for k, v in pairs)
+    if rebuilt != block.rstrip(","):
+        raise ValueError(f"malformed label block {{{block}}}")
+    return {k: _unescape_label_value(v) for k, v in pairs}
+
+
+def _family_of(sample_name: str, types: Dict[str, str]) -> Optional[str]:
+    if sample_name in types:
+        return sample_name
+    for suffix in ("_bucket", "_sum", "_count"):
+        if sample_name.endswith(suffix):
+            base = sample_name[: -len(suffix)]
+            if types.get(base) == "histogram":
+                return base
+    return None
+
+
+def parse_prometheus_text(text: str) -> Dict[str, Dict]:
+    """Strictly parse Prometheus text format v0.0.4; raises ValueError on
+    any non-conformance a real scraper would reject (or silently
+    mis-read).  Returns ``{family: {"type", "help", "samples":
+    [(sample_name, labels, value), ...]}}``.
+
+    Beyond line syntax, this validates the invariants scrape pipelines
+    assume: ``# TYPE`` precedes its family's samples and appears at most
+    once; histogram families expose cumulative monotone ``_bucket``
+    series whose ``+Inf`` bucket equals ``_count``, plus a ``_sum``;
+    counters never carry a negative value."""
+    if text and not text.endswith("\n"):
+        raise ValueError("exposition must end with a newline")
+    families: Dict[str, Dict] = {}
+    types: Dict[str, str] = {}
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        if line.startswith("# HELP "):
+            parts = line[len("# HELP "):].split(" ", 1)
+            name = parts[0]
+            fam = families.setdefault(
+                name, {"type": None, "help": None, "samples": []})
+            fam["help"] = parts[1] if len(parts) > 1 else ""
+            continue
+        if line.startswith("# TYPE "):
+            parts = line[len("# TYPE "):].split(" ")
+            if len(parts) != 2:
+                raise ValueError(f"line {lineno}: malformed TYPE: {line!r}")
+            name, kind = parts
+            if kind not in ("counter", "gauge", "histogram", "summary",
+                            "untyped"):
+                raise ValueError(f"line {lineno}: unknown type {kind!r}")
+            if name in types:
+                raise ValueError(f"line {lineno}: duplicate TYPE for "
+                                 f"{name!r}")
+            fam = families.setdefault(
+                name, {"type": None, "help": None, "samples": []})
+            if fam["samples"]:
+                raise ValueError(f"line {lineno}: TYPE for {name!r} after "
+                                 f"its samples")
+            fam["type"] = kind
+            types[name] = kind
+            continue
+        if line.startswith("#"):
+            continue                               # free-form comment
+        mt = _SAMPLE_RE.match(line)
+        if mt is None:
+            raise ValueError(f"line {lineno}: malformed sample: {line!r}")
+        sample_name = mt.group("name")
+        labels = _parse_labels(mt.group("labels"))
+        value = float(mt.group("value"))
+        family = _family_of(sample_name, types)
+        if family is None:
+            raise ValueError(f"line {lineno}: sample {sample_name!r} has "
+                             f"no preceding # TYPE")
+        if types[family] == "counter" and value < 0:
+            raise ValueError(f"line {lineno}: counter {sample_name!r} "
+                             f"is negative ({value})")
+        families[family]["samples"].append((sample_name, labels, value))
+
+    for name, fam in families.items():
+        if fam["type"] != "histogram":
+            continue
+        series: Dict[LabelItems, Dict] = {}
+        for sample_name, labels, value in fam["samples"]:
+            base = tuple(sorted((k, v) for k, v in labels.items()
+                                if k != "le"))
+            s = series.setdefault(base, {"buckets": [], "sum": None,
+                                         "count": None})
+            if sample_name == name + "_bucket":
+                if "le" not in labels:
+                    raise ValueError(f"{name}_bucket missing le label")
+                s["buckets"].append((labels["le"], value))
+            elif sample_name == name + "_sum":
+                s["sum"] = value
+            elif sample_name == name + "_count":
+                s["count"] = value
+        for base, s in series.items():
+            if s["sum"] is None or s["count"] is None:
+                raise ValueError(f"histogram {name}{dict(base)} missing "
+                                 f"_sum or _count")
+            bounds = [float(le) for le, _ in s["buckets"]]
+            if not bounds or bounds != sorted(bounds):
+                raise ValueError(f"histogram {name}{dict(base)} buckets "
+                                 f"out of order: {bounds}")
+            counts = [c for _, c in s["buckets"]]
+            if any(b > a for b, a in zip(counts, counts[1:])):
+                raise ValueError(f"histogram {name}{dict(base)} bucket "
+                                 f"counts not cumulative: {counts}")
+            if s["buckets"][-1][0] != "+Inf":
+                raise ValueError(f"histogram {name}{dict(base)} missing "
+                                 f"+Inf bucket")
+            if counts[-1] != s["count"]:
+                raise ValueError(f"histogram {name}{dict(base)} +Inf "
+                                 f"bucket {counts[-1]} != _count "
+                                 f"{s['count']}")
+    return families
 
 
 #: the process-default registry every instrumented module targets

@@ -59,6 +59,24 @@ _STACK: contextvars.ContextVar[tuple] = contextvars.ContextVar(
     "repro_trace_stack", default=())
 
 
+#: registered span sinks — callables fed every completed span event while
+#: a tracer is installed (the flight recorder mirrors spans this way);
+#: sinks must be cheap and never raise
+_SPAN_SINKS: List = []
+
+
+def add_span_sink(fn) -> None:
+    """Register a callback receiving every completed span's event dict.
+    Idempotent per callable; only fires while a tracer is installed."""
+    if fn not in _SPAN_SINKS:
+        _SPAN_SINKS.append(fn)
+
+
+def remove_span_sink(fn) -> None:
+    if fn in _SPAN_SINKS:
+        _SPAN_SINKS.remove(fn)
+
+
 class Tracer:
     """Collects completed spans as Chrome-trace ``X`` (complete) events."""
 
@@ -82,11 +100,21 @@ class Tracer:
         }
         with self._lock:
             self._events.append(ev)
+        for sink in _SPAN_SINKS:
+            sink(ev)
 
     @property
     def events(self) -> List[Dict]:
         with self._lock:
             return list(self._events)
+
+    def drain(self) -> List[Dict]:
+        """Pop and return every recorded span (the HTTP ``/trace?drain=1``
+        path — a poller that exports incrementally without holding the
+        whole run in tracer memory)."""
+        with self._lock:
+            evs, self._events = self._events, []
+            return evs
 
     def payload(self) -> Dict:
         """The exported JSON object (Chrome-trace "JSON Object Format")."""

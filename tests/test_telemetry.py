@@ -1,6 +1,7 @@
 """repro.telemetry: span schema/nesting, Perfetto export, registry
-thread-safety, legacy-counter parity, and the observational contract
-(artifact bytes identical with telemetry on or off)."""
+thread-safety, legacy-counter parity, the flight recorder, strict
+Prometheus-text conformance, and the observational contract (artifact
+bytes identical with telemetry on or off)."""
 
 import json
 import threading
@@ -20,8 +21,10 @@ from repro.experiments.spec import (DatasetSpec, EpsilonSpec, JobSpec,
                                     SweepSpec)
 from repro.service.api import AdvisorService, ProbeRequest
 from repro.service.queue import AdmissionQueue
-from repro.telemetry import MetricsRegistry, metrics, trace
+from repro.telemetry import RECORDER, MetricsRegistry, metrics, trace
 from repro.telemetry import __main__ as telemetry_cli
+from repro.telemetry.metrics import parse_prometheus_text
+from repro.telemetry.recorder import FlightRecorder
 
 KEY = jax.random.PRNGKey(0)
 
@@ -194,6 +197,162 @@ def test_registry_kinds_labels_and_exposition():
 
 
 # ---------------------------------------------------------------------------
+# Prometheus text-format conformance (the strict parser is the oracle)
+# ---------------------------------------------------------------------------
+
+def test_render_prometheus_roundtrips_through_strict_parser():
+    """What render_prometheus emits, a conformant scraper can read back:
+    TYPE/HELP headers per family, escaped label values round-trip, and
+    histogram families satisfy the cumulative/+Inf/_sum/_count
+    invariants."""
+    reg = MetricsRegistry()
+    c = reg.counter("jobs_total", help='finished jobs ("stored")',
+                    labels={"status": 'we"ird\\path\nx'})
+    c.inc(7)
+    reg.gauge("depth_now", help="current depth").set(2.5)
+    h = reg.histogram("lat_seconds", help="latency",
+                      buckets=(0.01, 0.1, 1.0), labels={"tier": "a"})
+    for v in (0.005, 0.05, 0.5, 5.0):
+        h.observe(v)
+    text = reg.render_prometheus()
+    fams = parse_prometheus_text(text)
+    assert fams["jobs_total"]["type"] == "counter"
+    assert fams["jobs_total"]["help"].startswith("finished jobs")
+    name, labels, value = fams["jobs_total"]["samples"][0]
+    assert labels == {"status": 'we"ird\\path\nx'}    # escaping round-trips
+    assert value == 7
+    assert fams["depth_now"]["samples"][0][2] == 2.5
+    hist = fams["lat_seconds"]
+    assert hist["type"] == "histogram"
+    by_name = {}
+    for n, ls, v in hist["samples"]:
+        by_name.setdefault(n, []).append((ls, v))
+    assert [v for ls, v in by_name["lat_seconds_bucket"]] == [1, 2, 3, 4]
+    assert by_name["lat_seconds_bucket"][-1][0]["le"] == "+Inf"
+    assert by_name["lat_seconds_count"][0][1] == 4
+    assert by_name["lat_seconds_sum"][0][1] == pytest.approx(5.555)
+
+
+def test_metric_and_label_name_validation():
+    reg = MetricsRegistry()
+    with pytest.raises(ValueError):
+        reg.counter("bad name")
+    with pytest.raises(ValueError):
+        reg.counter("2starts_with_digit")
+    with pytest.raises(ValueError):
+        reg.counter("ok_total", labels={"bad-label": "v"})
+    reg.counter("rule:recorded_total")          # colons are legal in names
+
+
+@pytest.mark.parametrize("bad, msg", [
+    ("x_total 3", "newline"),                              # no trailing \n
+    ("orphan_metric 1\n", "no preceding # TYPE"),
+    ("# TYPE a counter\na 1\n# TYPE a counter\n", "duplicate TYPE"),
+    ("# TYPE a counter\na -2\n", "negative"),
+    ("# TYPE a wat\n", "unknown type"),
+    ("# TYPE a counter\na{l=\"v\" 1\n", "malformed"),
+    # histogram invariants
+    ("# TYPE h histogram\n"
+     'h_bucket{le="1.0"} 2\nh_bucket{le="+Inf"} 3\nh_sum 1\n',
+     "missing _sum or _count"),
+    ("# TYPE h histogram\n"
+     'h_bucket{le="1.0"} 5\nh_bucket{le="+Inf"} 3\nh_sum 1\nh_count 3\n',
+     "not cumulative"),
+    ("# TYPE h histogram\n"
+     'h_bucket{le="1.0"} 2\nh_sum 1\nh_count 2\n', r"\+Inf"),
+    ("# TYPE h histogram\n"
+     'h_bucket{le="1.0"} 2\nh_bucket{le="+Inf"} 3\nh_sum 1\nh_count 9\n',
+     "!= _count"),
+])
+def test_parser_rejects_nonconformant_text(bad, msg):
+    with pytest.raises(ValueError, match=msg):
+        parse_prometheus_text(bad)
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+
+def test_flight_recorder_ring_seq_and_cursor():
+    rec = FlightRecorder(max_events=4, max_spans=2)
+    for i in range(7):
+        rec.publish("probe", i=i)
+    snap = rec.snapshot()
+    assert snap["seq"] == 7 and snap["published"] == 7
+    # bounded ring: only the newest 4 events are held, oldest first
+    assert [e["i"] for e in snap["events"]] == [3, 4, 5, 6]
+    # cursor: only events strictly newer than `since`
+    tail = rec.snapshot(since=5)
+    assert [e["i"] for e in tail["events"]] == [5, 6]
+    # limit keeps the newest
+    lim = rec.snapshot(limit=2)
+    assert [e["i"] for e in lim["events"]] == [5, 6]
+    rec.clear()
+    assert rec.snapshot()["events"] == []
+    rec.publish("after_clear")
+    assert rec.snapshot()["seq"] == 8        # seq never replays
+
+
+def test_recorder_mirrors_spans_only_while_tracing():
+    """The span sink feeds RECORDER only while a tracer is installed —
+    with tracing off the span ring stays untouched."""
+    seq0 = RECORDER.snapshot()["seq"]
+    with trace.span("untraced"):
+        pass
+    assert RECORDER.snapshot(since=seq0)["spans"] == []
+    trace.start()
+    with trace.span("traced_probe", x=1):
+        pass
+    trace.stop()
+    spans = RECORDER.snapshot(since=seq0)["spans"]
+    assert [s["name"] for s in spans] == ["traced_probe"]
+    assert spans[0]["args"]["x"] == 1
+
+
+def test_run_sweep_publishes_flight_events(tmp_path):
+    """A computed sweep leaves its progress trail in the recorder:
+    sweep_started -> job_started -> job_stored (per job) -> sweep_stored,
+    plus the engine's grid pad-waste event; a cache hit publishes
+    nothing."""
+    spec = tiny_spec("tel_flight", jobs=(JobSpec("minibatch", "d0"),
+                                         JobSpec("hogwild", "d0")))
+    seq0 = RECORDER.snapshot()["seq"]
+    runner.run_sweep(spec, cache_dir=str(tmp_path / "c"))
+    evs = RECORDER.snapshot(since=seq0)["events"]
+    kinds = [e["kind"] for e in evs]
+    assert kinds[0] == "sweep_started"
+    assert kinds[-1] == "sweep_stored"
+    assert kinds.count("job_started") == 2
+    assert kinds.count("job_stored") == 2
+    assert "grid" in kinds
+    started = next(e for e in evs if e["kind"] == "sweep_started")
+    assert started["sweep"] == "tel_flight" and started["jobs"] == 2
+    stored = [e for e in evs if e["kind"] == "job_stored"]
+    assert {e["job"] for e in stored} == \
+        {"minibatch:d0", "hogwild:d0"} or all("job" in e for e in stored)
+    assert all(e["status"] == "ok" and e["healthy"] for e in stored)
+    # cache hit: nothing executes, nothing is published
+    seq1 = RECORDER.snapshot()["seq"]
+    runner.run_sweep(spec, cache_dir=str(tmp_path / "c"))
+    assert RECORDER.snapshot(since=seq1)["events"] == []
+
+
+def test_race_publishes_psum_event():
+    from repro.distributed import hogwild_shards
+
+    ds = synth.make_higgs_like(KEY, n=96, d=8)
+    tr, te = ds.split(key=KEY)
+    seq0 = RECORDER.snapshot()["seq"]
+    r = hogwild_shards.run_hogwild_sharded(tr, te, m=4, iters=80,
+                                           gamma=0.05, eval_every=40)
+    races = [e for e in RECORDER.snapshot(since=seq0)["events"]
+             if e["kind"] == "race"]
+    assert len(races) == 1
+    assert races[0]["psum_rounds"] == r["psum_rounds"]
+    assert races[0]["m"] == 4 and races[0]["faulted"] is False
+
+
+# ---------------------------------------------------------------------------
 # legacy counter parity (engine.JIT_CALLS / runner.SWEEP_COMPUTES aliases)
 # ---------------------------------------------------------------------------
 
@@ -321,6 +480,34 @@ def test_queue_high_water_and_shed():
         q.release()
     assert q.stats()["in_service"] == 0
     assert q.stats()["high_water"] == 3
+
+
+def test_queue_wait_histogram_and_stats_reset():
+    """try_admit() returns the admission stamp; handing it back through
+    release(admitted_at=...) observes repro_service_queue_wait_seconds,
+    and stats(reset=True) re-arms high_water to current occupancy so
+    scrapers see per-window peaks instead of lifetime ones."""
+    h = metrics.REGISTRY.histogram("repro_service_queue_wait_seconds")
+    n0 = h.count
+    q = AdmissionQueue(depth=2)
+    stamp = q.try_admit()
+    assert isinstance(stamp, float)
+    q.release(admitted_at=stamp)
+    assert h.count - n0 == 1
+    # release without a stamp (legacy callers) must not observe
+    assert q.try_admit()
+    q.release()
+    assert h.count - n0 == 1
+
+    # windowed high-water: two in service, one released -> lifetime peak 2
+    s1 = q.try_admit()
+    s2 = q.try_admit()
+    q.release(admitted_at=s2)
+    st = q.stats(reset=True)
+    assert st["high_water"] == 2            # pre-reset view is returned
+    assert q.stats()["high_water"] == 1     # re-armed to current occupancy
+    q.release(admitted_at=s1)
+    assert h.count - n0 == 3
 
 
 def test_psum_round_accounting():
